@@ -1,0 +1,42 @@
+"""FedAuto server-side overhead: per-round cost of Module 2's QP solve and
+of the β-weighted aggregation (Eq. 7) as the participant count / model size
+grows — the paper's plug-and-play claim is that this overhead is negligible
+next to local training."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate_pytrees, fedauto_weights
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+    # QP solve cost vs participants / classes
+    for J, C in [(12, 10), (22, 100)] + ([] if quick else [(52, 1000)]):
+        alpha = rng.dirichlet(np.ones(C) * 0.5, size=J)
+        ag = rng.dirichlet(np.ones(C))
+        active = np.ones(J, bool)
+        fedauto_weights(alpha, ag, active, 0)           # compile
+        t0 = time.time()
+        for _ in range(5):
+            beta = fedauto_weights(alpha, ag, active, 0)
+        us = (time.time() - t0) / 5 * 1e6
+        rows.append(f"aggregation/qp_J{J}_C{C},{us:.0f},{float(beta.sum()):.4f}")
+
+    # weighted aggregation cost vs model size
+    for P in [int(2e5)] + ([] if quick else [int(1e7)]):
+        key = jax.random.PRNGKey(0)
+        models = [{"w": jax.random.normal(jax.random.fold_in(key, i), (P,))}
+                  for i in range(22)]
+        beta = np.full(22, 1 / 22)
+        aggregate_pytrees(models, beta)
+        t0 = time.time()
+        for _ in range(5):
+            out = aggregate_pytrees(models, beta)
+        jax.block_until_ready(out)
+        us = (time.time() - t0) / 5 * 1e6
+        rows.append(f"aggregation/weighted_sum_P{P},{us:.0f},22")
+    return rows

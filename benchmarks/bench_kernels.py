@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU — correctness-path
+timing only; the compiled TPU path is the target) vs the XLA reference.
+On CPU the REFERENCE timing is the meaningful number; interpret-mode Pallas
+timing is reported for completeness, not as a perf claim."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # fedagg: 22 participants × 1M params (quick: 100k)
+    P = 100_000 if quick else 1_000_000
+    stacked = jax.random.normal(key, (22, P), jnp.float32)
+    betas = jax.nn.softmax(jax.random.normal(key, (22,)))
+    agg_ref = jax.jit(ref.fedagg)
+    us = _time(agg_ref, stacked, betas)
+    gbps = 22 * P * 4 / (us / 1e6) / 1e9
+    rows.append(f"kernels/fedagg_ref_xla,{us:.0f},{gbps:.1f}")
+
+    # flash attention reference (B=1, S=1024, H=8)
+    S = 512 if quick else 2048
+    q = jax.random.normal(key, (1, S, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, S, 2, 64), jnp.float32)
+    fa = jax.jit(lambda q_, k_, v_: ref.flash_attention(q_, k_, v_, causal=True))
+    us = _time(fa, q, k, k)
+    rows.append(f"kernels/attention_ref_xla,{us:.0f},{S}")
+
+    # decode attention reference (B=8, S=8k cache)
+    S = 2048 if quick else 8192
+    qd = jax.random.normal(key, (8, 1, 8, 64), jnp.float32)
+    kd = jax.random.normal(key, (8, S, 2, 64), jnp.float32)
+    valid = jnp.ones((S,), bool)
+    da = jax.jit(lambda q_, k_, v_, m: ref.decode_attention(q_, k_, v_, m,
+                                                            scale=0.125))
+    us = _time(da, qd, kd, kd, valid)
+    rows.append(f"kernels/decode_attention_ref_xla,{us:.0f},{S}")
+
+    # lora matmul
+    T, D, O, R = (256, 512, 512, 8) if quick else (1024, 4096, 4096, 8)
+    x = jax.random.normal(key, (T, D), jnp.float32)
+    w = jax.random.normal(key, (D, O), jnp.float32)
+    a = jax.random.normal(key, (D, R), jnp.float32)
+    b = jax.random.normal(key, (R, O), jnp.float32)
+    lm = jax.jit(lambda *t: ref.lora_matmul(*t, 2.0))
+    us = _time(lm, x, w, a, b)
+    rows.append(f"kernels/lora_matmul_ref_xla,{us:.0f},{T * D * O * 2 / (us / 1e6) / 1e9:.1f}")
+    return rows

@@ -1,0 +1,17 @@
+"""Fig. 5: FedAuto (aggregation-only) vs physical-layer resource allocation
+(ResourceOpt-1 joint / ResourceOpt-2 per-standard) under transient failures."""
+from benchmarks.common import make_problem, run_strategies
+
+
+def run(quick: bool = True):
+    rounds = 30 if quick else 200
+    rows = []
+    for label, ropt, strat in [
+        ("resourceopt1", "joint", "fedavg"),
+        ("resourceopt2", "per_standard", "fedavg"),
+        ("fedauto_no_ropt", None, "fedauto"),
+    ]:
+        runner = make_problem(non_iid=True, failure_mode="transient",
+                              quick=quick, resource_opt=ropt)
+        rows += run_strategies(runner, [strat], rounds, f"fig5/{label}")
+    return rows

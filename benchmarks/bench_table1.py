@@ -1,0 +1,21 @@
+"""Table 1: testing accuracy under full-parameter FFT, full participation,
+i.i.d. data × {transient, intermittent, mixed} failures."""
+from benchmarks.common import make_problem, run_strategies
+
+QUICK_STRATS = ["fedavg", "fedauto"]
+FULL_STRATS = ["centralized_public", "fedavg", "fedprox", "scaffold",
+               "fedlaw", "tf_aggregation", "fedawe", "fedauto"]
+
+
+def run(quick: bool = True):
+    rows = []
+    rounds = 30 if quick else 200
+    strats = QUICK_STRATS if quick else FULL_STRATS
+    for mode in (["mixed"] if quick else ["transient", "intermittent", "mixed"]):
+        runner = make_problem(non_iid=False, failure_mode=mode, quick=quick)
+        rows += run_strategies(runner, strats, rounds, f"table1/iid/{mode}")
+        # the FedAvg(Ideal) upper bound: same problem, no failures
+        ideal = make_problem(non_iid=False, failure_mode="none", quick=quick)
+        rows += run_strategies(ideal, ["fedavg"], rounds,
+                               f"table1/iid/{mode}/ideal")
+    return rows

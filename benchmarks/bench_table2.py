@@ -1,0 +1,20 @@
+"""Table 2: full-parameter FFT, full participation, NON-iid data ×
+failure modes — the paper's headline comparison."""
+from benchmarks.common import make_problem, run_strategies
+
+QUICK_STRATS = ["centralized_public", "fedavg", "fedprox", "fedawe", "fedauto"]
+FULL_STRATS = ["centralized_public", "fedavg", "fedprox", "scaffold",
+               "fedlaw", "tf_aggregation", "fedawe", "fedauto"]
+
+
+def run(quick: bool = True):
+    rows = []
+    rounds = 30 if quick else 200
+    strats = QUICK_STRATS if quick else FULL_STRATS
+    for mode in (["mixed"] if quick else ["transient", "intermittent", "mixed"]):
+        runner = make_problem(non_iid=True, failure_mode=mode, quick=quick)
+        rows += run_strategies(runner, strats, rounds, f"table2/noniid/{mode}")
+        ideal = make_problem(non_iid=True, failure_mode="none", quick=quick)
+        rows += run_strategies(ideal, ["fedavg"], rounds,
+                               f"table2/noniid/{mode}/ideal")
+    return rows

@@ -1,0 +1,13 @@
+"""Table 3: partial participation (K = N/2), mixed failures, non-iid."""
+from benchmarks.common import make_problem, run_strategies
+
+
+def run(quick: bool = True):
+    rounds = 30 if quick else 200
+    strats = (["fedavg", "fedauto"] if quick else
+              ["centralized_public", "fedavg", "fedprox", "scaffold",
+               "fedlaw", "tf_aggregation", "fedawe", "fedauto"])
+    n = 8 if quick else 20
+    runner = make_problem(non_iid=True, failure_mode="mixed", quick=quick,
+                          k_selected=n // 2)
+    return run_strategies(runner, strats, rounds, "table3/partial")

@@ -1,0 +1,13 @@
+"""Table 4: partial-parameter fine-tuning (LoRA on the ViT attention
+projections), mixed failures, non-iid."""
+from benchmarks.common import make_problem, run_strategies
+
+
+def run(quick: bool = True):
+    rounds = 20 if quick else 150
+    strats = (["fedavg", "fedex_lora", "fedauto"] if quick else
+              ["centralized_public", "fedavg", "fedprox", "scaffold",
+               "fedlaw", "fedawe", "fedex_lora", "fedauto"])
+    runner = make_problem(non_iid=True, failure_mode="mixed", quick=quick,
+                          model="vit")
+    return run_strategies(runner, strats, rounds, "table4/lora")

@@ -1,0 +1,77 @@
+"""Shared benchmark scaffolding.
+
+Every paper table/figure gets a module with ``run(quick: bool) -> list of
+CSV rows``: ``name,us_per_call,derived``. ``us_per_call`` is wall time per
+FFT round (or per kernel call); ``derived`` is the table's metric (accuracy).
+Quick mode shrinks the problem so ``python -m benchmarks.run`` finishes on
+CPU; ``--full`` approaches the paper's setting.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.strategies import STRATEGIES
+from repro.data.synthetic import fft_split, make_dataset, train_test_split
+from repro.fl.lora import LoRAConfig
+from repro.fl.partition import partition
+from repro.fl.runtime import FFTConfig, FFTRunner
+from repro.models.vision import make_model
+
+
+def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
+                 model: str = "cnn", k_selected: Optional[int] = None,
+                 resource_opt: Optional[str] = None, seed: int = 0):
+    n_clients = 8 if quick else 20
+    n_classes = 4 if quick else 10
+    img = 8 if quick else 16
+    n_samples = 1500 if quick else 6000
+    ds = make_dataset(n_samples, n_classes=n_classes, image_size=img,
+                      channels=1, noise=0.8, seed=seed)
+    train, test = train_test_split(ds, n_samples // 5, seed=seed + 1)
+    pub, priv = fft_split(train, public_per_class=10 if quick else 30,
+                          seed=seed)
+    mode = "group_classes" if non_iid else "iid"
+    cpg = 1 if quick else 2
+    parts, _ = partition(mode, priv.y, n_clients, n_classes,
+                         classes_per_group=cpg,
+                         group_size=2 if quick else 4, seed=seed)
+    lora_cfg = None
+    if model == "vit":
+        lora_cfg = LoRAConfig(rank=8, match=lambda p: "qkv/w" in p)
+    init_fn, apply_fn = make_model(model, n_classes, img, 1)
+    cfg = FFTConfig(
+        n_clients=n_clients,
+        k_selected=k_selected or n_clients,
+        local_steps=3 if quick else 5,
+        batch_size=16 if quick else 32,
+        lr=0.05 if model == "cnn" else 0.02,
+        failure_mode=failure_mode,
+        resource_opt=resource_opt,
+        seed=seed,
+        eval_every=10 ** 6,
+        model_bytes=0.2e6 if quick else 0.86e6,
+    )
+    runner = FFTRunner(cfg, init_fn, apply_fn, pub, parts, priv, test,
+                       lora_cfg=lora_cfg, pretrain_steps=30 if quick else 100)
+    return runner
+
+
+def run_strategies(runner, names: List[str], rounds: int,
+                   label: str, strategy_kwargs: Optional[Dict] = None) -> List[str]:
+    rows = []
+    g0 = runner.global_params
+    kw = strategy_kwargs or {}
+    for name in names:
+        runner.global_params = g0
+        runner.rng = np.random.default_rng(123)
+        strat = STRATEGIES[name](**kw.get(name, {}))
+        t0 = time.time()
+        hist = runner.run(strat, rounds=rounds)
+        dt = time.time() - t0
+        us_per_round = dt / rounds * 1e6
+        rows.append(f"{label}/{name},{us_per_round:.0f},{hist[-1]:.4f}")
+    runner.global_params = g0
+    return rows

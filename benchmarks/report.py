@@ -1,0 +1,43 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSON.
+
+    PYTHONPATH=src python -m benchmarks.report benchmarks/dryrun_results.json
+"""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2 ** 30:.2f}"
+
+
+def render(path: str) -> str:
+    rows = json.load(open(path))
+    out = []
+    out.append("| arch | shape | mesh | status | compile_s | HLO GF/dev | "
+               "HLO GB/dev | coll GB/dev | args GiB/dev | tc_ms | tm_ms | "
+               "tx_ms | dominant | a_dom | a_bound_ms | a_mfu |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']}: {r.get('reason', r.get('error', ''))[:60]} |"
+                       + " - |" * 12)
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.0f} | {r['flops_per_device'] / 1e9:.0f} | "
+            f"{r['bytes_per_device'] / 1e9:.0f} | "
+            f"{r['collective_bytes_per_device'] / 1e9:.2f} | "
+            f"{fmt_bytes(r['mem']['argument_bytes'])} | "
+            f"{r['compute_s'] * 1e3:.2f} | {r['memory_s'] * 1e3:.2f} | "
+            f"{r['collective_s'] * 1e3:.2f} | {r['dominant']} | "
+            f"{r.get('a_dominant', '-')} | "
+            f"{r.get('a_step_s', 0) * 1e3:.2f} | "
+            f"{r.get('a_mfu_bound', 0):.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1]))

@@ -1,0 +1,41 @@
+"""§Roofline report: reads the dry-run JSON (produced by
+``python -m repro.launch.dryrun --all --out benchmarks/dryrun_results.json``)
+and prints the per-(arch × shape × mesh) roofline table.
+
+The compute term uses max(HLO_FLOPs, analytic MODEL_FLOPS/device): XLA's
+cost analysis undercounts ``ragged_dot`` (MoE grouped matmuls), so the
+analytic bound keeps MoE archs honest.
+"""
+import json
+import os
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "dryrun_optimized.json")
+if not os.path.exists(DEFAULT_PATH):  # fall back to the baseline table
+    DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "dryrun_results.json")
+
+
+def run(quick: bool = True, path: str = DEFAULT_PATH):
+    if not os.path.exists(path):
+        return [f"roofline/skipped,0,no {path} (run repro.launch.dryrun --all)"]
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for r in results:
+        if r.get("status") != "ok":
+            continue
+        flops = max(r["flops_per_device"], r.get("model_flops_per_device", 0.0))
+        t_c = flops / PEAK_FLOPS
+        t_m = r["bytes_per_device"] / HBM_BW
+        t_x = r["collective_bytes_per_device"] / ICI_BW
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                  key=lambda kv: kv[1])[0]
+        total = max(t_c, t_m, t_x)
+        frac = r.get("useful_flops_frac")
+        rows.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{total * 1e6:.0f},"
+            f"dom={dom};tc={t_c:.4f};tm={t_m:.4f};tx={t_x:.4f};"
+            f"useful={frac if frac is None else round(frac, 3)}")
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. ``--full`` approaches the paper's
+scale; default quick mode finishes on CPU.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (e.g. table2,kernels)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_aggregation, bench_convergence,
+                            bench_kernels, bench_resourceopt, bench_table1,
+                            bench_table2, bench_table3, bench_table4,
+                            bench_table5, roofline)
+    benches = {
+        "kernels": bench_kernels,
+        "aggregation": bench_aggregation,
+        "convergence": bench_convergence,
+        "table1": bench_table1,
+        "table2": bench_table2,
+        "table3": bench_table3,
+        "table4": bench_table4,
+        "table5": bench_table5,
+        "resourceopt": bench_resourceopt,
+        "roofline": roofline,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, mod in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:  # noqa: BLE001
+            rows = [f"{name}/ERROR,0,{type(e).__name__}:{e}"]
+        for row in rows:
+            print(row)
+        print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""msgpack pytree checkpointing (no orbax/flax offline).
+
+Format: {"tree": nested lists/dicts with leaf descriptors, "blobs": raw
+bytes}. Dtypes/shapes round-trip exactly; jax arrays come back as numpy
+(callers re-device them). Atomic via temp-file rename.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+_LEAF = "__leaf__"
+
+
+def _pack(tree: Any, blobs: list):
+    if isinstance(tree, dict):
+        return {k: _pack(v, blobs) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [_pack(v, blobs) for v in tree]
+        return {"__tuple__": t} if isinstance(tree, tuple) else t
+    if hasattr(tree, "shape"):
+        arr = np.asarray(tree)
+        blobs.append(arr.tobytes())
+        return {_LEAF: len(blobs) - 1, "dtype": str(arr.dtype),
+                "shape": list(arr.shape)}
+    return {"__scalar__": tree}
+
+
+def _unpack(node: Any, blobs: list):
+    if isinstance(node, dict):
+        if _LEAF in node:
+            arr = np.frombuffer(blobs[node[_LEAF]], dtype=node["dtype"])
+            return arr.reshape(node["shape"]).copy()
+        if "__scalar__" in node:
+            return node["__scalar__"]
+        if "__tuple__" in node:
+            return tuple(_unpack(v, blobs) for v in node["__tuple__"])
+        return {k: _unpack(v, blobs) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_unpack(v, blobs) for v in node]
+    return node
+
+
+def save(path: str, tree: Any) -> None:
+    tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    blobs: list = []
+    packed = _pack(tree, blobs)
+    payload = msgpack.packb({"tree": packed, "blobs": blobs}, use_bin_type=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)) or ".")
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
+def load(path: str) -> Any:
+    with open(path, "rb") as f:
+        obj = msgpack.unpackb(f.read(), raw=False)
+    return _unpack(obj["tree"], obj["blobs"])

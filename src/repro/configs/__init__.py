@@ -1,0 +1,7 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    get_config,
+    get_smoke_config,
+    list_archs,
+    register,
+)

@@ -1,0 +1,17 @@
+"""The paper's primary contribution: FedAuto adaptive aggregation
+(Modules 1+2, Eq. 6-9) + every baseline strategy from §V-A5."""
+from repro.core.aggregation import (  # noqa: F401
+    aggregate_pytrees,
+    chi2,
+    effective_distribution,
+    fedauto_weights,
+    missing_classes,
+)
+from repro.core.strategies import STRATEGIES, FedAuto, RoundContext, Strategy  # noqa: F401
+from repro.core.weights_qp import (  # noqa: F401
+    chi2_effective,
+    heuristic_weights,
+    project_simplex,
+    solve_weights,
+    solve_weights_oracle,
+)

@@ -1,0 +1,87 @@
+"""FedAuto adaptive aggregation (Algorithm 2) and pytree aggregation utils.
+
+The aggregation itself (Eq. 7) is a β-weighted sum of participant parameter
+pytrees — executed leaf-wise through the ``fedagg`` kernel dispatch (Pallas on
+TPU, fused einsum elsewhere). Module 1 (compensatory training) is triggered by
+``missing_classes``; Module 2 (weight optimization) is ``fedauto_weights``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.weights_qp import solve_weights
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# weighted pytree aggregation (Eq. 5 / 7 / 10)
+# ---------------------------------------------------------------------------
+def aggregate_pytrees(trees: Sequence, betas) -> object:
+    """Σ_m β_m · tree_m over a list of identically-structured pytrees."""
+    betas = jnp.asarray(betas, jnp.float32)
+
+    def agg(*leaves):
+        stacked = jnp.stack([l.reshape(-1) for l in leaves], axis=0)
+        out = kops.fedagg(stacked, betas)
+        return out.reshape(leaves[0].shape).astype(leaves[0].dtype)
+
+    return jax.tree.map(agg, *trees)
+
+
+# ---------------------------------------------------------------------------
+# Module 1 — missing-class detection (Eq. 6 trigger)
+# ---------------------------------------------------------------------------
+def missing_classes(client_hists: np.ndarray, received: np.ndarray) -> np.ndarray:
+    """client_hists: (N, C) per-client class sample counts; received: (N,)
+    bool (selected AND connected). Returns bool (C,): classes with zero
+    samples among received client updates."""
+    if received.sum() == 0:
+        return np.ones(client_hists.shape[1], dtype=bool)
+    covered = client_hists[received].sum(axis=0) > 0
+    return ~covered
+
+
+# ---------------------------------------------------------------------------
+# Module 2 — FedAuto weights (Eq. 8 with Eq. 9 pin)
+# ---------------------------------------------------------------------------
+def fedauto_weights(alpha_rows: np.ndarray, alpha_g: np.ndarray,
+                    active: np.ndarray, server_row: int) -> np.ndarray:
+    """alpha_rows: (J, C) — row per participant (server, [compensatory],
+    clients…); active: (J,) bool. Server pinned per Eq. 9:
+    β_s = 1 / (1 + #connected non-server participants)."""
+    m = int(active.sum()) - 1              # connected participants besides server
+    beta_s = 1.0 / (1.0 + max(m, 0))
+    beta = solve_weights(jnp.asarray(alpha_rows), jnp.asarray(alpha_g),
+                         jnp.asarray(active), fixed_idx=server_row,
+                         fixed_val=jnp.float32(beta_s))
+    return np.asarray(beta)
+
+
+def fedauto_simple_average_weights(active: np.ndarray, server_row: int,
+                                   has_comp: bool) -> np.ndarray:
+    """Ablation (Appendix III-F2): Module 1 without Module 2 — Eq. (58)."""
+    J = len(active)
+    m = int(active.sum()) - 1 - (1 if has_comp else 0)  # connected clients
+    beta = np.zeros(J)
+    beta[server_row] = 1.0 / (1.0 + max(m, 0))
+    rest = 1.0 - beta[server_row]
+    others = [j for j in range(J) if j != server_row and active[j]]
+    for j in others:
+        beta[j] = rest / max(len(others), 1)
+    return beta
+
+
+# ---------------------------------------------------------------------------
+# effective class distribution diagnostics (Theorem 1 terms)
+# ---------------------------------------------------------------------------
+def effective_distribution(beta: np.ndarray, alpha_rows: np.ndarray) -> np.ndarray:
+    return beta @ alpha_rows
+
+
+def chi2(p: np.ndarray, q: np.ndarray) -> float:
+    """χ²(p‖q) = Σ (q_i − p_i)² / p_i with the paper's convention χ²_{p‖q}."""
+    return float(np.sum(np.square(q - p) / np.maximum(p, 1e-12)))

@@ -1,0 +1,337 @@
+"""All FFT aggregation strategies from the paper (§V-A5, Appendix III-E),
+implemented against a common interface driven by ``repro.fl.runtime``.
+
+Participant indexing convention: row 0 = server, rows 1..N = clients.
+``RoundContext.connected[i]`` is True iff client i was selected AND its
+upload survived the failure draw (1_i^r = 1) — the per-round view of Prop. 1.
+
+Implemented verbatim (equation refs in each class):
+  FedAvg (footnote-2 heuristic weights), FedProx (43), SCAFFOLD (44–45),
+  FedLAW (46–47), TF-Aggregation (48–50), FedAWE (51), FedEx-LoRA (52–53),
+  FedAuto (Alg. 2: Eq. 6–9), plus the two FedAuto ablations (App. III-F).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (aggregate_pytrees, fedauto_simple_average_weights,
+                                    fedauto_weights, missing_classes)
+from repro.core.weights_qp import heuristic_weights
+
+
+@dataclasses.dataclass
+class RoundContext:
+    rnd: int
+    global_params: Any
+    server_model: Any                     # w_s^{r,E}
+    client_models: Dict[int, Any]         # client id -> w_i^{r,E} (connected only)
+    selected: np.ndarray                  # (N,) bool
+    connected: np.ndarray                 # (N,) bool (selected & survived)
+    p: np.ndarray                         # (N+1,) dataset-size weights, [0]=server
+    client_hists: np.ndarray              # (N, C) label histograms
+    server_hist: np.ndarray               # (C,)
+    global_hist: np.ndarray               # (C,)
+    full_participation: bool
+    eps_estimates: Optional[np.ndarray] = None   # TF-Aggregation inputs
+    runner: Any = None                    # back-reference (compensatory training)
+
+
+class Strategy:
+    name = "base"
+
+    def init_state(self, runner) -> None:
+        pass
+
+    # hooks used by the runner's local update ------------------------------
+    def prox_mu(self) -> float:
+        return 0.0
+
+    def correction(self, client_id: int, runner):
+        return None                       # SCAFFOLD overrides
+
+    def post_local(self, client_id: int, rnd: int, local_model, ctx_global,
+                   runner):
+        return local_model                # FedAWE overrides
+
+    # aggregation -----------------------------------------------------------
+    def aggregate(self, ctx: RoundContext):
+        raise NotImplementedError
+
+    def _mask(self, ctx: RoundContext) -> np.ndarray:
+        """(N+1,) active mask with the server at row 0."""
+        return np.concatenate([[True], ctx.connected])
+
+
+class FedAvg(Strategy):
+    """Footnote-2 heuristic weights under failures; Remark-1 weights when
+    the network is ideal."""
+    name = "fedavg"
+
+    def aggregate(self, ctx: RoundContext):
+        beta = heuristic_weights(ctx.p, self._mask(ctx), server_idx=0,
+                                 full_participation=ctx.full_participation)
+        models = [ctx.server_model] + [ctx.client_models[i]
+                                       for i in range(len(ctx.connected))
+                                       if ctx.connected[i]]
+        weights = [beta[0]] + [beta[i + 1] for i in range(len(ctx.connected))
+                               if ctx.connected[i]]
+        return aggregate_pytrees(models, np.array(weights))
+
+
+class FedProx(FedAvg):
+    """FedAvg + proximal term μ/2·‖w − w̄‖² in the local objective (Eq. 43)."""
+    name = "fedprox"
+
+    def __init__(self, mu: float = 0.01):
+        self.mu = mu
+
+    def prox_mu(self) -> float:
+        return self.mu
+
+
+class Scaffold(Strategy):
+    """Control variates (Eq. 44–45); client-only aggregation with γ_g = 1."""
+    name = "scaffold"
+
+    def __init__(self, global_lr: float = 1.0):
+        self.global_lr = global_lr
+
+    def init_state(self, runner) -> None:
+        zeros = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32),
+                             runner.trainable(runner.global_params))
+        self.c = zeros
+        self.c_i = {i: zeros for i in range(runner.n_clients)}
+        self._pending: Dict[int, Any] = {}
+
+    def correction(self, client_id: int, runner):
+        # gradient correction: −c_i + c
+        return jax.tree.map(lambda c, ci: c - ci, self.c, self.c_i[client_id])
+
+    def post_local(self, client_id: int, rnd: int, local_model, ctx_global,
+                   runner):
+        # c_i^+ = c_i − c + (w̄ − w_i)/(K γ_l E)   (Eq. 44b)
+        coef = 1.0 / (runner.k_selected * runner.lr(rnd) * runner.local_steps)
+        ci_new = jax.tree.map(
+            lambda ci, c, g, w: ci - c + coef * (g.astype(jnp.float32) -
+                                                 w.astype(jnp.float32)),
+            self.c_i[client_id], self.c, ctx_global, local_model)
+        self._pending[client_id] = ci_new
+        return local_model
+
+    def aggregate(self, ctx: RoundContext):
+        ids = [i for i in range(len(ctx.connected)) if ctx.connected[i]]
+        n_conn = max(len(ids), 1)
+        if ids:
+            deltas = [jax.tree.map(lambda w, g: w.astype(jnp.float32) -
+                                   g.astype(jnp.float32),
+                                   ctx.client_models[i], ctx.global_params)
+                      for i in ids]
+            mean_delta = aggregate_pytrees(deltas, np.full(len(ids), 1.0 / n_conn))
+            new_global = jax.tree.map(
+                lambda g, d: (g.astype(jnp.float32) + self.global_lr * d).astype(g.dtype),
+                ctx.global_params, mean_delta)
+        else:
+            new_global = ctx.global_params
+        # c update (Eq. 45b) over clients that actually delivered
+        N = len(ctx.connected)
+        for i in ids:
+            if i in self._pending:
+                diff = jax.tree.map(lambda new, old: new - old,
+                                    self._pending[i], self.c_i[i])
+                self.c = jax.tree.map(lambda c, d: c + d / N, self.c, diff)
+                self.c_i[i] = self._pending[i]
+        self._pending.clear()
+        return new_global
+
+
+class FedLAW(Strategy):
+    """Server-side proxy-data optimization of shrinking factor ρ and
+    client aggregation weights (Eq. 46–47)."""
+    name = "fedlaw"
+
+    def __init__(self, opt_steps: int = 30, opt_lr: float = 0.05,
+                 proxy_batch: int = 64):
+        self.opt_steps = opt_steps
+        self.opt_lr = opt_lr
+        self.proxy_batch = proxy_batch
+
+    def aggregate(self, ctx: RoundContext):
+        ids = [i for i in range(len(ctx.connected)) if ctx.connected[i]]
+        if not ids:
+            return ctx.global_params
+        models = [ctx.client_models[i] for i in ids]
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *models)
+        runner = ctx.runner
+        px, py = runner.public_proxy_batch(self.proxy_batch, ctx.rnd)
+
+        def proxy_loss(opt_vars):
+            rho = jax.nn.softplus(opt_vars["rho"])
+            beta = jax.nn.softmax(opt_vars["logits"])
+            merged = jax.tree.map(
+                lambda s: jnp.einsum("m...,m->...", s.astype(jnp.float32), beta)
+                .astype(s.dtype), stacked)
+            merged = jax.tree.map(lambda w: (rho * w.astype(jnp.float32)).astype(w.dtype),
+                                  merged)
+            return runner.loss_on(merged, px, py)
+
+        opt_vars = {"rho": jnp.asarray(0.5413, jnp.float32),   # softplus⁻¹(1)
+                    "logits": jnp.zeros(len(ids), jnp.float32)}
+        for _ in range(self.opt_steps):
+            g = jax.grad(proxy_loss)(opt_vars)
+            opt_vars = jax.tree.map(lambda v, gr: v - self.opt_lr * gr, opt_vars, g)
+        rho = float(jax.nn.softplus(opt_vars["rho"]))
+        beta = np.asarray(jax.nn.softmax(opt_vars["logits"]))
+        merged = aggregate_pytrees(models, beta)
+        return jax.tree.map(lambda w: (rho * w.astype(jnp.float32)).astype(w.dtype),
+                            merged)
+
+
+class TFAggregation(Strategy):
+    """Transient-failure-aware aggregation (Eq. 48–50), implemented literally
+    — including its non-normalized weights, which is what destabilizes it in
+    the paper's Tables 1–3."""
+    name = "tf_aggregation"
+
+    def __init__(self, eps_threshold: float = 0.9):
+        self.eps_threshold = eps_threshold
+        self.s: Optional[np.ndarray] = None
+
+    def selection_probs(self, ctx: RoundContext) -> np.ndarray:
+        eps = np.clip(ctx.eps_estimates, 0.0, 0.999)
+        p = ctx.p[1:]
+        ok = eps <= self.eps_threshold
+        s = np.where(ok, np.sqrt(p / np.maximum(1.0 - eps, 1e-6)), 0.0)
+        tot = s.sum()
+        return s / tot if tot > 0 else np.full_like(s, 1.0 / len(s))
+
+    def aggregate(self, ctx: RoundContext):
+        if self.s is None:
+            self.s = self.selection_probs(ctx)
+        eps = np.clip(ctx.eps_estimates, 0.0, 0.999)
+        K = ctx.selected.sum()
+        models, weights = [], []
+        for i in range(len(ctx.connected)):
+            if ctx.connected[i] and self.s[i] > 0:
+                w = ctx.p[i + 1] / (self.s[i] * (1.0 - eps[i])) / max(K, 1)
+                models.append(ctx.client_models[i])
+                weights.append(w)
+        if not models:
+            return ctx.global_params
+        return aggregate_pytrees(models, np.array(weights))
+
+
+class FedAWE(Strategy):
+    """Adaptive weighting via missed-round-scaled local extrapolation (Eq. 51)."""
+    name = "fedawe"
+
+    def __init__(self, gamma_g: float = 0.001):
+        self.gamma_g = gamma_g
+
+    def init_state(self, runner) -> None:
+        self.tau = np.zeros(runner.n_clients, dtype=int)
+
+    def post_local(self, client_id: int, rnd: int, local_model, ctx_global,
+                   runner):
+        gap = float(rnd - self.tau[client_id])
+        adj = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32) - self.gamma_g * gap *
+                          (g.astype(jnp.float32) - w.astype(jnp.float32))).astype(w.dtype),
+            local_model, ctx_global)
+        return adj
+
+    def aggregate(self, ctx: RoundContext):
+        for i in range(len(ctx.connected)):
+            if ctx.connected[i]:
+                self.tau[i] = ctx.rnd
+        return FedAvg.aggregate(self, ctx)
+
+
+class FedExLoRA(Strategy):
+    """Exact-aggregation residual for LoRA FFT (Eq. 52–53). Requires the
+    runner to be in LoRA mode; aggregates adapters by plain averaging and
+    folds the rank-mixing residual into the frozen base weights."""
+    name = "fedex_lora"
+
+    def aggregate(self, ctx: RoundContext):
+        runner = ctx.runner
+        ids = [i for i in range(len(ctx.connected)) if ctx.connected[i]]
+        if not ids:
+            return ctx.global_params
+        adapters = [ctx.client_models[i] for i in ids]
+        n = len(ids)
+        avg = aggregate_pytrees(adapters, np.full(n, 1.0 / n))
+        # residual per adapted layer: mean(A_i B_i) − Ā B̄
+        scaling = runner.lora_cfg.scaling
+        for path in avg:
+            mean_prod = sum(jnp.matmul(a[path]["a"], a[path]["b"])
+                            for a in adapters) / n
+            resid = (mean_prod - avg[path]["a"] @ avg[path]["b"]) * scaling
+            runner.fold_into_base(path, resid)
+        return avg
+
+
+class FedAuto(Strategy):
+    """The paper's method (Algorithm 2): Module 1 compensatory training
+    (Eq. 6–7) + Module 2 weight optimization (Eq. 8) with the server pin
+    (Eq. 9). ``use_module1``/``use_module2`` expose the Table-5 ablations."""
+    name = "fedauto"
+
+    def __init__(self, use_module1: bool = True, use_module2: bool = True):
+        self.use_module1 = use_module1
+        self.use_module2 = use_module2
+
+    def aggregate(self, ctx: RoundContext):
+        runner = ctx.runner
+        N, C = ctx.client_hists.shape
+        miss = missing_classes(ctx.client_hists, ctx.connected)
+        comp_model, comp_hist = None, None
+        if self.use_module1 and miss.any():
+            comp_model, comp_hist = runner.train_compensatory(miss, ctx.rnd)
+
+        def dist(h):
+            tot = h.sum()
+            return h / tot if tot > 0 else np.full_like(h, 1.0 / len(h), dtype=float)
+
+        rows = [dist(ctx.server_hist.astype(float))]
+        models = [ctx.server_model]
+        if comp_model is not None:
+            rows.append(dist(comp_hist.astype(float)))
+            models.append(comp_model)
+        ids = [i for i in range(N) if ctx.connected[i]]
+        for i in ids:
+            rows.append(dist(ctx.client_hists[i].astype(float)))
+            models.append(ctx.client_models[i])
+        alpha_rows = np.stack(rows)
+        alpha_g = dist(ctx.global_hist.astype(float))
+        active = np.ones(len(rows), dtype=bool)
+        if self.use_module2:
+            beta = fedauto_weights(alpha_rows, alpha_g, active, server_row=0)
+        else:
+            beta = fedauto_simple_average_weights(active, 0, comp_model is not None)
+        return aggregate_pytrees(models, beta)
+
+
+class CentralizedPublic(Strategy):
+    """Server-only training on the public dataset (no client knowledge)."""
+    name = "centralized_public"
+
+    def aggregate(self, ctx: RoundContext):
+        return ctx.server_model
+
+
+STRATEGIES = {
+    "fedavg": FedAvg,
+    "fedprox": FedProx,
+    "scaffold": Scaffold,
+    "fedlaw": FedLAW,
+    "tf_aggregation": TFAggregation,
+    "fedawe": FedAWE,
+    "fedex_lora": FedExLoRA,
+    "fedauto": FedAuto,
+    "centralized_public": CentralizedPublic,
+}

@@ -1,0 +1,158 @@
+"""Module 2 — aggregation-weight optimization (paper Eq. 8–9).
+
+    min_β  Σ_c ( α_{g,c} − Σ_j β_j α_{j,c} )² / α_{g,c}
+    s.t.   β ≥ 0,  Σ_j β_j = 1,  β_s pinned to 1/(1+m)  (Eq. 9),
+           β_j = 0 for unselected / disconnected participants (Eq. 10c).
+
+This is a simplex-constrained weighted least squares (convex QP). The paper
+solves it with CVX/Gurobi; offline we use FISTA (accelerated projected
+gradient) on the scaled simplex — jittable, deterministic, and validated in
+tests against a float64 long-horizon PGD oracle (``solve_weights_oracle``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BIG = 1e9
+
+
+def project_simplex(v: jax.Array, mask: jax.Array, total: jax.Array) -> jax.Array:
+    """Euclidean projection of v onto {x >= 0, sum(x) = total, x[~mask] = 0}."""
+    n = v.shape[0]
+    vm = jnp.where(mask, v, -_BIG)
+    vs = jnp.sort(vm)[::-1]
+    css = jnp.cumsum(vs)
+    j = jnp.arange(1, n + 1, dtype=v.dtype)
+    cond = (vs - (css - total) / j > 0) & (vs > -_BIG / 2)
+    rho = jnp.max(jnp.where(cond, jnp.arange(1, n + 1), 0))
+    rho = jnp.maximum(rho, 1)
+    tau = (css[rho - 1] - total) / rho.astype(v.dtype)
+    return jnp.where(mask, jnp.clip(v - tau, 0.0, None), 0.0)
+
+
+def chi2_effective(beta: jax.Array, alpha: jax.Array, alpha_g: jax.Array) -> jax.Array:
+    """χ²(α_g ‖ ᾰ) with ᾰ_c = Σ_j β_j α_{j,c} — the paper's objective (8a)."""
+    eff = beta @ alpha
+    return jnp.sum(jnp.square(alpha_g - eff) / jnp.maximum(alpha_g, 1e-12))
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def solve_weights(alpha: jax.Array, alpha_g: jax.Array, mask: jax.Array,
+                  fixed_idx: Optional[int] = None,
+                  fixed_val: Optional[jax.Array] = None,
+                  iters: int = 400) -> jax.Array:
+    """FISTA for Eq. (8).
+
+    alpha: (J, C) per-participant class distributions (rows sum to 1).
+    alpha_g: (C,) global class distribution.
+    mask: (J,) bool — participant present this round (Eq. 10c).
+    fixed_idx/fixed_val: pin β[fixed_idx] (the server, Eq. 9). The remaining
+    mass 1 − fixed_val is distributed over the other active participants.
+    Returns β (J,) satisfying all constraints exactly.
+    """
+    J, C = alpha.shape
+    alpha = alpha.astype(jnp.float32)
+    alpha_g = alpha_g.astype(jnp.float32)
+    dinv = 1.0 / jnp.maximum(alpha_g, 1e-12)
+
+    if fixed_idx is not None:
+        fmask = jnp.arange(J) == fixed_idx
+        fixed_vec = jnp.where(fmask, fixed_val, 0.0).astype(jnp.float32)
+        free_mask = mask & (~fmask)
+        total = 1.0 - fixed_val
+    else:
+        fixed_vec = jnp.zeros((J,), jnp.float32)
+        free_mask = mask
+        total = jnp.asarray(1.0, jnp.float32)
+
+    resid0 = alpha_g - fixed_vec @ alpha       # target for the free part
+
+    def grad(z):
+        eff = z @ alpha
+        return 2.0 * ((eff - resid0) * dinv) @ alpha.T
+
+    # Lipschitz bound: 2 * ||A D^-1 A^T||_F  (A = alpha)
+    M = (alpha * dinv[None, :]) @ alpha.T
+    L = 2.0 * jnp.sqrt(jnp.sum(jnp.square(M))) + 1e-6
+    step = 1.0 / L
+
+    n_active = jnp.maximum(jnp.sum(free_mask.astype(jnp.float32)), 1.0)
+    z0 = jnp.where(free_mask, total / n_active, 0.0)
+
+    def body(carry, _):
+        z, y, t = carry
+        z_new = project_simplex(y - step * grad(y), free_mask, total)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_new = z_new + ((t - 1.0) / t_new) * (z_new - z)
+        return (z_new, y_new, t_new), None
+
+    (z, _, _), _ = jax.lax.scan(body, (z0, z0, jnp.asarray(1.0, jnp.float32)),
+                                None, length=iters)
+    return z + fixed_vec
+
+
+def solve_weights_oracle(alpha: np.ndarray, alpha_g: np.ndarray,
+                         mask: np.ndarray, fixed_idx: Optional[int] = None,
+                         fixed_val: Optional[float] = None,
+                         iters: int = 200_000) -> np.ndarray:
+    """Float64 long-horizon PGD — the test oracle for solve_weights."""
+    J, C = alpha.shape
+    alpha = alpha.astype(np.float64)
+    alpha_g = alpha_g.astype(np.float64)
+    dinv = 1.0 / np.maximum(alpha_g, 1e-12)
+    if fixed_idx is not None:
+        fmask = np.arange(J) == fixed_idx
+        fixed_vec = np.where(fmask, fixed_val, 0.0)
+        free_mask = mask & (~fmask)
+        total = 1.0 - fixed_val
+    else:
+        fixed_vec = np.zeros(J)
+        free_mask = mask.copy()
+        total = 1.0
+    resid0 = alpha_g - fixed_vec @ alpha
+    M = (alpha * dinv[None]) @ alpha.T
+    L = 2.0 * np.linalg.norm(M, 2) + 1e-9
+    z = np.where(free_mask, total / max(free_mask.sum(), 1), 0.0)
+
+    def proj(v):
+        vm = np.where(free_mask, v, -np.inf)
+        vs = np.sort(vm)[::-1]
+        fin = np.isfinite(vs)
+        css = np.cumsum(np.where(fin, vs, 0.0))
+        j = np.arange(1, J + 1)
+        cond = fin & (vs - (css - total) / j > 0)
+        rho = int(np.max(np.where(cond, j, 0)))
+        rho = max(rho, 1)
+        tau = (css[rho - 1] - total) / rho
+        return np.where(free_mask, np.clip(v - tau, 0.0, None), 0.0)
+
+    for _ in range(iters):
+        eff = z @ alpha
+        g = 2.0 * ((eff - resid0) * dinv) @ alpha.T
+        z = proj(z - g / L)
+    return z + fixed_vec
+
+
+def heuristic_weights(p: np.ndarray, mask: np.ndarray, server_idx: int,
+                      full_participation: bool) -> np.ndarray:
+    """Footnote-2 heuristic weights used by FedAvg/FedProx under failures."""
+    J = len(p)
+    beta = np.zeros(J)
+    if full_participation:
+        denom = p[server_idx] + sum(p[j] for j in range(J)
+                                    if mask[j] and j != server_idx)
+        for j in range(J):
+            if j == server_idx or mask[j]:
+                beta[j] = p[j] / max(denom, 1e-12)
+    else:
+        m = sum(1 for j in range(J) if mask[j] and j != server_idx)
+        beta[server_idx] = p[server_idx]
+        for j in range(J):
+            if j != server_idx and mask[j]:
+                beta[j] = (1.0 - p[server_idx]) / max(m, 1)
+    return beta

@@ -1,0 +1,1 @@
+from repro.fl import failures, lora, network, parallel, partition, runtime  # noqa: F401

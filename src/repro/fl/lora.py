@@ -1,0 +1,98 @@
+"""LoRA substrate (paper §V-C: partial-parameter fine-tuning, rank 8 on the
+attention projections).
+
+Generic over any parameter pytree: 2-D weight leaves selected by a path
+predicate get (A, B) factors; ``apply_lora`` produces effective params
+``W + (α/r)·A@B`` for the forward pass (via the fused Pallas kernel when
+enabled), and only the adapters travel between server and clients — which is
+what makes FedEx-LoRA's residual (Eq. 52-53) meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 8
+    alpha: float = 16.0
+    match: Callable[[str], bool] = lambda path: path.endswith("qkv/w")
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / self.rank
+
+
+def _iter_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_paths(v, f"{prefix}{k}/")
+    else:
+        yield prefix[:-1], tree
+
+
+def lora_paths(params, cfg: LoRAConfig):
+    """2-D weights and 3-D scanned layer stacks (leading layer dim)."""
+    return [p for p, leaf in _iter_paths(params)
+            if hasattr(leaf, "ndim") and leaf.ndim in (2, 3) and cfg.match(p)]
+
+
+def lora_init(key, params, cfg: LoRAConfig) -> Dict[str, Any]:
+    """Returns {path: {"a": (…, d_in, r), "b": (…, r, d_out)}} (b zero-init).
+    Stacked (L, d_in, d_out) weights get per-layer (L, …) factors."""
+    adapters = {}
+    for i, path in enumerate(lora_paths(params, cfg)):
+        leaf = _get(params, path)
+        k = jax.random.fold_in(key, i)
+        d_in, d_out = leaf.shape[-2], leaf.shape[-1]
+        lead = leaf.shape[:-2]
+        a = (jax.random.normal(k, lead + (d_in, cfg.rank)) /
+             jnp.sqrt(d_in)).astype(jnp.float32)
+        b = jnp.zeros(lead + (cfg.rank, d_out), jnp.float32)
+        adapters[path] = {"a": a, "b": b}
+    return adapters
+
+
+def _get(tree, path):
+    node = tree
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+def _set(tree, path, value):
+    keys = path.split("/")
+    node = tree
+    for k in keys[:-1]:
+        node = node[k]
+    node[keys[-1]] = value
+
+
+def apply_lora(params, adapters: Dict[str, Any], cfg: LoRAConfig):
+    """Effective params: W_eff = W + scaling · A @ B (copy-on-write)."""
+    out = jax.tree.map(lambda x: x, params)        # shallow-structure copy
+
+    def deep(d):
+        return {k: deep(v) if isinstance(v, dict) else v for k, v in d.items()}
+
+    out = deep(params)
+    for path, ab in adapters.items():
+        w = _get(params, path)
+        delta = jnp.matmul(ab["a"], ab["b"]) * cfg.scaling   # batched for 3-D
+        _set(out, path, (w.astype(jnp.float32) + delta).astype(w.dtype))
+    return out
+
+
+def lora_matmul(x, w, ab, cfg: LoRAConfig):
+    """Fused-path forward for a single LoRA layer (kernels.ops dispatch)."""
+    return kops.lora_matmul(x, w, ab["a"], ab["b"], cfg.scaling)
+
+
+def merge_lora(params, adapters, cfg: LoRAConfig):
+    return apply_lora(params, adapters, cfg)

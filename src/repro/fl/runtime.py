@@ -1,0 +1,288 @@
+"""FFT round engine (Algorithm 1 + Algorithm 2).
+
+Drives: client selection → failure draw → parallel local SGD (clients +
+server, Eq. 2–3) → strategy aggregation (Eq. 5/7). Supports full- and
+partial-parameter (LoRA) fine-tuning, all strategies in
+``repro.core.strategies``, and the ResourceOpt network interventions.
+
+Local updates are one jitted ``lax.scan`` of E minibatch-SGD steps; client
+datasets are resampled to a common static shape so a single compiled update
+serves every participant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.strategies import RoundContext, Strategy
+from repro.data.synthetic import Dataset
+from repro.fl import failures as fail_mod
+from repro.fl import network as net_mod
+from repro.fl.lora import LoRAConfig, apply_lora, lora_init
+from repro.fl.partition import class_histogram
+
+
+@dataclasses.dataclass
+class FFTConfig:
+    n_clients: int = 20
+    k_selected: int = 20                  # K (20 = full participation)
+    local_steps: int = 5                  # E
+    batch_size: int = 32
+    lr: float = 0.05
+    lr_boundary: Optional[int] = None     # step decay at this round
+    failure_mode: str = "mixed"           # none | transient | intermittent | mixed
+    duration_max: int = 10
+    model_bytes: float = 0.86e6
+    tx_delay_s: float = 0.8
+    resource_opt: Optional[str] = None    # None | "joint" | "per_standard"
+    seed: int = 0
+    eval_every: int = 10
+    eval_batch: int = 256
+
+
+class FFTRunner:
+    """One experiment: (model, data split, network, strategy) → accuracy curve."""
+
+    def __init__(self, cfg: FFTConfig, init_fn: Callable, apply_fn: Callable,
+                 public: Dataset, client_indices: Sequence[np.ndarray],
+                 private: Dataset, test: Dataset,
+                 lora_cfg: Optional[LoRAConfig] = None,
+                 pretrain_steps: int = 0):
+        self.cfg = cfg
+        self.apply_fn = apply_fn
+        self.n_clients = cfg.n_clients
+        self.k_selected = cfg.k_selected
+        self.local_steps = cfg.local_steps
+        self.lora_cfg = lora_cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        key = jax.random.PRNGKey(cfg.seed)
+
+        self.public = public
+        self.test = test
+        self.n_classes = public.n_classes
+
+        # --- per-client data, resampled to a common static size ------------
+        sizes = [max(len(ix), 1) for ix in client_indices]
+        self.data_size = max(max(sizes), cfg.batch_size)
+        self.client_x, self.client_y = [], []
+        for ix in client_indices:
+            ix = np.asarray(ix)
+            if len(ix) == 0:
+                ix = np.array([0])
+            res = self.rng.choice(ix, self.data_size, replace=True)
+            self.client_x.append(jnp.asarray(private.x[res]))
+            self.client_y.append(jnp.asarray(private.y[res]))
+        self.client_hists = np.stack([
+            class_histogram(private.y[np.asarray(ix)], self.n_classes)
+            if len(ix) else np.zeros(self.n_classes, dtype=np.int64)
+            for ix in client_indices])
+        self.server_hist = class_histogram(public.y, self.n_classes)
+        self.global_hist = self.server_hist + self.client_hists.sum(axis=0)
+
+        pub_res = self.rng.choice(len(public.y), self.data_size, replace=True)
+        self.public_x = jnp.asarray(public.x[pub_res])
+        self.public_y = jnp.asarray(public.y[pub_res])
+        self.public_x_raw = jnp.asarray(public.x)
+        self.public_y_raw = jnp.asarray(public.y)
+
+        # p weights (Eq. 1): dataset-size proportions, index 0 = server
+        counts = np.array([len(public.y)] + [max(len(ix), 1)
+                                             for ix in client_indices], float)
+        self.p = counts / counts.sum()
+
+        # --- params ---------------------------------------------------------
+        self.base_params = init_fn(key)
+        if lora_cfg is not None:
+            self.global_params = lora_init(jax.random.fold_in(key, 1),
+                                           self.base_params, lora_cfg)
+        else:
+            self.global_params = self.base_params
+
+        # --- network + failures ----------------------------------------------
+        self.channels = net_mod.build_network(cfg.n_clients, seed=cfg.seed)
+        rate = net_mod.uplink_rate(cfg.model_bytes, cfg.tx_delay_s)
+        if cfg.resource_opt:
+            self.channels = net_mod.resource_opt(
+                self.channels, rate, per_standard=cfg.resource_opt == "per_standard",
+                seed=cfg.seed)
+        self.failures = fail_mod.make_failure_model(
+            cfg.failure_mode, self.channels, rate,
+            duration_max=cfg.duration_max, seed=cfg.seed)
+        mc = np.random.default_rng(cfg.seed + 7)
+        self.eps_estimates = np.array([
+            c.outage_probability(rate, mc, 200) for c in self.channels])
+
+        # --- jitted kernels ---------------------------------------------------
+        self._build_jits()
+        self._key = jax.random.fold_in(key, 2)
+
+        if pretrain_steps:
+            self.pretrain(pretrain_steps)
+
+    # ------------------------------------------------------------------ jits
+    def trainable(self, params):
+        return params
+
+    def _effective(self, t):
+        if self.lora_cfg is not None:
+            return apply_lora(self.base_params, t, self.lora_cfg)
+        return t
+
+    def _build_jits(self):
+        apply_fn = self.apply_fn
+        E, bs = self.cfg.local_steps, self.cfg.batch_size
+
+        def loss_t(t, x, y):
+            logits = apply_fn(self._effective(t), x)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+        self._loss_t = loss_t
+
+        @functools.partial(jax.jit, static_argnames=())
+        def local_update(t, t_global, corr, x, y, key, lr, mu):
+            n = x.shape[0]
+
+            def step(tt, k):
+                idx = jax.random.randint(k, (bs,), 0, n)
+                g = jax.grad(loss_t)(tt, x[idx], y[idx])
+                g = jax.tree.map(
+                    lambda gg, p_, pg, c: gg.astype(jnp.float32) +
+                    mu * (p_.astype(jnp.float32) - pg.astype(jnp.float32)) + c,
+                    g, tt, t_global, corr)
+                tt = jax.tree.map(lambda p_, gg: (p_.astype(jnp.float32) -
+                                                  lr * gg).astype(p_.dtype), tt, g)
+                return tt, None
+
+            keys = jax.random.split(key, E)
+            t, _ = jax.lax.scan(step, t, keys)
+            return t
+
+        self._local_update = local_update
+
+        @jax.jit
+        def accuracy_batch(t, x, y):
+            logits = apply_fn(self._effective(t), x)
+            return jnp.sum(jnp.argmax(logits, -1) == y)
+
+        self._accuracy_batch = accuracy_batch
+
+        @jax.jit
+        def loss_on(t, x, y):
+            return loss_t(t, x, y)
+
+        self._loss_on = loss_on
+
+    # -------------------------------------------------------------- helpers
+    def lr(self, rnd: int) -> float:
+        if self.cfg.lr_boundary is not None and rnd > self.cfg.lr_boundary:
+            return self.cfg.lr * 0.1
+        return self.cfg.lr
+
+    def _zeros_like_t(self, t):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def run_local(self, t_global, x, y, rnd, *, mu=0.0, corr=None):
+        corr = corr if corr is not None else self._zeros_like_t(t_global)
+        return self._local_update(t_global, t_global, corr, x, y,
+                                  self._next_key(), self.lr(rnd), mu)
+
+    def loss_on(self, t, x, y):
+        return self._loss_on(t, x, y)
+
+    def public_proxy_batch(self, n: int, rnd: int):
+        idx = self.rng.integers(0, len(self.public_y_raw), n)
+        return self.public_x_raw[idx], self.public_y_raw[idx]
+
+    def fold_into_base(self, path: str, resid):
+        from repro.fl.lora import _get, _set
+        w = _get(self.base_params, path)
+        _set(self.base_params, path,
+             (w.astype(jnp.float32) + resid).astype(w.dtype))
+
+    def train_compensatory(self, miss_mask: np.ndarray, rnd: int):
+        """Module 1 (Eq. 6): E SGD steps on the missing-class public subset."""
+        miss_classes = np.where(miss_mask)[0]
+        sel = np.isin(np.asarray(self.public_y_raw), miss_classes)
+        idx = np.where(sel)[0]
+        if len(idx) == 0:
+            return None, None
+        res = self.rng.choice(idx, self.data_size, replace=True)
+        x = self.public_x_raw[res]
+        y = self.public_y_raw[res]
+        model = self.run_local(self.global_params, x, y, rnd)
+        hist = class_histogram(np.asarray(self.public_y_raw)[idx], self.n_classes)
+        return model, hist
+
+    def pretrain(self, steps: int) -> None:
+        """Stage 1 (§II-B1): server pre-training on the public dataset."""
+        t = self.global_params
+        for s in range(0, steps, self.cfg.local_steps):
+            t = self.run_local(t, self.public_x, self.public_y, 0)
+        self.global_params = t
+
+    def evaluate(self) -> float:
+        t = self.global_params
+        bs = self.cfg.eval_batch
+        n = len(self.test.y)
+        correct = 0
+        for i in range(0, n, bs):
+            x = jnp.asarray(self.test.x[i:i + bs])
+            y = jnp.asarray(self.test.y[i:i + bs])
+            correct += int(self._accuracy_batch(t, x, y))
+        return correct / n
+
+    # ------------------------------------------------------------------ run
+    def run(self, strategy: Strategy, rounds: int,
+            log: Optional[Callable[[int, float], None]] = None) -> List[float]:
+        strategy.init_state(self)
+        self.failures.reset()
+        history: List[float] = []
+        full = self.k_selected >= self.n_clients
+        for r in range(1, rounds + 1):
+            if full:
+                selected = np.ones(self.n_clients, dtype=bool)
+            else:
+                sel = self.rng.choice(self.n_clients, self.k_selected,
+                                      replace=False)
+                selected = np.zeros(self.n_clients, dtype=bool)
+                selected[sel] = True
+            up = self.failures.draw(r)
+            connected = selected & up
+
+            t_global = self.global_params
+            client_models: Dict[int, Any] = {}
+            mu = strategy.prox_mu()
+            for i in np.where(connected)[0]:
+                corr = strategy.correction(i, self)
+                m = self.run_local(t_global, self.client_x[i], self.client_y[i],
+                                   r, mu=mu, corr=corr)
+                m = strategy.post_local(i, r, m, t_global, self)
+                client_models[int(i)] = m
+            server_model = self.run_local(t_global, self.public_x,
+                                          self.public_y, r)
+
+            ctx = RoundContext(
+                rnd=r, global_params=t_global, server_model=server_model,
+                client_models=client_models, selected=selected,
+                connected=connected, p=self.p, client_hists=self.client_hists,
+                server_hist=self.server_hist, global_hist=self.global_hist,
+                full_participation=full, eps_estimates=self.eps_estimates,
+                runner=self)
+            self.global_params = strategy.aggregate(ctx)
+
+            if r % self.cfg.eval_every == 0 or r == rounds:
+                acc = self.evaluate()
+                history.append(acc)
+                if log:
+                    log(r, acc)
+        return history

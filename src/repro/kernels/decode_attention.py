@@ -1,0 +1,88 @@
+"""Pallas TPU decode attention: one query token per sequence against a long
+(32k–500k) KV cache. This op is strictly memory-bound — the kernel streams
+the cache HBM→VMEM once per (batch, kv-head) and keeps the whole GQA group
+of queries resident, amortizing each cache byte across `group` heads.
+
+Grid = (B, KV, nS) with the cache-block loop innermost; online-softmax
+scratch (m, l, acc) keyed by the (group, hd) query tile. Invalid ring-buffer
+slots are masked via an int32 validity vector (blocked alongside the cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, ns: int):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (BS, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (G, BS)
+    ok = valid_ref[0] > 0                               # (BS,)
+    s = jnp.where(ok[None, :], s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = corr * acc_ref[...] + jax.lax.dot(p, v_ref[0, 0].astype(jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(js == ns - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s", "interpret"))
+def decode_attention(q, k, v, valid, *, scale: float, block_s: int = 512,
+                     interpret: bool = False):
+    """q: (B,1,H,hd); k/v: (B,S,KV,hd); valid: (S,) bool -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    hd_pad = max(128, ((hd + 127) // 128) * 128)
+    g_pad = max(8, ((g + 7) // 8) * 8)
+    bs = min(block_s, ((S + 7) // 8) * 8)
+    S_pad = ((S + bs - 1) // bs) * bs
+
+    qg = q.reshape(B, KV, g, hd)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - g), (0, hd_pad - hd)))
+    kt = jnp.pad(k, ((0, 0), (0, S_pad - S), (0, 0), (0, hd_pad - hd))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, S_pad - S), (0, 0), (0, hd_pad - hd))).transpose(0, 2, 1, 3)
+    valid_i = jnp.pad(valid.astype(jnp.int32), (0, S_pad - S)).reshape(1, S_pad)
+    ns = S_pad // bs
+
+    kernel = functools.partial(_kernel, scale=scale, ns=ns)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, hd_pad), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd_pad), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bs, hd_pad), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, hd_pad), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g_pad, hd_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, 1), jnp.float32),
+            pltpu.VMEM((g_pad, 1), jnp.float32),
+            pltpu.VMEM((g_pad, hd_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, valid_i)
+    return out[:, :, :g, :hd].reshape(B, 1, H, hd)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel for FedAuto's hot aggregation op (Eq. 7):
+
+    out[p] = Σ_m β_m · stacked[m, p]
+
+This is the server's per-round global aggregation over M = K+2 participant
+parameter vectors (clients + server + compensatory model). It is purely
+memory-bound (arithmetic intensity ≈ 1 FLOP / 2 bytes), so the kernel's job
+is to stream each parameter tile HBM→VMEM exactly once and fuse the β-scaled
+reduction — instead of XLA's M separate scale+add passes over the full
+parameter vector, which reads the aggregate M times.
+
+Tiling: the flat parameter axis P is tiled into (8, BP) VMEM blocks; the
+participant axis M stays whole inside the block (M ≤ ~32 in the paper's
+setting, so an (M, 8, BP) fp32 tile is ≤ 4 MB VMEM for BP=4096).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+
+
+def _kernel(beta_ref, x_ref, o_ref):
+    # beta: (M, 1) fp32 in VMEM; x: (M, SUBLANE, BP); o: (SUBLANE, BP)
+    x = x_ref[...].astype(jnp.float32)
+    b = beta_ref[...].astype(jnp.float32)          # (M, 1)
+    o_ref[...] = jnp.sum(x * b[:, :, None], axis=0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fedagg(stacked: jax.Array, betas: jax.Array, *, block: int = 4096,
+           interpret: bool = False) -> jax.Array:
+    """stacked: (M, P); betas: (M,) -> (P,) = Σ_m β_m stacked[m]."""
+    M, P = stacked.shape
+    rows = SUBLANE * block
+    P_pad = ((P + rows - 1) // rows) * rows
+    if P_pad != P:
+        stacked = jnp.pad(stacked, ((0, 0), (0, P_pad - P)))
+    x3 = stacked.reshape(M, P_pad // block // SUBLANE * SUBLANE, block)
+    n_rows = x3.shape[1]
+    grid = (n_rows // SUBLANE,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M, 1), lambda i: (0, 0)),
+            pl.BlockSpec((M, SUBLANE, block), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((SUBLANE, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, block), stacked.dtype),
+        interpret=interpret,
+    )(betas.astype(jnp.float32).reshape(M, 1), x3)
+    return out.reshape(P_pad)[:P]

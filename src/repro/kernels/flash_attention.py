@@ -1,0 +1,129 @@
+"""Pallas TPU flash attention (blockwise, online softmax) with causal and
+sliding-window masking and GQA head grouping.
+
+Layout: (B, H, S, hd) inside the kernel (the ops wrapper transposes from the
+model's (B, S, H, hd)). Grid = (B, H, nQ, nK) with the K loop innermost;
+running max / sum / accumulator live in VMEM scratch, the output block is
+written on the last K step. Causal + window structure prunes K blocks via
+``pl.when`` so skipped blocks cost no MXU work.
+
+Block shapes default to (128, head_dim) q-tiles × (128, head_dim) k-tiles —
+MXU-aligned for head dims that are multiples of 128 (the wrapper zero-pads
+smaller head dims up to 128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            bq: int, bk: int, sk_valid: int, nk: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    iq = pl.program_id(2)
+    q_start = iq * bq
+    k_start = ik * bk
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BK, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < sk_valid
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]          # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)              # (BK, hd)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot(p, v)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    # prune: block needed iff some (q,k) in it passes causal+window structure
+    need = k_start < sk_valid
+    if causal:
+        need &= k_start <= q_start + bq - 1
+    if window is not None:
+        need &= (k_start + bk - 1) > q_start - window
+    pl.when(need)(compute)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    hd_pad = max(128, ((hd + 127) // 128) * 128)
+    bq, bk = min(block_q, _ceil_mult(Sq, 8)), min(block_k, _ceil_mult(Sk, 8))
+    Sq_pad, Sk_pad = _ceil_mult(Sq, bq), _ceil_mult(Sk, bk)
+
+    def prep(t, S_pad):
+        t = jnp.pad(t, ((0, 0), (0, S_pad - t.shape[1]), (0, 0), (0, hd_pad - hd)))
+        return t.transpose(0, 2, 1, 3)                   # (B, heads, S, hd)
+
+    qt, kt, vt = prep(q, Sq_pad), prep(k, Sk_pad), prep(v, Sk_pad)
+    nq, nk = Sq_pad // bq, Sk_pad // bk
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, sk_valid=Sk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd_pad), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd_pad), lambda b, h, i, j, g_=g: (b, h // g_, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd_pad), lambda b, h, i, j, g_=g: (b, h // g_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd_pad), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_pad, hd_pad), q.dtype),
+        scratch_shapes=[
+            # (BQ, 1) running max / sum, (BQ, hd) accumulator — VMEM residents
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)[:, :Sq, :, :hd]
+    return out
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,81 @@
+"""Pallas TPU fused LoRA matmul:  y = x @ W + s · (x @ A) @ B.
+
+In FFT with LoRA only A/B train, but the forward still pays the full base
+matmul; XLA emits two separate GEMM passes over x (one for W, one for A) plus
+an extra pass for the rank-r expansion. The fused kernel reads each x tile
+once, accumulating both the base product and the rank-r projection in VMEM
+scratch, and applies B on the final reduction step — one HBM pass over x.
+
+Grid = (nT, nO, nD), d innermost. Scratch: acc (BT,BO) fp32 and xa (BT,r).
+r is zero-padded to the 128-lane boundary by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
+            scaling: float, nd: int):
+    jd = pl.program_id(2)
+
+    @pl.when(jd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(x, w_ref[...].astype(jnp.float32))
+    xa_ref[...] += jax.lax.dot(x, a_ref[...].astype(jnp.float32))
+
+    @pl.when(jd == nd - 1)
+    def _finish():
+        delta = jax.lax.dot(xa_ref[...], b_ref[...].astype(jnp.float32))
+        o_ref[...] = (acc_ref[...] + scaling * delta).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scaling", "block_t", "block_o",
+                                             "block_d", "interpret"))
+def lora_matmul(x, w, a, b, scaling: float, *, block_t: int = 256,
+                block_o: int = 512, block_d: int = 512,
+                interpret: bool = False):
+    """x: (T,d); w: (d,o); a: (d,r); b: (r,o) -> (T,o)."""
+    T, D = x.shape
+    O = w.shape[1]
+    r = a.shape[1]
+    bt, bo, bd = min(block_t, _cm(T, 8)), min(block_o, _cm(O, 128)), min(block_d, _cm(D, 128))
+    T_p, O_p, D_p = _cm(T, bt), _cm(O, bo), _cm(D, bd)
+    r_p = _cm(r, 128)
+    xp = jnp.pad(x, ((0, T_p - T), (0, D_p - D)))
+    wp = jnp.pad(w, ((0, D_p - D), (0, O_p - O)))
+    ap = jnp.pad(a, ((0, D_p - D), (0, r_p - r)))
+    bp = jnp.pad(b, ((0, r_p - r), (0, O_p - O)))
+    nt, no, nd = T_p // bt, O_p // bo, D_p // bd
+
+    kernel = functools.partial(_kernel, scaling=scaling, nd=nd)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt, no, nd),
+        in_specs=[
+            pl.BlockSpec((bt, bd), lambda i, j, kd: (i, kd)),
+            pl.BlockSpec((bd, bo), lambda i, j, kd: (kd, j)),
+            pl.BlockSpec((bd, r_p), lambda i, j, kd: (kd, 0)),
+            pl.BlockSpec((r_p, bo), lambda i, j, kd: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bo), lambda i, j, kd: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T_p, O_p), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt, bo), jnp.float32),
+            pltpu.VMEM((bt, r_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, ap, bp)
+    return out[:T, :O]
+
+
+def _cm(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,77 @@
+"""Jit'd dispatch layer for the Pallas kernels.
+
+``set_mode``:
+  * "off"       — pure-jnp reference path (default on CPU; portable).
+  * "interpret" — Pallas kernels in interpret mode (CPU correctness tests).
+  * "on"        — compiled Pallas kernels (the TPU target).
+
+Models call through this module so the same model code runs in smoke tests
+(off/interpret) and on real hardware (on).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_MODE = "off"
+
+
+def set_mode(mode: str) -> None:
+    assert mode in ("off", "interpret", "on"), mode
+    global _MODE
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+def use_pallas() -> bool:
+    return _MODE != "off"
+
+
+def _interpret() -> bool:
+    return _MODE == "interpret"
+
+
+def fedagg(stacked, betas):
+    if _MODE == "off":
+        return _ref.fedagg(stacked, betas)
+    from repro.kernels.fedagg import fedagg as k
+    return k(stacked, betas, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, scale=None):
+    if _MODE == "off":
+        return _ref.flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+    from repro.kernels.flash_attention import flash_attention as kn
+    return kn(q, k, v, causal=causal, window=window, scale=scale,
+              interpret=_interpret())
+
+
+def decode_attention(q, k, v, valid, *, scale: float):
+    if _MODE == "off":
+        return _ref.decode_attention(q, k, v, valid, scale=scale)
+    from repro.kernels.decode_attention import decode_attention as kn
+    return kn(q, k, v, valid, scale=scale, interpret=_interpret())
+
+
+def lora_matmul(x, w, a, b, scaling: float):
+    if _MODE == "off":
+        return _ref.lora_matmul(x, w, a, b, scaling)
+    from repro.kernels.lora_matmul import lora_matmul as kn
+    return kn(x, w, a, b, scaling, interpret=_interpret())
+
+
+def selective_scan(xdt, a_log, B_mat, C_mat, *, chunk: int = 128):
+    if _MODE == "off":
+        import jax.numpy as jnp
+        h0 = jnp.zeros((xdt.shape[0], xdt.shape[2], xdt.shape[3],
+                        B_mat.shape[-1]), jnp.float32)
+        return _ref.selective_scan(xdt, a_log, B_mat, C_mat, h0)[0]
+    from repro.kernels.selective_scan import selective_scan as kn
+    return kn(xdt, a_log, B_mat, C_mat, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked selective scan.
+
+Recurrence (per (batch, head)):  h_t = a_t·h_{t-1} + x̃_t ⊗ B_t,
+y_t = C_t·h_t  with x̃ = dt-scaled input. The chunked algorithm does the
+quadratic intra-chunk part on the MXU ((Q,Q) decay×CB matmuls) and carries
+the (dh, n) state across chunks in VMEM scratch — the grid's innermost
+(chunk) axis executes sequentially on TPU, so the scratch state IS the scan
+carry; HBM sees each input tile exactly once.
+
+Layout: grid (B·H, n_chunks); blocks x̃ (Q, dh), a_log (1, Q), B/C (Q, n);
+state scratch (dh, n) fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(alog_ref, x_ref, b_ref, c_ref, o_ref, h_ref, *, q: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    la = alog_ref[0].astype(jnp.float32)                  # (Q,)
+    x = x_ref[0].astype(jnp.float32)                      # (Q, dh)
+    bm = b_ref[0].astype(jnp.float32)                     # (Q, n)
+    cm = c_ref[0].astype(jnp.float32)                     # (Q, n)
+    cums = jnp.cumsum(la)                                 # (Q,)
+    # intra-chunk: y[t] = Σ_{s<=t} e^{cums_t - cums_s} (C_t·B_s) x̃_s
+    Lm = jnp.exp(cums[:, None] - cums[None, :])
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    W = jnp.where(tri, Lm, 0.0) * jax.lax.dot(cm, bm.T)   # (Q, Q)
+    y = jax.lax.dot(W, x)                                 # (Q, dh)
+    # inter-chunk: y[t] += e^{cums_t} C_t · h
+    h = h_ref[...]
+    y = y + jnp.exp(cums)[:, None] * jax.lax.dot(cm, h.T)
+    # state update: h' = e^{cums_Q} h + Σ_s e^{cums_Q - cums_s} x̃_s ⊗ B_s
+    dec_end = jnp.exp(cums[-1] - cums)                    # (Q,)
+    h_ref[...] = jnp.exp(cums[-1]) * h + jax.lax.dot(x.T, dec_end[:, None] * bm)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def selective_scan(xdt, a_log, B_mat, C_mat, *, chunk: int = 128,
+                   interpret: bool = False):
+    """xdt: (B,S,H,dh) dt-scaled input; a_log: (B,S,H) = log a_t;
+    B_mat/C_mat: (B,S,n). Returns y (B,S,H,dh) fp32. Zero initial state
+    (matches ref.selective_scan with h0 = 0)."""
+    B, S, H, dh = xdt.shape
+    n = B_mat.shape[-1]
+    q = min(chunk, _cm(S, 8))
+    S_pad = _cm(S, q)
+    dh_p, n_p = _cm(dh, 128), _cm(n, 128)
+
+    x = jnp.pad(xdt, ((0, 0), (0, S_pad - S), (0, 0), (0, dh_p - dh)))
+    x = x.transpose(0, 2, 1, 3).reshape(B * H, S_pad, dh_p)
+    # padded steps must be identity on the state: a_log = 0 -> a = 1, x̃ = 0
+    al = jnp.pad(a_log, ((0, 0), (0, S_pad - S), (0, 0)))
+    al = al.transpose(0, 2, 1).reshape(B * H, S_pad)
+    bm = jnp.pad(B_mat, ((0, 0), (0, S_pad - S), (0, n_p - n)))
+    cm = jnp.pad(C_mat, ((0, 0), (0, S_pad - S), (0, n_p - n)))
+    nc = S_pad // q
+
+    kernel = functools.partial(_kernel, q=q)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, q), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1, q, dh_p), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, q, n_p), lambda bh, c, H_=H: (bh // H_, c, 0)),
+            pl.BlockSpec((1, q, n_p), lambda bh, c, H_=H: (bh // H_, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, dh_p), lambda bh, c: (bh, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S_pad, dh_p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dh_p, n_p), jnp.float32)],
+        interpret=interpret,
+    )(al, x, bm, cm)
+    out = out.reshape(B, H, S_pad, dh_p).transpose(0, 2, 1, 3)
+    return out[:, :S, :, :dh]
+
+
+def _cm(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

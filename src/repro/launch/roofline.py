@@ -1,0 +1,157 @@
+"""Roofline-term extraction from compiled dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+Convention: jax's ``compiled.cost_analysis()`` reports the SPMD-partitioned
+per-device module, so all three terms below are per-chip seconds:
+
+    compute    = HLO_FLOPs_per_chip / 197e12          (v5e bf16 peak)
+    memory     = HLO_bytes_per_chip / 819e9           (HBM BW)
+    collective = collective_bytes_per_chip / 50e9     (per-link ICI BW,
+                  1-link-serialized conservative model)
+
+collective_bytes is parsed from the optimized HLO text: the summed result
+sizes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op (fusion never renames collectives, so text parsing is
+stable).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind from optimized HLO text."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1))
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: int) -> Dict[str, float]:
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_accessed / HBM_BW
+    t_x = coll_bytes / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom}
+
+
+def model_flops(cfg, shape_info: dict) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens for training, 2·N_active·tokens for a
+    decode/prefill step."""
+    n = cfg.active_param_count()
+    B, S = shape_info["global_batch"], shape_info["seq_len"]
+    if shape_info["kind"] in ("train", "fft_round"):
+        return 6.0 * n * B * S
+    if shape_info["kind"] == "prefill":
+        return 2.0 * n * B * S
+    return 2.0 * n * B          # decode: one token per sequence
+
+
+def analytic_roofline(cfg, shape_info: dict, *, n_devices: int,
+                      batch_shards: int, model_shards: int,
+                      fsdp: bool = False) -> dict:
+    """Napkin-math three-term roofline per device (DESIGN.md §6).
+
+    Motivation: XLA:CPU ``cost_analysis`` counts while-loop (lax.scan)
+    bodies ONCE, not ×trip-count, so HLO numbers under-report scanned layer
+    stacks by ~L. The analytic model is exact enough for bottleneck
+    identification and is what the §Perf loop optimizes; the HLO numbers
+    remain in the table as structure-sensitive cross-checks.
+
+    Model (bf16 = 2 bytes, fp32 master math folded into the constants):
+      compute  = MODEL_FLOPS/device ÷ peak  (+ ~1/3 remat re-forward when
+                 training, matching per-layer jax.checkpoint)
+      memory   = params traffic + activation traffic + KV-cache traffic
+      collective = TP output all-reduces (2/layer fwd [+2 bwd]) on
+                 (tokens_dev × d_model) + DP/FSDP gradient reduce-scatter +
+                 all-gather when training.
+    """
+    B, S = shape_info["global_batch"], shape_info["seq_len"]
+    kind = shape_info["kind"]
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    L = cfg.num_layers + (cfg.num_encoder_layers if cfg.encoder_decoder else 0)
+    d = cfg.d_model
+    bytes_p = 2.0
+
+    tokens = B * S if kind in ("train", "prefill", "fft_round") else B
+    tokens_dev = tokens / batch_shards
+    params_dev = n_total * bytes_p / (model_shards * (batch_shards if fsdp else 1))
+
+    if kind in ("train", "fft_round"):
+        flops_dev = 6.0 * n_active * tokens / n_devices * (8.0 / 6.0)  # remat
+        # params: fwd read + remat re-read + bwd read + grad write + update
+        mem = 5.0 * params_dev
+        # activations: ~6 (tokens_dev·d) tensors per layer r/w with remat
+        mem += 6.0 * L * tokens_dev * d * bytes_p
+        coll = 4.0 * L * tokens_dev * d * bytes_p          # TP psums fwd+bwd
+        if fsdp:
+            coll += 4.0 * params_dev * batch_shards        # AG + RS per step
+        elif batch_shards > 1:
+            coll += 2.0 * params_dev                       # DP grad all-reduce
+    elif kind == "prefill":
+        flops_dev = 2.0 * n_active * tokens / n_devices
+        mem = params_dev + 4.0 * L * tokens_dev * d * bytes_p
+        coll = 2.0 * L * tokens_dev * d * bytes_p
+        if fsdp:
+            coll += params_dev * batch_shards
+    else:  # decode: one token, full cache read
+        flops_dev = 2.0 * n_active * tokens / n_devices
+        cache_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        if cfg.mla:
+            kv_bytes = cache_len * (cfg.mla_kv_lora_rank + cfg.mla_rope_head_dim)
+        elif cfg.block_pattern is not None:
+            # recurrent states: O(1) per layer
+            kv_bytes = (cfg.ssm_expand * d * cfg.ssm_state_size)
+        else:
+            kv_bytes = cache_len * 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+        mem = params_dev + B / batch_shards * L * kv_bytes * bytes_p
+        coll = 2.0 * L * tokens_dev * d * bytes_p + \
+            tokens_dev * cfg.vocab_size * bytes_p / model_shards
+        if fsdp:
+            coll += params_dev * batch_shards
+
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = mem / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_x)
+    return {"a_compute_s": t_c, "a_memory_s": t_m, "a_collective_s": t_x,
+            "a_dominant": dom, "a_step_s": bound,
+            "a_mfu_bound": t_c / bound if bound else 0.0}

@@ -1,0 +1,78 @@
+"""Batched serving driver: prefill a prompt batch, then decode with the
+ring-buffer KV cache (SWA archs) / SSM state (recurrent archs).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b \
+        --smoke-scale=true --batch 4 --prompt-len 64 --decode-steps 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--smoke-scale", default="true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    smoke = args.smoke_scale.lower() in ("1", "true", "yes")
+    cfg = get_smoke_config(args.arch) if smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    B = args.batch
+
+    enc = None
+    if cfg.encoder_decoder:
+        enc = jax.random.normal(key, (B, args.prompt_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    prompts = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (B, args.prompt_len), 0, cfg.vocab_size)
+    state = T.init_decode_state(params, cfg, B, args.cache_len,
+                                encoder_embeds=enc)
+
+    decode = jax.jit(lambda p, s, t: T.decode_step(p, cfg, s, t))
+
+    # prefill by teacher-forcing the prompt through decode (exactly the KV
+    # path that serves; a chunked prefill kernel is the TPU fast path)
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        logits, state = decode(params, state, prompts[:, t:t + 1])
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.decode_steps):
+        logits, state = decode(params, state, tok)
+        if args.temperature > 0:
+            key, k2 = jax.random.split(key)
+            tok = jax.random.categorical(k2, logits / args.temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits, -1)[:, None]
+        out.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+
+    toks_s = B * args.decode_steps / t_decode
+    print(f"arch={cfg.name} B={B} prefill({args.prompt_len} tok)="
+          f"{t_prefill:.2f}s decode={args.decode_steps} steps "
+          f"{t_decode:.2f}s -> {toks_s:,.1f} tok/s")
+    print("sample:", np.concatenate(out, 1)[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

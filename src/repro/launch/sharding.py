@@ -1,0 +1,200 @@
+"""Sharding rules: logical-axis rules for activations and path-based
+PartitionSpecs for every parameter in the zoo (DESIGN.md §5).
+
+Layout summary (single-pod ('data','model'); multi-pod adds 'pod'):
+  batch/tokens            -> ('pod','data')
+  attention heads, FFN hidden, vocab, MoE experts -> 'model'
+  large archs (≥ fsdp_threshold params) additionally shard the non-'model'
+  weight dimension over 'data' (FSDP); XLA inserts the per-layer gathers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP_THRESHOLD = 8e9        # params; above this, weights also shard over 'data'
+
+
+def logical_rules(mesh, cfg: Optional[ModelConfig] = None) -> Dict[str, object]:
+    batch = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    msize = dict(mesh.shape)["model"]
+    rules = {
+        "batch": batch if len(batch) > 1 else batch[0],
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        # decode-cache layout: follows the cache (replicated when kv heads
+        # don't divide the tensor axis) — see models/attention.gqa_decode
+        "kv_cache_heads": None,
+    }
+    if cfg is not None and cfg.num_kv_heads % msize == 0:
+        rules["kv_cache_heads"] = "model"
+    # NOTE: vocab stays 'model' even when vocab_size % msize != 0 — GSPMD
+    # handles uneven sharding with padding; forcing replication regressed
+    # seamless train_4k 1.7× (measured).
+    return rules
+
+
+def _spec_for(path: str, ndim: int, cfg: ModelConfig, fsdp: Optional[str]):
+    """PartitionSpec for one (unstacked) param. path: '/'-joined key names."""
+    leaf = path.rsplit("/", 1)[-1]
+
+    def pick():
+        # ---- embeddings / lm head: shard vocab over model
+        if "embed" in path or "lm_head" in path:
+            return P("model", fsdp)
+        # ---- MoE
+        if "/moe/" in path or path.startswith("moe/"):
+            if "router" in path:
+                return P(None, None)
+            if "shared" in path:
+                if leaf == "b":
+                    return P("model") if "w_up" in path or "w_gate" in path else P(None)
+                if "w_down" in path:
+                    return P("model", fsdp)
+                return P(fsdp, "model")
+            if cfg.num_experts % 16 == 0:
+                if "w_down" in path:
+                    return P("model", None, fsdp)   # (E, f, d): experts sharded
+                return P("model", fsdp, None)       # (E, d, f)
+            # virtual-expert layout (§Perf B iter 2): E < model size — shard
+            # the expert FFN hidden dim instead, matching the shard_map
+            # reshape so weights never travel.
+            if "w_down" in path:
+                return P(None, "model", fsdp)       # (E, f, d)
+            return P(None, fsdp, "model")           # (E, d, f)
+        # ---- MLA attention
+        if cfg.mla and "/attn/" in path:
+            if "q_up" in path or "kv_up" in path:
+                return P(None, "model")
+            if "q_down" in path or "kv_down" in path:
+                return P(fsdp, None)
+            if leaf == "w" and "wo" in path:
+                return P("model", fsdp)
+            return P(None)
+        # ---- GQA attention / cross attention
+        if "/attn/" in path or "/cross/" in path:
+            if leaf == "w":
+                if "wo" in path:
+                    return P("model", fsdp)
+                return P(fsdp, "model")              # wq/wk/wv
+            if leaf == "b":
+                return P(None) if "wo" in path else P("model")
+            return P(None)                            # q_norm/k_norm scales
+        # ---- dense FFN
+        if "/ffn/" in path or path.startswith("ffn/"):
+            if leaf == "w":
+                return P("model", fsdp) if "w_down" in path else P(fsdp, "model")
+            if leaf == "b":
+                return P(None) if "w_down" in path else P("model")
+            return P(None)
+        # ---- Mamba2 / xLSTM (small models: replicate or fsdp only)
+        if "/mamba/" in path or "/mlstm/" in path or "/slstm/" in path:
+            if leaf == "w" and ndim == 2:
+                return P(fsdp, None)
+            return P(None)
+        # ---- norms, scalars, everything else
+        return P(*([None] * min(ndim, 1)))
+
+    spec = pick()
+    # pad/truncate to ndim
+    parts = list(spec) + [None] * ndim
+    return P(*parts[:ndim])
+
+
+def param_pspecs(params, cfg: ModelConfig, mesh) -> object:
+    """Mirror `params` with PartitionSpecs. Detects scanned stacks (paths under
+    layers/ or enc_layers/) and prepends a None axis for the layer dim."""
+    fsdp = "data" if cfg.param_count() >= FSDP_THRESHOLD and "data" in mesh.axis_names else None
+
+    def one(key_path, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in key_path)
+        scanned = path.startswith("layers/") or path.startswith("enc_layers/")
+        ndim = leaf.ndim - (1 if scanned else 0)
+        spec = _spec_for(path, ndim, cfg, fsdp)
+        if scanned:
+            spec = P(*([None] + list(spec)))
+        # sanity: never shard an axis that does not divide
+        parts = []
+        for dim, ax in zip(leaf.shape, list(spec) + [None] * leaf.ndim):
+            if ax is None:
+                parts.append(None)
+                continue
+            size = np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))])
+            parts.append(ax if dim % int(size) == 0 else None)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch × input shape): ShapeDtypeStructs + PartitionSpecs
+# ---------------------------------------------------------------------------
+INPUT_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+    # extra (not part of the assigned 40): one full FFT round — K parallel
+    # clients on the data axis + β-weighted aggregation collective (Eq. 7)
+    "fft_round_4k": dict(seq_len=4096, global_batch=256, kind="fft_round",
+                         clients=16, client_batch=16),
+}
+
+# archs whose attention is not sub-quadratic-capable -> skip long_500k
+LONG_CONTEXT_OK = {
+    "llava-next-mistral-7b", "starcoder2-7b", "mixtral-8x22b",
+    "xlstm-125m", "zamba2-1.2b",
+}
+
+
+def batch_pspec(mesh) -> P:
+    batch = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return P(batch if len(batch) > 1 else batch[0])
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns (batch_dict_of_ShapeDtypeStruct, pspecs_dict) for train/prefill;
+    decode shapes are handled by the dry-run via init_decode_state."""
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    bspec = batch_pspec(mesh)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    pspecs: Dict[str, P] = {}
+
+    def add(name, shape, dtype, spec):
+        specs[name] = jax.ShapeDtypeStruct(shape, dtype)
+        pspecs[name] = spec
+
+    b0 = list(bspec)[0]
+    if cfg.vision_frontend:
+        n_img = cfg.num_image_tokens
+        s_txt = S - n_img
+        add("tokens", (B, s_txt), jnp.int32, P(b0, None))
+        add("image_embeds", (B, n_img, cfg.d_model), jnp.bfloat16, P(b0, None, None))
+        add("labels", (B, S), jnp.int32, P(b0, None))
+    elif cfg.encoder_decoder:
+        s_enc = min(S, 4096)
+        add("tokens", (B, S), jnp.int32, P(b0, None))
+        add("encoder_embeds", (B, s_enc, cfg.d_model), jnp.bfloat16, P(b0, None, None))
+        add("labels", (B, S), jnp.int32, P(b0, None))
+    else:
+        add("tokens", (B, S), jnp.int32, P(b0, None))
+        add("labels", (B, S), jnp.int32, P(b0, None))
+    return specs, pspecs

@@ -1,0 +1,8 @@
+from repro.models import transformer, vision  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    hidden_states,
+    init_decode_state,
+    init_params,
+)

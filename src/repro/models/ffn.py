@@ -1,0 +1,36 @@
+"""Feed-forward variants: SwiGLU / GeGLU (gated) and plain GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import constrain, dense, dense_init, gelu
+
+
+def ffn_init(key, cfg: ModelConfig, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], cfg.d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, cfg.d_model, dtype),
+        }
+    return {  # plain MLP (starcoder2 / seamless style, with bias)
+        "w_up": dense_init(ks[0], cfg.d_model, d_ff, dtype, bias=True),
+        "w_down": dense_init(ks[1], d_ff, cfg.d_model, dtype, bias=True),
+    }
+
+
+def ffn_forward(p, cfg: ModelConfig, x):
+    if cfg.ffn_activation in ("swiglu", "geglu"):
+        g = dense(p["w_gate"], x)
+        u = dense(p["w_up"], x)
+        act = jax.nn.silu(g) if cfg.ffn_activation == "swiglu" else gelu(g)
+        h = act * u
+        h = constrain(h, "batch", "seq", "mlp")
+        return dense(p["w_down"], h)
+    h = gelu(dense(p["w_up"], x))
+    h = constrain(h, "batch", "seq", "mlp")
+    return dense(p["w_down"], h)

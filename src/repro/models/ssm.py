@@ -1,0 +1,154 @@
+"""Mamba2 block (SSD — state-space duality, chunked algorithm).
+
+Recurrence per head (state n = ssm_state_size, head dim dh):
+    h_t = a_t * h_{t-1} + dt_t * (x_t ⊗ B_t),   y_t = C_t · h_t + D * x_t
+with a_t = exp(-dt_t * exp(A_log)).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+term within chunks of size Q, linear state carry between chunks via
+``lax.scan`` — O(S·Q) compute, O(1) state, never materializes (S,S) or a
+per-step (S, dh, n) tensor. Decode is the plain one-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+class MambaCache(NamedTuple):
+    h: jax.Array        # (B, H, dh, n) fp32 SSM state
+    conv: jax.Array     # (B, w-1, d_in) conv tail
+    length: jax.Array   # () int32
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = cfg.ssm_num_heads or cfg.num_heads
+    n = cfg.ssm_state_size
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (d_in), x (d_in), B (n), C (n), dt (H)]
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * n + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, d_in)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _split_proj(p, cfg, x):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_num_heads or cfg.num_heads
+    n = cfg.ssm_state_size
+    zxbcd = dense(p["in_proj"], x)
+    z, xi, Bm, Cm, dt = jnp.split(zxbcd, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    return z, xi, Bm, Cm, dt
+
+
+def _causal_conv(p, xi, tail=None):
+    """Depthwise causal conv. xi: (B,S,d_in); tail: (B,w-1,d_in) or None."""
+    w = p["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((xi.shape[0], w - 1, xi.shape[2]), xi.dtype)
+    xpad = jnp.concatenate([tail, xi], axis=1)
+    out = sum(xpad[:, i:i + xi.shape[1]] * p["conv_w"][i] for i in range(w))
+    new_tail = xpad[:, xpad.shape[1] - (w - 1):]
+    return jax.nn.silu(out), new_tail
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A_log, h0, chunk: int):
+    """xh: (B,S,H,dh); Bm/Cm: (B,S,n); dt: (B,S,H); h0: (B,H,dh,n) fp32.
+    Returns (y (B,S,H,dh) fp32, h_end)."""
+    B, S, H, dh = xh.shape
+    n = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    a_log = -dt * jnp.exp(A_log)[None, None, :]                      # (B,S,H) = log a_t
+    xdt = xh.astype(jnp.float32) * dt[..., None]                     # (B,S,H,dh)
+
+    def reshape_c(t, extra):
+        return t.reshape((B, nc, Q) + extra).transpose((1, 0, 2) + tuple(range(3, 3 + len(extra))))
+
+    xs = (reshape_c(xdt, (H, dh)), reshape_c(Bm.astype(jnp.float32), (n,)),
+          reshape_c(Cm.astype(jnp.float32), (n,)), reshape_c(a_log, (H,)))
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(h, xs_c):
+        xdt_c, B_c, C_c, la_c = xs_c                                 # (B,Q,...)
+        cums = jnp.cumsum(la_c, axis=1)                              # (B,Q,H)
+        # intra-chunk: y[t] += sum_{s<=t} exp(cums_t - cums_s) (C_t.B_s) xdt_s
+        Lm = jnp.exp(cums[:, :, None, :] - cums[:, None, :, :])      # (B,Q,Q,H)
+        Lm = jnp.where(tri[None, :, :, None], Lm, 0.0)
+        CB = jnp.einsum("bqn,bsn->bqs", C_c, B_c)                    # (B,Q,Q)
+        W = CB[..., None] * Lm                                       # (B,Q,Q,H)
+        y = jnp.einsum("bqsh,bshd->bqhd", W, xdt_c)
+        # inter-chunk: y[t] += exp(cums_t) C_t . h
+        dec = jnp.exp(cums)                                          # (B,Q,H)
+        y = y + jnp.einsum("bqn,bqh,bhdn->bqhd", C_c, dec, h)
+        # state update
+        dec_end = jnp.exp(cums[:, -1:, :] - cums)                    # (B,Q,H)
+        h_new = jnp.exp(cums[:, -1])[:, :, None, None] * h + \
+            jnp.einsum("bqh,bqn,bqhd->bhdn", dec_end, B_c, xdt_c)
+        return h_new, y
+
+    h_end, ys = jax.lax.scan(body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return y, h_end
+
+
+def mamba2_forward(p, cfg: ModelConfig, x, chunk: int = 256):
+    """x: (B,S,d) -> (B,S,d). Training / prefill."""
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = cfg.ssm_num_heads or cfg.num_heads
+    dh = d_in // H
+    z, xi, Bm, Cm, dt = _split_proj(p, cfg, x)
+    xi, _ = _causal_conv(p, xi)
+    xh = xi.reshape(B, S, H, dh)
+    h0 = jnp.zeros((B, H, dh, cfg.ssm_state_size), jnp.float32)
+    y, _ = _ssd_chunked(xh, Bm, Cm, dt, p["A_log"], h0, chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return dense(p["out_proj"], y)
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_num_heads or cfg.num_heads
+    dh = d_in // H
+    return MambaCache(
+        h=jnp.zeros((batch, H, dh, cfg.ssm_state_size), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, cache: MambaCache):
+    """x: (B,1,d); one-step recurrence."""
+    B, _, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = cfg.ssm_num_heads or cfg.num_heads
+    dh = d_in // H
+    z, xi, Bm, Cm, dt = _split_proj(p, cfg, x)
+    xi, new_tail = _causal_conv(p, xi, cache.conv)
+    xh = xi.reshape(B, H, dh).astype(jnp.float32)
+    dt1 = dt[:, 0]                                                   # (B,H)
+    a = jnp.exp(-dt1 * jnp.exp(p["A_log"])[None, :])                 # (B,H)
+    u = jnp.einsum("bhd,bn->bhdn", xh * dt1[..., None], Bm[:, 0].astype(jnp.float32))
+    h = a[:, :, None, None] * cache.h + u
+    y = jnp.einsum("bhdn,bn->bhd", h, Cm[:, 0].astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return dense(p["out_proj"], y), MambaCache(h=h, conv=new_tail, length=cache.length + 1)

@@ -1,0 +1,194 @@
+"""The paper's experiment models (Appendix III-C): small CNN (MNIST),
+ResNet-GN (CIFAR-10), ResNet18-GN (CIFAR-100), and a ViT classifier that is
+LoRA-fine-tuned in the partial-parameter experiments.
+
+Functional style: ``make_model(name, num_classes, image_size, channels)``
+returns ``(init_fn(key) -> params, apply_fn(params, images) -> logits)``.
+GroupNorm (not BatchNorm) everywhere, matching the paper's FL-friendly choice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, layernorm, layernorm_init
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * math.sqrt(2.0 / fan_in)
+    return {"w": w.astype(dtype), "b": jnp.zeros((cout,), dtype)}
+
+
+def conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def groupnorm_init(c, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def groupnorm(p, x, groups, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, H, W, C) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, k, k, 1),
+                                 (1, s, s, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# CNN (Table 9)
+# ---------------------------------------------------------------------------
+def cnn_init(key, num_classes, image_size, channels):
+    ks = jax.random.split(key, 4)
+    flat = (image_size // 4) ** 2 * 32
+    return {
+        "conv1": conv_init(ks[0], 5, 5, channels, 16), "gn1": groupnorm_init(16),
+        "conv2": conv_init(ks[1], 5, 5, 16, 32), "gn2": groupnorm_init(32),
+        "fc1": dense_init(ks[2], flat, 128, jnp.float32, bias=True),
+        "fc2": dense_init(ks[3], 128, num_classes, jnp.float32, bias=True),
+    }
+
+
+def cnn_apply(p, x):
+    x = maxpool(jax.nn.relu(groupnorm(p["gn1"], conv(p["conv1"], x), 4)))
+    x = maxpool(jax.nn.relu(groupnorm(p["gn2"], conv(p["conv2"], x), 4)))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(dense(p["fc1"], x))
+    return dense(p["fc2"], x)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-GN (Tables 11 / 12)
+# ---------------------------------------------------------------------------
+def _basic_block_init(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {"conv1": conv_init(ks[0], 3, 3, cin, cout), "gn1": groupnorm_init(cout),
+         "conv2": conv_init(ks[1], 3, 3, cout, cout), "gn2": groupnorm_init(cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_init(ks[2], 1, 1, cin, cout)
+    return p
+
+
+def _basic_block_apply(p, x, stride, groups):
+    h = jax.nn.relu(groupnorm(p["gn1"], conv(p["conv1"], x, stride), groups))
+    h = groupnorm(p["gn2"], conv(p["conv2"], h), groups)
+    sc = conv(p["proj"], x, stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def resnet_init(key, num_classes, image_size, channels, *, stages, widths, groups):
+    ks = jax.random.split(key, 2 + sum(stages))
+    p = {"stem": conv_init(ks[0], 3, 3, channels, widths[0]),
+         "gn0": groupnorm_init(widths[0])}
+    i = 1
+    cin = widths[0]
+    for s, (n, w) in enumerate(zip(stages, widths)):
+        for b in range(n):
+            stride = 2 if (b == 0 and s > 0) else 1
+            p[f"s{s}b{b}"] = _basic_block_init(ks[i], cin, w, stride)
+            cin = w
+            i += 1
+    p["fc"] = dense_init(ks[i], cin, num_classes, jnp.float32, bias=True)
+    return p
+
+
+def resnet_apply(p, x, *, stages, widths, groups):
+    x = jax.nn.relu(groupnorm(p["gn0"], conv(p["stem"], x), groups[0]))
+    for s, (n, w) in enumerate(zip(stages, widths)):
+        for b in range(n):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x = _basic_block_apply(p[f"s{s}b{b}"], x, stride, groups[s])
+    x = jnp.mean(x, axis=(1, 2))
+    return dense(p["fc"], x)
+
+
+# ---------------------------------------------------------------------------
+# ViT classifier (Table 10, reduced-scale by default)
+# ---------------------------------------------------------------------------
+def vit_init(key, num_classes, image_size, channels, *, patch=4, d=192,
+             depth=6, heads=3, mlp_ratio=4):
+    ks = jax.random.split(key, 4 + depth)
+    n_patches = (image_size // patch) ** 2
+    p = {
+        "patch": dense_init(ks[0], patch * patch * channels, d, jnp.float32, bias=True),
+        "pos": jax.random.normal(ks[1], (1, n_patches + 1, d)) * 0.02,
+        "cls": jnp.zeros((1, 1, d)),
+        "head": dense_init(ks[2], d, num_classes, jnp.float32, bias=True),
+        "ln_f": layernorm_init(d, jnp.float32),
+    }
+    for i in range(depth):
+        bs = jax.random.split(ks[3 + i], 4)
+        p[f"blk{i}"] = {
+            "ln1": layernorm_init(d, jnp.float32),
+            "qkv": dense_init(bs[0], d, 3 * d, jnp.float32, bias=True),
+            "proj": dense_init(bs[1], d, d, jnp.float32, bias=True),
+            "ln2": layernorm_init(d, jnp.float32),
+            "fc1": dense_init(bs[2], d, mlp_ratio * d, jnp.float32, bias=True),
+            "fc2": dense_init(bs[3], mlp_ratio * d, d, jnp.float32, bias=True),
+        }
+    return p
+
+
+def vit_apply(p, x, *, patch=4, heads=3, depth=6):
+    B, H, W, C = x.shape
+    xp = x.reshape(B, H // patch, patch, W // patch, patch, C)
+    xp = xp.transpose(0, 1, 3, 2, 4, 5).reshape(B, -1, patch * patch * C)
+    h = dense(p["patch"], xp)
+    h = jnp.concatenate([jnp.broadcast_to(p["cls"], (B, 1, h.shape[-1])), h], axis=1)
+    h = h + p["pos"]
+    d = h.shape[-1]
+    hd = d // heads
+    for i in range(depth):
+        blk = p[f"blk{i}"]
+        hn = layernorm(blk["ln1"], h)
+        qkv = dense(blk["qkv"], hn).reshape(B, -1, 3, heads, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, -1, d)
+        h = h + dense(blk["proj"], o)
+        hn = layernorm(blk["ln2"], h)
+        h = h + dense(blk["fc2"], jax.nn.gelu(dense(blk["fc1"], hn)))
+    h = layernorm(p["ln_f"], h)
+    return dense(p["head"], h[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def make_model(name: str, num_classes: int, image_size: int,
+               channels: int) -> Tuple[Callable, Callable]:
+    if name == "cnn":
+        return (lambda k: cnn_init(k, num_classes, image_size, channels), cnn_apply)
+    if name == "resnet":        # paper's 0.27M CIFAR-10 ResNet
+        kw = dict(stages=(3, 3, 3), widths=(16, 32, 64), groups=(4, 8, 16))
+        return (lambda k: resnet_init(k, num_classes, image_size, channels, **kw),
+                lambda p, x: resnet_apply(p, x, **kw))
+    if name == "resnet18":      # paper's 11M CIFAR-100 ResNet-18
+        kw = dict(stages=(2, 2, 2, 2), widths=(64, 128, 256, 512),
+                  groups=(32, 32, 32, 32))
+        return (lambda k: resnet_init(k, num_classes, image_size, channels, **kw),
+                lambda p, x: resnet_apply(p, x, **kw))
+    if name == "vit":           # reduced-scale stand-in for ViT-B/16 + LoRA
+        kw = dict(patch=4, heads=3, depth=6)
+        return (lambda k: vit_init(k, num_classes, image_size, channels,
+                                   d=192, depth=6, heads=3),
+                lambda p, x: vit_apply(p, x, **kw))
+    raise ValueError(name)

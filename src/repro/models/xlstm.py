@@ -1,0 +1,179 @@
+"""xLSTM blocks [arXiv:2405.04517]: sLSTM (scalar memory, strictly
+sequential recurrence with exponential gating + stabilizer) and mLSTM
+(matrix memory C = f C + i v kᵀ, parallel-queryable).
+
+Both are implemented as ``lax.scan`` over time carrying O(1) state — the
+sub-quadratic property that qualifies xlstm-125m for ``long_500k``.
+(A chunked-parallel mLSTM is a recorded §Perf candidate.)
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+class MLSTMCache(NamedTuple):
+    C: jax.Array      # (B, H, dh, dh) matrix memory
+    n: jax.Array      # (B, H, dh) normalizer
+    m: jax.Array      # (B, H) log-stabilizer
+    length: jax.Array
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array      # (B, d_in) cell
+    n: jax.Array      # (B, d_in)
+    h: jax.Array      # (B, d_in) hidden (recurrent input)
+    m: jax.Array      # (B, d_in) stabilizer
+    length: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], d, 2 * d_in, dtype),       # [x_inner, z-gate]
+        "wq": dense_init(ks[1], d_in, d_in, dtype),
+        "wk": dense_init(ks[2], d_in, d_in, dtype),
+        "wv": dense_init(ks[3], d_in, d_in, dtype),
+        "w_if": dense_init(ks[4], d_in, 2 * (cfg.ssm_num_heads or cfg.num_heads),
+                           jnp.float32, bias=True),
+        "norm": rmsnorm_init(d_in, dtype),
+        "down": dense_init(ks[5], d_in, d, dtype),
+    }
+
+
+def _mlstm_step(carry, qkvif, dh):
+    C, n, m = carry
+    q, k, v, i_pre, f_pre = qkvif            # q,k,v: (B,H,dh); gates: (B,H)
+    log_f = -jax.nn.softplus(-f_pre)         # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    C = f[..., None, None] * C + i[..., None, None] * jnp.einsum("bhd,bhe->bhde", v, k)
+    n = f[..., None] * n + i[..., None] * k
+    num = jnp.einsum("bhde,bhe->bhd", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_qkvif(p, cfg, x):
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = cfg.ssm_num_heads or cfg.num_heads
+    dh = d_in // H
+    xu = dense(p["up"], x)
+    xi, z = jnp.split(xu, 2, axis=-1)
+    q = dense(p["wq"], xi).reshape(B, S, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    k = dense(p["wk"], xi).reshape(B, S, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    v = dense(p["wv"], xi).reshape(B, S, H, dh).astype(jnp.float32)
+    gif = dense(p["w_if"], xi).astype(jnp.float32).reshape(B, S, H, 2)
+    return q, k, v, gif[..., 0], gif[..., 1], z, d_in, H, dh
+
+
+def mlstm_forward(p, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    q, k, v, i_pre, f_pre, z, d_in, H, dh = _mlstm_qkvif(p, cfg, x)
+    carry = (jnp.zeros((B, H, dh, dh), jnp.float32),
+             jnp.zeros((B, H, dh), jnp.float32),
+             jnp.full((B, H), -1e30, jnp.float32))
+    xs = jax.tree.map(lambda t: t.transpose(1, 0, 2, 3) if t.ndim == 4 else t.transpose(1, 0, 2),
+                      (q, k, v, i_pre, f_pre))
+    _, hs = jax.lax.scan(lambda c, xs_t: _mlstm_step(c, xs_t, dh), carry, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d_in).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    h = rmsnorm(p["norm"], h, cfg.norm_eps)
+    return dense(p["down"], h)
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_num_heads or cfg.num_heads
+    dh = d_in // H
+    return MLSTMCache(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mlstm_decode(p, cfg: ModelConfig, x, cache: MLSTMCache):
+    B = x.shape[0]
+    q, k, v, i_pre, f_pre, z, d_in, H, dh = _mlstm_qkvif(p, cfg, x)
+    (C, n, m), h = _mlstm_step((cache.C, cache.n, cache.m),
+                               (q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]), dh)
+    h = h.reshape(B, 1, d_in).astype(x.dtype) * jax.nn.silu(z)
+    h = rmsnorm(p["norm"], h, cfg.norm_eps)
+    return dense(p["down"], h), MLSTMCache(C=C, n=n, m=m, length=cache.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_zifo": dense_init(ks[0], d, 4 * d_in, dtype, bias=True),
+        "r_zifo": dense_init(ks[1], d_in, 4 * d_in, dtype),   # recurrent
+        "norm": rmsnorm_init(d_in, dtype),
+        "down": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _slstm_step(p, cfg, carry, x_t):
+    """x_t: (B, 4*d_in) pre-projected input; carry: SLSTMCache w/o length."""
+    c, n, h_prev, m = carry
+    pre = (x_t + dense(p["r_zifo"], h_prev.astype(x_t.dtype))).astype(jnp.float32)
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    xp = dense(p["w_zifo"], x)                                  # (B,S,4*d_in)
+    carry = (jnp.zeros((B, d_in), jnp.float32), jnp.zeros((B, d_in), jnp.float32),
+             jnp.zeros((B, d_in), jnp.float32), jnp.full((B, d_in), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(lambda c, xt: _slstm_step(p, cfg, c, xt), carry,
+                         xp.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = rmsnorm(p["norm"], h, cfg.norm_eps)
+    return dense(p["down"], h)
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    d_in = cfg.ssm_expand * cfg.d_model
+    zero = jnp.zeros((batch, d_in), jnp.float32)
+    return SLSTMCache(c=zero, n=zero, h=zero,
+                      m=jnp.full((batch, d_in), -1e30, jnp.float32),
+                      length=jnp.zeros((), jnp.int32))
+
+
+def slstm_decode(p, cfg: ModelConfig, x, cache: SLSTMCache):
+    B = x.shape[0]
+    xp = dense(p["w_zifo"], x)[:, 0]
+    (c, n, h, m), h_out = _slstm_step(p, cfg, (cache.c, cache.n, cache.h, cache.m), xp)
+    y = h_out[:, None, :].astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return dense(p["down"], y), SLSTMCache(c=c, n=n, h=h, m=m, length=cache.length + 1)

@@ -1,0 +1,26 @@
+"""Plain / momentum SGD over pytrees (the paper fine-tunes with SGD, Eq. 2-3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {}
+    return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, grads, state, lr, momentum: float = 0.0,
+               weight_decay: float = 0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                             grads, params)
+    if momentum == 0.0:
+        new = jax.tree.map(lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+                           params, grads)
+        return new, state
+    mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                      state["mu"], grads)
+    new = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mu)
+    return new, {"mu": mu}

@@ -1,0 +1,92 @@
+"""Correctness of the manually-sharded (shard_map) execution paths against
+the single-device oracles — run in a subprocess with 8 forced CPU devices
+(the main pytest process must stay single-device for the smoke tests).
+
+Covers the two §Perf optimizations:
+  A. seq-sharded KV cache + distributed flash-combine decode
+  B. virtual-expert MoE (num_experts < model-axis size)
+and the standard expert-parallel MoE path.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import dist
+from repro.models import transformer as T
+from repro.models.moe import moe_init, moe_forward, _moe_local
+from repro.configs import get_smoke_config
+import dataclasses
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+ctx = dist.MeshContext(mesh=mesh, batch_axes=("data",), model_axis="model")
+
+# ---------- B/B2: MoE sharded vs local oracle ----------
+for E, name in [(8, "expert-parallel"), (2, "virtual-expert")]:
+    cfg = dataclasses.replace(get_smoke_config("mixtral-8x22b"),
+                              num_experts=E, num_experts_per_tok=2,
+                              dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, cfg.d_model))
+    with dist.mesh_context(None):
+        want, aux_want = moe_forward(p, cfg, x)
+    with dist.mesh_context(ctx), jax.set_mesh(mesh):
+        got, aux_got = jax.jit(lambda p_, x_: moe_forward(p_, cfg, x_))(p, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4, err_msg=name)
+    # aux is a per-shard-mean estimator of the global load-balance loss —
+    # equals the oracle only up to batch-split nonlinearity (~1%)
+    np.testing.assert_allclose(float(aux_got), float(aux_want), rtol=5e-2,
+                               err_msg=name)
+    print("moe", name, "ok")
+
+# ---------- A: seq-sharded decode vs replicated-cache decode ----------
+cfg = dataclasses.replace(get_smoke_config("llava-next-mistral-7b"),
+                          dtype="float32", sliding_window=None,
+                          num_heads=4, num_kv_heads=2)   # kv=2 < model=4
+key = jax.random.PRNGKey(1)
+params = T.init_params(key, cfg)
+B, S = 2, 32
+tokens = jax.random.randint(jax.random.fold_in(key, 2), (B, S), 0,
+                            cfg.vocab_size)
+
+def decode_all(use_mesh):
+    state = T.init_decode_state(params, cfg, B, S)
+    step = jax.jit(lambda p, s, t: T.decode_step(p, cfg, s, t))
+    outs = []
+    for t in range(S):
+        if use_mesh:
+            with dist.mesh_context(ctx), jax.set_mesh(mesh):
+                logits, state = step(params, state, tokens[:, t:t+1])
+        else:
+            with dist.mesh_context(None):
+                logits, state = step(params, state, tokens[:, t:t+1])
+        outs.append(np.asarray(logits))
+    return np.stack(outs)
+
+ref = decode_all(False)
+got = decode_all(True)
+np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+print("seq-sharded decode ok")
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_paths_match_oracles():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "ALL_OK" in out.stdout, out.stdout + "\n" + out.stderr[-3000:]

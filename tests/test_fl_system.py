@@ -1,0 +1,165 @@
+"""System tests for the FL substrate: failure models, partitioner
+(hypothesis invariants), aggregation, and the deterministic mechanism claim
+behind FedAuto (χ² of the effective distribution)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (aggregate_pytrees, chi2,
+                                    effective_distribution, fedauto_weights,
+                                    missing_classes)
+from repro.core.weights_qp import heuristic_weights
+from repro.fl.failures import (IntermittentFailures, MixedFailures, NoFailures,
+                               TransientFailures, intermittent_rate)
+from repro.fl.network import build_network, resource_opt, uplink_rate
+from repro.fl.partition import partition
+
+
+# ---------------------------------------------------------------------------
+# network + failures
+# ---------------------------------------------------------------------------
+def test_network_topology_matches_table6():
+    chans = build_network(20, seed=0)
+    stds = [c.standard for c in chans]
+    assert stds[:4] == ["wired"] * 4
+    assert stds[4] == "wifi24" and stds[8] == "wifi24"
+    assert stds[5] == "wifi5" and stds[6] == "4g" and stds[7] == "5g"
+    assert sum(c.indoor for c in chans) == 8
+    for c in chans:
+        if c.standard == "4g":
+            assert c.bandwidth == 1.8e6
+        if c.standard == "5g":
+            assert c.bandwidth == 2.88e6
+
+
+def test_wired_clients_never_fail_transiently():
+    chans = build_network(20, seed=0)
+    fm = TransientFailures(chans, uplink_rate(0.86e6, 0.8), seed=0)
+    draws = np.stack([fm.draw(r) for r in range(50)])
+    assert draws[:, :4].all()                      # wired always up
+    assert not draws[:, 4:].all()                  # wireless sometimes down
+
+
+def test_intermittent_rates_and_persistence():
+    assert intermittent_rate(0) == 1e-5 and intermittent_rate(19) == 1e-1
+    fm = IntermittentFailures(20, duration_max=5, seed=0)
+    draws = np.stack([fm.draw(r) for r in range(200)])
+    # high-rate clients (17-20) must fail much more often than low-rate (1-4)
+    assert draws[:, 16:].mean() < draws[:, :4].mean()
+    # once down, a client stays down for >= 1 consecutive rounds (persistence)
+    down = ~draws[:, 19]
+    assert down.any()
+
+
+def test_failure_models_reproducible():
+    chans = build_network(20, seed=0)
+    r1 = TransientFailures(chans, uplink_rate(0.86e6, 0.8), seed=3)
+    r2 = TransientFailures(chans, uplink_rate(0.86e6, 0.8), seed=3)
+    for r in range(10):
+        np.testing.assert_array_equal(r1.draw(r), r2.draw(r))
+
+
+def test_resource_opt_reduces_outage_variance():
+    chans = build_network(20, seed=0)
+    rate = uplink_rate(0.86e6, 0.8)
+    rng = np.random.default_rng(1)
+    base_eps = np.array([c.outage_probability(rate, rng, 200)
+                         for c in chans if c.standard != "wired"])
+    opt = resource_opt(chans, rate, per_standard=False, seed=1)
+    rng = np.random.default_rng(1)
+    opt_eps = np.array([c.outage_probability(rate, rng, 200)
+                        for c in opt if c.standard != "wired"])
+    sel = base_eps <= 0.9
+    assert opt_eps[sel].std() <= base_eps[sel].std() + 0.05
+
+
+# ---------------------------------------------------------------------------
+# partitioner invariants (hypothesis)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 1000), st.sampled_from(["iid", "group_classes",
+                                              "dirichlet"]))
+@settings(max_examples=20, deadline=None)
+def test_partition_invariants(seed, mode):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 400).astype(np.int64)
+    parts, hists = partition(mode, labels, 20, 10, classes_per_group=2,
+                             seed=seed)
+    assert len(parts) == 20
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert len(np.unique(all_idx)) == len(all_idx)        # no duplicates
+    assert hists.sum() == len(all_idx)
+    for p_, h in zip(parts, hists):
+        if len(p_):
+            np.testing.assert_array_equal(
+                np.bincount(labels[p_], minlength=10), h)
+    if mode == "group_classes":
+        for i, h in enumerate(hists):                     # ≤2 classes each
+            assert (h > 0).sum() <= 2
+    if mode == "iid":
+        assert len(all_idx) == 400                        # covers everything
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+def test_aggregate_pytrees_weighted_sum():
+    t1 = {"a": jnp.ones((3, 4)), "b": {"c": jnp.full((5,), 2.0)}}
+    t2 = {"a": jnp.full((3, 4), 3.0), "b": {"c": jnp.full((5,), -1.0)}}
+    out = aggregate_pytrees([t1, t2], np.array([0.25, 0.75]))
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.25 * 1 + 0.75 * 3)
+    np.testing.assert_allclose(np.asarray(out["b"]["c"]), 0.25 * 2 - 0.75)
+
+
+def test_missing_classes_detection():
+    hists = np.zeros((4, 6), dtype=np.int64)
+    hists[0, 0] = 10
+    hists[1, 1] = 10
+    hists[2, 2] = 10
+    hists[3, 3] = 10
+    received = np.array([True, True, False, False])
+    miss = missing_classes(hists, received)
+    np.testing.assert_array_equal(miss, [False, False, True, True, True, True])
+    assert missing_classes(hists, np.zeros(4, bool)).all()
+
+
+def test_fedauto_chi2_beats_heuristic_under_failures():
+    """The paper's mechanism, deterministically: with non-iid clients and
+    failures, FedAuto's effective class distribution is strictly closer (χ²)
+    to the global distribution than footnote-2 heuristic weights."""
+    rng = np.random.default_rng(0)
+    N, C = 10, 10
+    client_hists = np.zeros((N, C))
+    for i in range(N):                      # 2 classes per client
+        client_hists[i, (2 * i) % C] = 50
+        client_hists[i, (2 * i + 1) % C] = 50
+    server_hist = np.full(C, 10.0)
+    global_hist = server_hist + client_hists.sum(0)
+    alpha_g = global_hist / global_hist.sum()
+
+    connected = np.ones(N, dtype=bool)
+    connected[[2, 3, 7]] = False            # classes {4..7} & {14..} lost
+
+    # FedAuto rows: server + comp(missing classes) + connected clients
+    miss = missing_classes(client_hists, connected)
+    comp_hist = np.where(miss, server_hist, 0.0)
+    rows = [server_hist / server_hist.sum(), comp_hist / comp_hist.sum()]
+    rows += [client_hists[i] / client_hists[i].sum()
+             for i in range(N) if connected[i]]
+    rows = np.stack(rows)
+    beta = fedauto_weights(rows, alpha_g, np.ones(len(rows), bool), 0)
+    eff_auto = effective_distribution(beta, rows)
+
+    # heuristic (FedAvg) rows: server + connected clients, footnote-2 weights
+    p = np.concatenate([[0.1], np.full(N, 0.9 / N)])
+    mask = np.concatenate([[True], connected])
+    hbeta = heuristic_weights(p, mask, 0, full_participation=True)
+    hrows = np.vstack([server_hist / server_hist.sum(),
+                       client_hists / np.maximum(
+                           client_hists.sum(1, keepdims=True), 1)])
+    eff_heur = effective_distribution(hbeta, hrows)
+
+    chi_auto = chi2(alpha_g, eff_auto)
+    chi_heur = chi2(alpha_g, eff_heur)
+    assert chi_auto < 0.25 * chi_heur       # decisive improvement
+    assert beta.min() >= -1e-6 and abs(beta.sum() - 1) < 1e-4
