@@ -23,7 +23,10 @@ from repro.models.vision import make_model
 
 def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
                  model: str = "cnn", k_selected: Optional[int] = None,
-                 resource_opt: Optional[str] = None, seed: int = 0):
+                 resource_opt: Optional[str] = None, seed: int = 0,
+                 deadline_s: Optional[float] = None,
+                 trace_record: Optional[str] = None,
+                 trace_replay: Optional[str] = None):
     n_clients = 8 if quick else 20
     n_classes = 4 if quick else 10
     img = 8 if quick else 16
@@ -53,7 +56,11 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
         seed=seed,
         eval_every=10 ** 6,
         model_bytes=0.2e6 if quick else 0.86e6,
+        trace_record=trace_record,
+        trace_replay=trace_replay,
     )
+    if deadline_s is not None:
+        cfg.deadline_s = deadline_s
     runner = FFTRunner(cfg, init_fn, apply_fn, pub, parts, priv, test,
                        lora_cfg=lora_cfg, pretrain_steps=30 if quick else 100)
     return runner

@@ -15,9 +15,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_aggregation, bench_convergence,
-                            bench_kernels, bench_resourceopt, bench_table1,
-                            bench_table2, bench_table3, bench_table4,
-                            bench_table5, roofline)
+                            bench_kernels, bench_resourceopt, bench_scenarios,
+                            bench_table1, bench_table2, bench_table3,
+                            bench_table4, bench_table5, roofline)
     benches = {
         "kernels": bench_kernels,
         "aggregation": bench_aggregation,
@@ -28,6 +28,7 @@ def main() -> None:
         "table4": bench_table4,
         "table5": bench_table5,
         "resourceopt": bench_resourceopt,
+        "scenarios": bench_scenarios,
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else None

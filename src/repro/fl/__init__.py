@@ -1,1 +1,2 @@
-from repro.fl import failures, lora, network, parallel, partition, runtime  # noqa: F401
+from repro.fl import (failures, lora, network, parallel, partition,  # noqa: F401
+                      runtime, scenarios)

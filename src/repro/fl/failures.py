@@ -5,6 +5,8 @@
   1 − exp(−λ_i (r − r_0)) (Eq. 42); once triggered the disconnection lasts
   Uniform[1, duration_max] rounds (paper: [1, 100/α]).
 * Mixed — union of both.
+* scenario:<name> / replay:<path> — deadline-based scenario worlds and
+  bit-exact trace replay from ``repro.fl.scenarios``.
 
 All models expose ``draw(round) -> np.ndarray[bool]`` (True = CONNECTED),
 require no prior-knowledge hooks (FedAuto never reads their internals), and
@@ -46,7 +48,11 @@ class TransientFailures(FailureModel):
                  seed: int = 0):
         self.channels = channels
         self.rate = rate_bps
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.reset()
+
+    def reset(self) -> None:
+        self.rng = np.random.default_rng(self.seed)
 
     def draw(self, r: int) -> np.ndarray:
         return np.array([c.capacity(self.rng) > self.rate for c in self.channels])
@@ -61,10 +67,13 @@ class IntermittentFailures(FailureModel):
         self.duration_max = duration_max
         self.rates = rates if rates is not None else np.array(
             [intermittent_rate(i) for i in range(n)])
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
         self.reset()
 
     def reset(self) -> None:
+        # reseed so reset() restores the full realization, matching the
+        # scenario models' reproducibility contract
+        self.rng = np.random.default_rng(self.seed)
         self.last_recovery = np.zeros(self.n, dtype=int)
         self.down_until = -np.ones(self.n, dtype=int)
 
@@ -95,13 +104,30 @@ class MixedFailures(FailureModel):
         return self.t.draw(r) & self.i.draw(r)
 
     def reset(self) -> None:
+        self.t.reset()
         self.i.reset()
 
 
 def make_failure_model(mode: str, channels: List[ClientChannel],
                        rate_bps: float, *, duration_max: int = 10,
-                       seed: int = 0) -> FailureModel:
+                       seed: int = 0, model_bytes: Optional[float] = None,
+                       deadline_s: Optional[float] = None,
+                       compute_s: float = 2.0) -> FailureModel:
     n = len(channels)
+    if mode.startswith("scenario:"):
+        # Deadline-based scenario worlds (repro.fl.scenarios). Imported here
+        # to keep failures.py import-light and cycle-free.
+        from repro.fl import scenarios as scen
+        if model_bytes is None or deadline_s is None:
+            raise ValueError("scenario:* failure modes need model_bytes "
+                             "and deadline_s")
+        return scen.make_scenario_model(
+            mode.split(":", 1)[1], n, model_bytes=model_bytes,
+            deadline_s=deadline_s, compute_s=compute_s, seed=seed,
+            channels=channels)
+    if mode.startswith("replay:"):
+        from repro.fl.scenarios import ReplayFailureModel
+        return ReplayFailureModel(mode.split(":", 1)[1], n_clients=n)
     if mode == "none":
         return NoFailures(n)
     if mode == "transient":

@@ -35,7 +35,8 @@ class FFTConfig:
     batch_size: int = 32
     lr: float = 0.05
     lr_boundary: Optional[int] = None     # step decay at this round
-    failure_mode: str = "mixed"           # none | transient | intermittent | mixed
+    failure_mode: str = "mixed"           # none | transient | intermittent |
+    #                                       mixed | scenario:<name> | replay:<path>
     duration_max: int = 10
     model_bytes: float = 0.86e6
     tx_delay_s: float = 0.8
@@ -43,6 +44,12 @@ class FFTConfig:
     seed: int = 0
     eval_every: int = 10
     eval_batch: int = 256
+    # --- scenario engine (repro.fl.scenarios) ---------------------------------
+    deadline_s: float = 30.0              # server round timeout (scenario modes)
+    compute_s: float = 2.0                # mean local-compute wall-clock per round
+    trace_record: Optional[str] = None    # NDJSON path: record realized rounds
+    trace_replay: Optional[str] = None    # NDJSON path: replay (overrides
+    #                                       failure_mode)
 
 
 class FFTRunner:
@@ -110,9 +117,14 @@ class FFTRunner:
             self.channels = net_mod.resource_opt(
                 self.channels, rate, per_standard=cfg.resource_opt == "per_standard",
                 seed=cfg.seed)
+        mode = (f"replay:{cfg.trace_replay}" if cfg.trace_replay
+                else cfg.failure_mode)
+        self.failure_mode_resolved = mode
         self.failures = fail_mod.make_failure_model(
-            cfg.failure_mode, self.channels, rate,
-            duration_max=cfg.duration_max, seed=cfg.seed)
+            mode, self.channels, rate,
+            duration_max=cfg.duration_max, seed=cfg.seed,
+            model_bytes=cfg.model_bytes, deadline_s=cfg.deadline_s,
+            compute_s=cfg.compute_s)
         mc = np.random.default_rng(cfg.seed + 7)
         self.eps_estimates = np.array([
             c.outage_probability(rate, mc, 200) for c in self.channels])
@@ -241,13 +253,44 @@ class FFTRunner:
             correct += int(self._accuracy_batch(t, x, y))
         return correct / n
 
+    def _draw_network(self, r: int):
+        """(up, met_deadline, RoundEvents|None) for round ``r``.
+
+        Scenario/replay models expose full per-client timing via
+        ``draw_events``; legacy models have no time dimension, so every
+        surviving draw trivially meets the deadline."""
+        if hasattr(self.failures, "draw_events"):
+            events = self.failures.draw_events(r)
+            return events.up_mask(), events.deadline_mask(), events
+        up = self.failures.draw(r)
+        return up, np.ones(self.n_clients, dtype=bool), None
+
     # ------------------------------------------------------------------ run
     def run(self, strategy: Strategy, rounds: int,
             log: Optional[Callable[[int, float], None]] = None) -> List[float]:
         strategy.init_state(self)
         self.failures.reset()
+        tracer = None
+        if self.cfg.trace_record:
+            from repro.fl.scenarios.trace import TraceRecorder
+            # resolved mode: a replayed run's re-recording must name the
+            # replay source, not the scenario the config nominally asked for
+            tracer = TraceRecorder(self.cfg.trace_record, {
+                "scenario": self.failure_mode_resolved,
+                "n_clients": self.n_clients,
+                "deadline_s": self.cfg.deadline_s,
+                "model_bytes": self.cfg.model_bytes,
+                "seed": self.cfg.seed})
         history: List[float] = []
         full = self.k_selected >= self.n_clients
+        try:
+            self._run_rounds(strategy, rounds, full, history, tracer, log)
+        finally:
+            if tracer is not None:
+                tracer.close()
+        return history
+
+    def _run_rounds(self, strategy, rounds, full, history, tracer, log):
         for r in range(1, rounds + 1):
             if full:
                 selected = np.ones(self.n_clients, dtype=bool)
@@ -256,8 +299,11 @@ class FFTRunner:
                                       replace=False)
                 selected = np.zeros(self.n_clients, dtype=bool)
                 selected[sel] = True
-            up = self.failures.draw(r)
-            connected = selected & up
+            up, met_deadline, events = self._draw_network(r)
+            connected = selected & up & met_deadline
+            if tracer is not None:
+                tracer.write_round(r, selected, connected, events,
+                                   up=up, met_deadline=met_deadline)
 
             t_global = self.global_params
             client_models: Dict[int, Any] = {}
@@ -285,4 +331,3 @@ class FFTRunner:
                 history.append(acc)
                 if log:
                     log(r, acc)
-        return history

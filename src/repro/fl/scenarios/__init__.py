@@ -1,0 +1,43 @@
+"""Event-driven network scenario engine (deadline rounds + trace replay).
+
+Three layers:
+
+* ``worlds``  — registry of named stochastic network worlds
+  (``scenario:<name>`` in ``FFTConfig.failure_mode``).
+* ``engine``  — discrete-event wall-clock simulator turning link capacities
+  into upload durations; a server deadline decides participation.
+* ``trace``   — NDJSON record/replay of realized rounds, bit-exact.
+"""
+from repro.fl.scenarios.engine import (CAUSE_DEADLINE, CAUSE_LINK_DOWN,
+                                       CAUSE_OK, ClientRoundEvent,
+                                       DeadlineSimulator, LinkState,
+                                       RoundEvents, ScenarioFailureModel)
+from repro.fl.scenarios.trace import (ReplayFailureModel, TraceRecorder,
+                                      load_trace)
+from repro.fl.scenarios.worlds import (SCENARIOS, Scenario,
+                                       available_scenarios, make_scenario,
+                                       register)
+
+__all__ = [
+    "CAUSE_DEADLINE", "CAUSE_LINK_DOWN", "CAUSE_OK", "ClientRoundEvent",
+    "DeadlineSimulator", "LinkState", "RoundEvents", "ScenarioFailureModel",
+    "ReplayFailureModel", "TraceRecorder", "load_trace",
+    "SCENARIOS", "Scenario", "available_scenarios", "make_scenario",
+    "register", "make_scenario_model",
+]
+
+
+def make_scenario_model(name: str, n_clients: int, *, model_bytes: float,
+                        deadline_s: float, compute_s: float = 2.0,
+                        seed: int = 0, channels=None,
+                        **scenario_kwargs) -> ScenarioFailureModel:
+    """Scenario world + deadline simulator, wired as a ``FailureModel``.
+
+    ``channels`` forwards the runner's physical channel list (including any
+    ResourceOpt intervention) to worlds grounded in the path-loss model."""
+    scenario = make_scenario(name, n_clients, seed=seed, channels=channels,
+                             **scenario_kwargs)
+    sim = DeadlineSimulator(n_clients, model_bytes=model_bytes,
+                            deadline_s=deadline_s, compute_s=compute_s,
+                            seed=seed + 1)
+    return ScenarioFailureModel(scenario, sim)

@@ -1,0 +1,233 @@
+"""Discrete-event wall-clock round simulator.
+
+Turns per-round link states (capacity, up/down) into a timeline of
+DOWNLOAD_DONE / COMPUTE_DONE / UPLOAD_DONE events per client, processed in
+time order against a server DEADLINE event.  A client participates in the
+round iff its link is up *and* its upload completes before the deadline —
+this subsumes the seed's transient outage model (capacity ≈ 0 ⇒ upload never
+finishes) and adds the time dimension: slow links and compute stragglers are
+dropped exactly like dead ones, which is what a real synchronous FFT server
+with a round timeout does.
+
+The engine is deliberately separate from the scenario worlds
+(``repro.fl.scenarios.worlds``): a ``Scenario`` describes *what the network
+does*, the ``DeadlineSimulator`` describes *what time does to it*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import List, Optional
+
+import numpy as np
+
+from repro.fl.failures import FailureModel
+
+# Event kinds, in per-client causal order.
+DOWNLOAD_DONE = "download_done"
+COMPUTE_DONE = "compute_done"
+UPLOAD_DONE = "upload_done"
+DEADLINE = "deadline"
+
+# Participation causes recorded per client per round.
+CAUSE_OK = "ok"                 # upload finished before the deadline
+CAUSE_LINK_DOWN = "link_down"   # scenario reported the link down (scenario
+#                                 worlds refine this: "ap_outage", "handover",
+#                                 "churned", "weather", ...)
+CAUSE_DEADLINE = "deadline"     # link up but upload finished too late
+
+
+@dataclasses.dataclass
+class LinkState:
+    """One client's network condition for one round (scenario output)."""
+    capacity_bps: float          # uplink Shannon capacity; inf for wired-like
+    up: bool = True              # False = hard outage for the whole round
+    cause: str = CAUSE_OK        # refined cause when ``up`` is False
+    downlink_ratio: float = 8.0  # downlink capacity = ratio * uplink
+
+
+@dataclasses.dataclass
+class ClientRoundEvent:
+    """Resolved participation of one client in one round."""
+    client: int
+    capacity_bps: float
+    up: bool
+    t_download_s: float
+    t_compute_s: float
+    t_upload_s: float
+    finish_s: float              # download + compute + upload (inf if down)
+    met_deadline: bool
+    cause: str
+
+    @property
+    def connected(self) -> bool:
+        return self.up and self.met_deadline
+
+
+@dataclasses.dataclass
+class RoundEvents:
+    """Everything the server observed about one round."""
+    rnd: int
+    deadline_s: float
+    events: List[ClientRoundEvent]
+    duration_s: float            # wall-clock the server waited
+
+    def up_mask(self) -> np.ndarray:
+        return np.array([e.up for e in self.events], dtype=bool)
+
+    def deadline_mask(self) -> np.ndarray:
+        return np.array([e.met_deadline for e in self.events], dtype=bool)
+
+    def connected_mask(self) -> np.ndarray:
+        return self.up_mask() & self.deadline_mask()
+
+    def server_wait(self, selected: Optional[np.ndarray] = None) -> float:
+        """Wall-clock the server waited on the given cohort: the last
+        upload's landing time if every selected client delivered, else the
+        full deadline (a missing straggler is indistinguishable from a dead
+        link until the timeout)."""
+        events = self.events if selected is None else [
+            e for e, s in zip(self.events, selected) if s]
+        if not events:
+            return 0.0
+        if all(e.connected for e in events):
+            return float(max(e.finish_s for e in events))
+        return self.deadline_s
+
+
+class DeadlineSimulator:
+    """Event-driven timing model for one FFT round.
+
+    Per client: download the global model, run E local steps, upload the
+    update.  Compute speed is heterogeneous (persistent per-client lognormal
+    straggler factor) with per-round jitter.  All phase completions are
+    pushed onto one event heap together with the server deadline; clients
+    whose UPLOAD_DONE pops after DEADLINE are dropped.
+    """
+
+    def __init__(self, n_clients: int, *, model_bytes: float,
+                 deadline_s: float, compute_s: float = 2.0,
+                 hetero_sigma: float = 0.4, jitter_sigma: float = 0.1,
+                 seed: int = 0):
+        self.n_clients = n_clients
+        self.model_bytes = model_bytes
+        self.deadline_s = deadline_s
+        self.compute_s = compute_s
+        self.hetero_sigma = hetero_sigma
+        self.jitter_sigma = jitter_sigma
+        self.seed = seed
+        self.reset()
+
+    def reset(self) -> None:
+        self.rng = np.random.default_rng(self.seed)
+        # Persistent hardware heterogeneity: factor ~ lognormal, median 1.
+        self.speed = np.exp(self.rng.normal(0.0, self.hetero_sigma,
+                                            self.n_clients))
+
+    # ------------------------------------------------------------------ core
+    def _phase_durations(self, i: int, link: LinkState):
+        bits = self.model_bytes * 8.0
+        if not link.up:
+            return math.inf, math.inf, math.inf
+        cap = max(link.capacity_bps, 1e-9)
+        t_ul = 0.0 if math.isinf(cap) else bits / cap
+        dl_cap = cap * max(link.downlink_ratio, 1e-9)
+        t_dl = 0.0 if math.isinf(dl_cap) else bits / dl_cap
+        jitter = math.exp(self.rng.normal(0.0, self.jitter_sigma))
+        t_cp = self.compute_s * self.speed[i] * jitter
+        return t_dl, t_cp, t_ul
+
+    def simulate_round(self, rnd: int, links: List[LinkState],
+                       deadline_s: Optional[float] = None) -> RoundEvents:
+        """Run the event loop for one round; returns resolved participation."""
+        deadline = self.deadline_s if deadline_s is None else deadline_s
+        heap: List[tuple] = []
+        seq = 0
+        heapq.heappush(heap, (deadline, seq, -1, DEADLINE))
+        finish = np.full(self.n_clients, math.inf)
+        durations = {}
+        for i, link in enumerate(links):
+            t_dl, t_cp, t_ul = self._phase_durations(i, link)
+            durations[i] = (t_dl, t_cp, t_ul)
+            if link.up and math.isfinite(t_dl):
+                seq += 1
+                heapq.heappush(heap, (t_dl, seq, i, DOWNLOAD_DONE))
+
+        deadline_hit = False
+        met = np.zeros(self.n_clients, dtype=bool)
+        while heap:
+            t, _, i, kind = heapq.heappop(heap)
+            if kind == DEADLINE:
+                deadline_hit = True
+                # Events after the deadline can only be late uploads; nothing
+                # further changes participation, so the loop may drain fast.
+                continue
+            t_dl, t_cp, t_ul = durations[i]
+            if kind == DOWNLOAD_DONE:
+                if math.isfinite(t_cp):
+                    seq += 1
+                    heapq.heappush(heap, (t + t_cp, seq, i, COMPUTE_DONE))
+            elif kind == COMPUTE_DONE:
+                if math.isfinite(t_ul):
+                    seq += 1
+                    heapq.heappush(heap, (t + t_ul, seq, i, UPLOAD_DONE))
+            elif kind == UPLOAD_DONE:
+                finish[i] = t
+                if not deadline_hit:
+                    met[i] = True
+
+        events = []
+        for i, link in enumerate(links):
+            t_dl, t_cp, t_ul = durations[i]
+            if not link.up:
+                cause = link.cause if link.cause != CAUSE_OK else CAUSE_LINK_DOWN
+            elif met[i]:
+                cause = CAUSE_OK
+            else:
+                cause = CAUSE_DEADLINE
+            events.append(ClientRoundEvent(
+                client=i, capacity_bps=float(link.capacity_bps), up=link.up,
+                t_download_s=t_dl, t_compute_s=t_cp, t_upload_s=t_ul,
+                finish_s=float(finish[i]), met_deadline=bool(met[i]),
+                cause=cause))
+        # Full-cohort wait (all clients treated as selected); callers that
+        # know the actual selection use RoundEvents.server_wait(selected).
+        out = RoundEvents(rnd=rnd, deadline_s=deadline, events=events,
+                          duration_s=0.0)
+        out.duration_s = out.server_wait()
+        return out
+
+
+class ScenarioFailureModel(FailureModel):
+    """Adapter: (Scenario world × DeadlineSimulator) → ``FailureModel``.
+
+    ``draw(r)`` keeps the seed contract (True = connected) so every existing
+    strategy works unchanged; ``draw_events(r)`` exposes the full timing
+    detail for the runtime's ``connected = selected & up & met_deadline``
+    split and for trace recording.
+    """
+
+    def __init__(self, scenario, sim: DeadlineSimulator):
+        self.scenario = scenario
+        self.sim = sim
+        self._cache: dict = {}
+
+    def reset(self) -> None:
+        self.scenario.reset()
+        self.sim.reset()
+        self._cache.clear()
+
+    def draw_events(self, r: int) -> RoundEvents:
+        # Cache keyed by round: repeated draws of a past round return the
+        # recorded realization instead of re-advancing the scenario's Markov
+        # state.  First-time draws must still arrive in round order — the
+        # worlds are stateful processes, so sampling round 7 before round 3
+        # would hand round 3 the round-8 state.
+        if r not in self._cache:
+            links = self.scenario.sample_round(r)
+            self._cache[r] = self.sim.simulate_round(r, links)
+        return self._cache[r]
+
+    def draw(self, r: int) -> np.ndarray:
+        return self.draw_events(r).connected_mask()

@@ -1,0 +1,200 @@
+"""NDJSON network-trace schema with record/replay.
+
+A trace freezes one *realization* of a failure process so it can be saved,
+shared, and replayed bit-exactly — operationalizing the paper's
+per-realization convergence claim: two runs that replay the same trace see
+the identical sequence of ``connected`` masks.
+
+Schema (one JSON object per line):
+
+  {"record": "header", "version": 1, "scenario": "...", "n_clients": N,
+   "deadline_s": ..., "model_bytes": ..., "seed": ...}
+  {"record": "round", "round": r, "deadline_s": ..., "duration_s": ...,
+   "clients": [{"id": i, "capacity_bps": ..., "up": true,
+                "duration_s": ..., "selected": true, "met_deadline": true,
+                "connected": true, "cause": "ok"}, ...]}
+
+``capacity_bps``/``duration_s`` are null for legacy failure models that have
+no timing semantics; ``connected`` is always present, so any model's
+realization is replayable.  Infinities are serialized as the string "inf"
+(JSON has no Infinity literal).
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.fl.failures import FailureModel
+from repro.fl.scenarios.engine import (CAUSE_OK, ClientRoundEvent,
+                                       RoundEvents)
+
+TRACE_VERSION = 1
+
+
+def _num(x) -> object:
+    """JSON-safe float: inf/nan become strings, None passes through."""
+    if x is None:
+        return None
+    x = float(x)
+    if math.isinf(x):
+        return "inf" if x > 0 else "-inf"
+    if math.isnan(x):
+        return None
+    return x
+
+
+def _unnum(x) -> Optional[float]:
+    if x is None:
+        return None
+    if x == "inf":
+        return math.inf
+    if x == "-inf":
+        return -math.inf
+    return float(x)
+
+
+class TraceRecorder:
+    """Append-per-round NDJSON writer.  Opens fresh (truncates) so one file
+    always holds exactly one realization."""
+
+    def __init__(self, path: str, header: Dict):
+        self.path = path
+        self._fh = open(path, "w")
+        hdr = {"record": "header", "version": TRACE_VERSION}
+        hdr.update(header)
+        hdr["model_bytes"] = _num(hdr.get("model_bytes"))
+        hdr["deadline_s"] = _num(hdr.get("deadline_s"))
+        self._fh.write(json.dumps(hdr) + "\n")
+
+    def write_round(self, rnd: int, selected: np.ndarray,
+                    connected: np.ndarray, events: Optional[RoundEvents],
+                    up: Optional[np.ndarray] = None,
+                    met_deadline: Optional[np.ndarray] = None) -> None:
+        """``up``/``met_deadline`` carry the failure draw for legacy models
+        (no ``events``); without them replay would fabricate connectivity
+        for clients that were down but unselected."""
+        clients = []
+        n = len(selected)
+        for i in range(n):
+            if events is not None:
+                e = events.events[i]
+                row = {"id": i, "capacity_bps": _num(e.capacity_bps),
+                       "up": bool(e.up), "duration_s": _num(e.finish_s),
+                       "selected": bool(selected[i]),
+                       "met_deadline": bool(e.met_deadline),
+                       "connected": bool(connected[i]), "cause": e.cause}
+            else:
+                up_i = bool(up[i]) if up is not None else (
+                    bool(connected[i]) or not bool(selected[i]))
+                met_i = bool(met_deadline[i]) if met_deadline is not None \
+                    else True
+                row = {"id": i, "capacity_bps": None, "up": up_i,
+                       "duration_s": None, "selected": bool(selected[i]),
+                       "met_deadline": met_i,
+                       "connected": bool(connected[i]),
+                       "cause": CAUSE_OK if up_i and met_i else "outage"}
+            clients.append(row)
+        rec = {"record": "round", "round": int(rnd),
+               "deadline_s": _num(events.deadline_s if events else None),
+               # server wait over the round's actual cohort, not all clients
+               "duration_s": _num(events.server_wait(selected)
+                                  if events else None),
+               "clients": clients}
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        if not self._fh.closed:
+            self._fh.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def load_trace(path: str):
+    """Parse a trace file -> (header dict, {round -> round dict})."""
+    header: Optional[Dict] = None
+    rounds: Dict[int, Dict] = {}
+    with open(path) as fh:
+        for line_no, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            kind = rec.get("record")
+            if kind == "header":
+                if rec.get("version") != TRACE_VERSION:
+                    raise ValueError(
+                        f"{path}:{line_no}: unsupported trace version "
+                        f"{rec.get('version')!r} (want {TRACE_VERSION})")
+                header = rec
+            elif kind == "round":
+                rounds[int(rec["round"])] = rec
+            else:
+                raise ValueError(f"{path}:{line_no}: unknown record {kind!r}")
+    if header is None:
+        raise ValueError(f"{path}: missing header record")
+    return header, rounds
+
+
+class ReplayFailureModel(FailureModel):
+    """Replays a recorded trace bit-exactly.
+
+    ``draw(r)`` / ``draw_events(r)`` return exactly what was recorded for
+    round ``r`` — no randomness at all, so every strategy sees the identical
+    failure realization the original run saw.
+    """
+
+    def __init__(self, path: str, n_clients: Optional[int] = None):
+        self.path = path
+        self.header, self._rounds = load_trace(path)
+        if self.header.get("n_clients"):
+            self.n = int(self.header["n_clients"])
+        elif self._rounds:
+            self.n = len(next(iter(self._rounds.values()))["clients"])
+        else:
+            raise ValueError(f"trace {path}: header lacks n_clients and no "
+                             f"rounds are recorded")
+        if n_clients is not None and n_clients != self.n:
+            raise ValueError(
+                f"trace {path} has {self.n} clients, runner has {n_clients}")
+
+    def rounds_available(self) -> List[int]:
+        return sorted(self._rounds)
+
+    def _round(self, r: int) -> Dict:
+        if r not in self._rounds:
+            raise ValueError(
+                f"trace {self.path} has no round {r} "
+                f"(recorded rounds: {min(self._rounds)}..{max(self._rounds)})")
+        return self._rounds[r]
+
+    def draw_events(self, r: int) -> RoundEvents:
+        rec = self._round(r)
+        def val(x, default):
+            return x if x is not None else default
+
+        events = []
+        for c in sorted(rec["clients"], key=lambda c: c["id"]):
+            events.append(ClientRoundEvent(
+                client=int(c["id"]),
+                capacity_bps=val(_unnum(c.get("capacity_bps")), 0.0),
+                up=bool(c["up"]), t_download_s=0.0, t_compute_s=0.0,
+                t_upload_s=0.0,
+                finish_s=val(_unnum(c.get("duration_s")), math.inf),
+                met_deadline=bool(c.get("met_deadline", c["connected"])),
+                cause=str(c.get("cause", CAUSE_OK))))
+        return RoundEvents(
+            rnd=r, deadline_s=val(_unnum(rec.get("deadline_s")), math.inf),
+            events=events,
+            duration_s=val(_unnum(rec.get("duration_s")), 0.0))
+
+    def draw(self, r: int) -> np.ndarray:
+        ev = self.draw_events(r)
+        return ev.up_mask() & ev.deadline_mask()

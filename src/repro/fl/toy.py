@@ -1,0 +1,31 @@
+"""Small self-contained FFT problems for examples and tests.
+
+One factory instead of each caller hand-rolling the
+dataset → split → partition → model → runner pipeline (the full-size
+benchmark variant with LoRA/ResourceOpt knobs lives in
+``benchmarks.common.make_problem``).
+"""
+from __future__ import annotations
+
+from repro.data.synthetic import fft_split, make_dataset, train_test_split
+from repro.fl.partition import partition
+from repro.fl.runtime import FFTConfig, FFTRunner
+
+
+def make_toy_runner(cfg: FFTConfig, *, n_samples: int = 1500,
+                    n_classes: int = 4, image_size: int = 8,
+                    public_per_class: int = 15,
+                    pretrain_steps: int = 30, seed: int = 0) -> FFTRunner:
+    """CNN on a synthetic class-structured dataset, non-iid group split."""
+    from repro.models.vision import make_model
+    ds = make_dataset(n_samples, n_classes=n_classes, image_size=image_size,
+                      channels=1, seed=seed)
+    train, test = train_test_split(ds, n_samples // 5, seed=seed + 1)
+    public, private = fft_split(train, public_per_class=public_per_class,
+                                seed=seed)
+    parts, _ = partition("group_classes", private.y, cfg.n_clients,
+                         n_classes, classes_per_group=1, group_size=2,
+                         seed=seed)
+    init_fn, apply_fn = make_model("cnn", n_classes, image_size, 1)
+    return FFTRunner(cfg, init_fn, apply_fn, public, parts, private, test,
+                     pretrain_steps=pretrain_steps)

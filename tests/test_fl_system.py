@@ -1,10 +1,10 @@
-"""System tests for the FL substrate: failure models, partitioner
-(hypothesis invariants), aggregation, and the deterministic mechanism claim
-behind FedAuto (χ² of the effective distribution)."""
+"""System tests for the FL substrate: failure models, partitioner,
+aggregation, and the deterministic mechanism claim behind FedAuto (χ² of
+the effective distribution).  Hypothesis-based partition invariants live in
+``tests/test_hypothesis_properties.py`` so this module always collects."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.aggregation import (aggregate_pytrees, chi2,
                                     effective_distribution, fedauto_weights,
@@ -60,6 +60,19 @@ def test_failure_models_reproducible():
         np.testing.assert_array_equal(r1.draw(r), r2.draw(r))
 
 
+def test_failure_reset_restores_realization():
+    """reset() must replay the identical realization (the contract
+    FFTRunner.run relies on when comparing strategies)."""
+    chans = build_network(8, seed=0)
+    rate = uplink_rate(0.86e6, 0.8)
+    fm = MixedFailures(TransientFailures(chans, rate, seed=1),
+                       IntermittentFailures(8, duration_max=5, seed=2))
+    a = np.stack([fm.draw(r) for r in range(20)])
+    fm.reset()
+    b = np.stack([fm.draw(r) for r in range(20)])
+    np.testing.assert_array_equal(a, b)
+
+
 def test_resource_opt_reduces_outage_variance():
     chans = build_network(20, seed=0)
     rate = uplink_rate(0.86e6, 0.8)
@@ -75,16 +88,14 @@ def test_resource_opt_reduces_outage_variance():
 
 
 # ---------------------------------------------------------------------------
-# partitioner invariants (hypothesis)
+# partitioner smoke (full hypothesis sweep in test_hypothesis_properties.py)
 # ---------------------------------------------------------------------------
-@given(st.integers(0, 1000), st.sampled_from(["iid", "group_classes",
-                                              "dirichlet"]))
-@settings(max_examples=20, deadline=None)
-def test_partition_invariants(seed, mode):
-    rng = np.random.default_rng(seed)
+@pytest.mark.parametrize("mode", ["iid", "group_classes", "dirichlet"])
+def test_partition_basic_invariants(mode):
+    rng = np.random.default_rng(0)
     labels = rng.integers(0, 10, 400).astype(np.int64)
     parts, hists = partition(mode, labels, 20, 10, classes_per_group=2,
-                             seed=seed)
+                             seed=0)
     assert len(parts) == 20
     all_idx = np.concatenate([p for p in parts if len(p)])
     assert len(np.unique(all_idx)) == len(all_idx)        # no duplicates
@@ -94,7 +105,7 @@ def test_partition_invariants(seed, mode):
             np.testing.assert_array_equal(
                 np.bincount(labels[p_], minlength=10), h)
     if mode == "group_classes":
-        for i, h in enumerate(hists):                     # ≤2 classes each
+        for h in hists:                                   # ≤2 classes each
             assert (h > 0).sum() <= 2
     if mode == "iid":
         assert len(all_idx) == 400                        # covers everything

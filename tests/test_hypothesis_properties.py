@@ -1,0 +1,125 @@
+"""All hypothesis property tests, gated behind ``pytest.importorskip`` so
+the rest of the suite collects and runs on environments without hypothesis
+(install it via ``pip install -r requirements-dev.txt``).
+
+Moved here from test_fl_system / test_qp_solver / test_kernels, which keep
+deterministic variants of the same invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.weights_qp import (chi2_effective, project_simplex,  # noqa: E402
+                                   solve_weights)
+from repro.fl.partition import partition  # noqa: E402
+from repro.kernels.fedagg import fedagg  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# partitioner invariants (from test_fl_system)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 1000), st.sampled_from(["iid", "group_classes",
+                                              "dirichlet"]))
+@settings(max_examples=20, deadline=None)
+def test_partition_invariants(seed, mode):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 400).astype(np.int64)
+    parts, hists = partition(mode, labels, 20, 10, classes_per_group=2,
+                             seed=seed)
+    assert len(parts) == 20
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert len(np.unique(all_idx)) == len(all_idx)        # no duplicates
+    assert hists.sum() == len(all_idx)
+    for p_, h in zip(parts, hists):
+        if len(p_):
+            np.testing.assert_array_equal(
+                np.bincount(labels[p_], minlength=10), h)
+    if mode == "group_classes":
+        for i, h in enumerate(hists):                     # ≤2 classes each
+            assert (h > 0).sum() <= 2
+    if mode == "iid":
+        assert len(all_idx) == 400                        # covers everything
+
+
+# ---------------------------------------------------------------------------
+# QP solver invariants (from test_qp_solver)
+# ---------------------------------------------------------------------------
+def _random_problem(rng, J, C):
+    alpha = rng.dirichlet(np.ones(C) * 0.5, size=J)
+    p = rng.dirichlet(np.ones(J))
+    alpha_g = p @ alpha
+    return alpha, alpha_g
+
+
+@st.composite
+def qp_problems(draw):
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    J = draw(st.integers(2, 12))
+    C = draw(st.integers(2, 20))
+    n_active = draw(st.integers(1, J))
+    rng = np.random.default_rng(seed)
+    alpha, alpha_g = _random_problem(rng, J, C)
+    mask = np.zeros(J, dtype=bool)
+    mask[rng.choice(J, n_active, replace=False)] = True
+    mask[0] = True                      # server always present
+    return alpha, alpha_g, mask
+
+
+@given(qp_problems())
+@settings(max_examples=25, deadline=None)
+def test_solver_feasibility(problem):
+    alpha, alpha_g, mask = problem
+    beta = np.asarray(solve_weights(jnp.asarray(alpha), jnp.asarray(alpha_g),
+                                    jnp.asarray(mask)))
+    assert np.all(beta >= -1e-6)
+    assert abs(beta.sum() - 1.0) < 1e-4
+    assert np.all(beta[~mask] <= 1e-6)          # Eq. (10c)
+
+
+@given(qp_problems())
+@settings(max_examples=15, deadline=None)
+def test_solver_no_worse_than_uniform(problem):
+    alpha, alpha_g, mask = problem
+    beta = np.asarray(solve_weights(jnp.asarray(alpha), jnp.asarray(alpha_g),
+                                    jnp.asarray(mask)))
+    uni = np.where(mask, 1.0 / mask.sum(), 0.0)
+    f_beta = float(chi2_effective(jnp.asarray(beta), jnp.asarray(alpha),
+                                  jnp.asarray(alpha_g)))
+    f_uni = float(chi2_effective(jnp.asarray(uni), jnp.asarray(alpha),
+                                 jnp.asarray(alpha_g)))
+    assert f_beta <= f_uni + 1e-5
+
+
+@given(st.integers(0, 10_000), st.integers(2, 16))
+@settings(max_examples=30, deadline=None)
+def test_simplex_projection_properties(seed, n):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(0, 3, n)
+    mask = rng.uniform(size=n) > 0.3
+    if not mask.any():
+        mask[0] = True
+    total = float(rng.uniform(0.1, 2.0))
+    x = np.asarray(project_simplex(jnp.asarray(v, jnp.float32),
+                                   jnp.asarray(mask), jnp.float32(total)))
+    assert np.all(x >= -1e-6)
+    assert abs(x.sum() - total) < 1e-4
+    assert np.all(x[~mask] == 0)
+
+
+# ---------------------------------------------------------------------------
+# fedagg kernel convexity (from test_kernels)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000), st.integers(1, 8), st.integers(1, 700))
+@settings(max_examples=15, deadline=None)
+def test_fedagg_convex_hull_property(seed, m, p):
+    """With β on the simplex, every output coordinate lies within
+    [min_m x, max_m x] — aggregation can never extrapolate."""
+    rng = np.random.default_rng(seed)
+    stacked = jnp.asarray(rng.normal(0, 5, (m, p)).astype(np.float32))
+    beta = jnp.asarray(rng.dirichlet(np.ones(m)).astype(np.float32))
+    out = np.asarray(fedagg(stacked, beta, interpret=True, block=256))
+    lo = np.min(np.asarray(stacked), axis=0) - 1e-4
+    hi = np.max(np.asarray(stacked), axis=0) + 1e-4
+    assert np.all(out >= lo) and np.all(out <= hi)

@@ -1,13 +1,13 @@
-"""Property-based tests (hypothesis) for the Module-2 QP solver — the
-system's central invariant: β is feasible and (near-)optimal for Eq. (8)."""
+"""Deterministic tests for the Module-2 QP solver — the system's central
+invariant: β is feasible and (near-)optimal for Eq. (8).  The hypothesis
+sweeps over random problems live in ``tests/test_hypothesis_properties.py``
+so this module always collects."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.weights_qp import (chi2_effective, heuristic_weights,
-                                   project_simplex, solve_weights,
-                                   solve_weights_oracle)
+                                   solve_weights, solve_weights_oracle)
 
 
 def _random_problem(rng, J, C):
@@ -17,37 +17,19 @@ def _random_problem(rng, J, C):
     return alpha, alpha_g
 
 
-@st.composite
-def qp_problems(draw):
-    seed = draw(st.integers(0, 2 ** 31 - 1))
-    J = draw(st.integers(2, 12))
-    C = draw(st.integers(2, 20))
-    n_active = draw(st.integers(1, J))
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_solver_feasibility(seed):
     rng = np.random.default_rng(seed)
+    J, C = 3 + seed, 5 + 2 * seed
     alpha, alpha_g = _random_problem(rng, J, C)
-    mask = np.zeros(J, dtype=bool)
-    mask[rng.choice(J, n_active, replace=False)] = True
+    mask = np.ones(J, dtype=bool)
+    mask[rng.choice(J, J // 2, replace=False)] = False
     mask[0] = True                      # server always present
-    return alpha, alpha_g, mask
-
-
-@given(qp_problems())
-@settings(max_examples=25, deadline=None)
-def test_solver_feasibility(problem):
-    alpha, alpha_g, mask = problem
     beta = np.asarray(solve_weights(jnp.asarray(alpha), jnp.asarray(alpha_g),
                                     jnp.asarray(mask)))
     assert np.all(beta >= -1e-6)
     assert abs(beta.sum() - 1.0) < 1e-4
     assert np.all(beta[~mask] <= 1e-6)          # Eq. (10c)
-
-
-@given(qp_problems())
-@settings(max_examples=15, deadline=None)
-def test_solver_no_worse_than_uniform(problem):
-    alpha, alpha_g, mask = problem
-    beta = np.asarray(solve_weights(jnp.asarray(alpha), jnp.asarray(alpha_g),
-                                    jnp.asarray(mask)))
     uni = np.where(mask, 1.0 / mask.sum(), 0.0)
     f_beta = float(chi2_effective(jnp.asarray(beta), jnp.asarray(alpha),
                                   jnp.asarray(alpha_g)))
@@ -87,22 +69,6 @@ def test_exact_recovery_when_global_in_hull():
                          jnp.asarray(mask))
     assert float(chi2_effective(beta, jnp.asarray(alpha),
                                 jnp.asarray(alpha_g))) < 1e-6
-
-
-@given(st.integers(0, 10_000), st.integers(2, 16))
-@settings(max_examples=30, deadline=None)
-def test_simplex_projection_properties(seed, n):
-    rng = np.random.default_rng(seed)
-    v = rng.normal(0, 3, n)
-    mask = rng.uniform(size=n) > 0.3
-    if not mask.any():
-        mask[0] = True
-    total = float(rng.uniform(0.1, 2.0))
-    x = np.asarray(project_simplex(jnp.asarray(v, jnp.float32),
-                                   jnp.asarray(mask), jnp.float32(total)))
-    assert np.all(x >= -1e-6)
-    assert abs(x.sum() - total) < 1e-4
-    assert np.all(x[~mask] == 0)
 
 
 def test_heuristic_weights_footnote2():
