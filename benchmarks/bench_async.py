@@ -1,0 +1,84 @@
+"""Sync vs async vs buffered server across the scenario worlds, scored in
+*simulated wall-clock seconds*, not rounds.
+
+Under a tight deadline the synchronous server both discards stragglers and
+waits out its full timeout for them; the asynchronous server waits the same
+wall clock but keeps every upload that lands within ``tau_max`` extra
+rounds.  Rows:
+
+  async:<world>/<mode>,us_per_round,final_accuracy
+  async:<world>/<mode>/sim_s,0,total simulated seconds
+  async:<world>/<mode>/t_to_sync_final,0,first simulated second at which the
+      mode's accuracy reached the sync baseline's final accuracy (inf if it
+      never did) — the headline sync-vs-async fairness metric
+
+Modes map to strategies: sync -> fedauto, async/buffered -> fedauto_async.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import make_problem
+from repro.core.strategies import STRATEGIES
+
+MODES = {"sync": "fedauto", "async": "fedauto_async",
+         "buffered": "fedauto_async"}
+
+
+def _run_mode(world: str, mode: str, strat: str, rounds: int,
+              deadline: float, quick: bool):
+    runner = make_problem(non_iid=True, failure_mode=f"scenario:{world}",
+                          quick=quick, deadline_s=deadline, seed=0,
+                          server_mode=mode, tau_max=4, buffer_k=4,
+                          eval_every=1)
+    t0 = time.time()
+    hist = runner.run(STRATEGIES[strat](), rounds=rounds)
+    us_per_round = (time.time() - t0) / rounds * 1e6
+    return runner.timeline, hist[-1], us_per_round
+
+
+def _time_to(timeline, target: float) -> float:
+    for pt in timeline:
+        if pt.acc >= target - 1e-9:
+            return pt.t_s
+    return math.inf
+
+
+def run(quick: bool = True) -> List[str]:
+    rows = []
+    rounds = 12 if quick else 40
+    deadline = 3.0 if quick else 6.0
+    worlds = (["diurnal", "correlated_wifi", "bursty_handover"] if quick
+              else ["diurnal", "table6", "bursty_handover", "churn",
+                    "correlated_wifi", "cross_region", "lossy_uplink"])
+    for world in worlds:
+        results = {}
+        for mode, strat in MODES.items():
+            timeline, final, us = _run_mode(world, mode, strat, rounds,
+                                            deadline, quick)
+            results[mode] = (timeline, final)
+            rows.append(f"async:{world}/{mode},{us:.0f},{final:.4f}")
+            rows.append(f"async:{world}/{mode}/sim_s,0,"
+                        f"{timeline[-1].t_s:.2f}")
+        target = results["sync"][1]
+        for mode in MODES:
+            t = _time_to(results[mode][0], target)
+            rows.append(f"async:{world}/{mode}/t_to_sync_final,0,"
+                        f"{t if math.isfinite(t) else 'inf'}")
+        # realized staleness pressure of this world under the deadline
+        m = make_problem(non_iid=True, failure_mode=f"scenario:{world}",
+                         quick=quick, deadline_s=deadline, seed=0)
+        m.failures.reset()
+        late = np.mean([m.failures.draw_events(r).late_mask().mean()
+                        for r in range(1, rounds + 1)])
+        rows.append(f"async:{world}/late_fraction,0,{late:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

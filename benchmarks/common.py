@@ -26,7 +26,9 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
                  resource_opt: Optional[str] = None, seed: int = 0,
                  deadline_s: Optional[float] = None,
                  trace_record: Optional[str] = None,
-                 trace_replay: Optional[str] = None):
+                 trace_replay: Optional[str] = None,
+                 server_mode: str = "sync", tau_max: int = 5,
+                 buffer_k: int = 4, eval_every: Optional[int] = None):
     n_clients = 8 if quick else 20
     n_classes = 4 if quick else 10
     img = 8 if quick else 16
@@ -54,10 +56,13 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
         failure_mode=failure_mode,
         resource_opt=resource_opt,
         seed=seed,
-        eval_every=10 ** 6,
+        eval_every=eval_every if eval_every is not None else 10 ** 6,
         model_bytes=0.2e6 if quick else 0.86e6,
         trace_record=trace_record,
         trace_replay=trace_replay,
+        server_mode=server_mode,
+        tau_max=tau_max,
+        buffer_k=buffer_k,
     )
     if deadline_s is not None:
         cfg.deadline_s = deadline_s

@@ -14,7 +14,7 @@ def main() -> None:
                     help="comma-separated bench names (e.g. table2,kernels)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_aggregation, bench_convergence,
+    from benchmarks import (bench_aggregation, bench_async, bench_convergence,
                             bench_kernels, bench_resourceopt, bench_scenarios,
                             bench_table1, bench_table2, bench_table3,
                             bench_table4, bench_table5, roofline)
@@ -29,6 +29,7 @@ def main() -> None:
         "table5": bench_table5,
         "resourceopt": bench_resourceopt,
         "scenarios": bench_scenarios,
+        "async": bench_async,
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -32,6 +32,13 @@ def aggregate_pytrees(trees: Sequence, betas) -> object:
     return jax.tree.map(agg, *trees)
 
 
+def delta_pytree(model, ref):
+    """float32 update direction ``model − ref``, leaf-wise."""
+    return jax.tree.map(
+        lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32),
+        model, ref)
+
+
 # ---------------------------------------------------------------------------
 # Module 1 — missing-class detection (Eq. 6 trigger)
 # ---------------------------------------------------------------------------
@@ -59,6 +66,41 @@ def fedauto_weights(alpha_rows: np.ndarray, alpha_g: np.ndarray,
                          jnp.asarray(active), fixed_idx=server_row,
                          fixed_val=jnp.float32(beta_s))
     return np.asarray(beta)
+
+
+def fedauto_async_weights(alpha_rows: np.ndarray, alpha_g: np.ndarray,
+                          staleness: np.ndarray, server_row: int,
+                          discount_a: float = 0.5) -> np.ndarray:
+    """FedAuto-Async (staleness-aware Eq. 8 + Eq. 9 pin).
+
+    ``staleness[j]`` is the age in rounds of participant j's update (0 =
+    computed from the current global model; the server row is always 0).
+    The QP is solved exactly as in the synchronous case — Eq. 9 pin
+    ``β_s = 1/(1+m)`` included — then each non-server weight is discounted
+    by ``(1 + s_j)^{-discount_a}`` and the free mass ``1 − β_s`` is
+    redistributed, so the result stays on the simplex with the pin intact
+    and reduces to ``fedauto_weights`` when every update is fresh.
+    """
+    staleness = np.asarray(staleness, dtype=float)
+    active = np.ones(len(alpha_rows), dtype=bool)
+    beta = fedauto_weights(alpha_rows, alpha_g, active, server_row)
+    if not np.any(staleness > 0):
+        return beta                  # fresh cohort: exactly the sync solution
+    disc = np.power(1.0 + np.maximum(staleness, 0.0), -discount_a)
+    disc[server_row] = 1.0
+    free = beta * disc
+    free[server_row] = 0.0
+    mass = 1.0 - beta[server_row]
+    tot = free.sum()
+    out = np.zeros_like(beta)
+    out[server_row] = beta[server_row]
+    if tot > 1e-12:
+        out += free * (mass / tot)
+    else:
+        # every client weight vanished (all maximally stale): the server
+        # keeps the whole budget, as with an empty round
+        out[server_row] = 1.0
+    return out
 
 
 def fedauto_simple_average_weights(active: np.ndarray, server_row: int,

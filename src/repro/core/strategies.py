@@ -19,7 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (aggregate_pytrees, fedauto_simple_average_weights,
+from repro.core.aggregation import (aggregate_pytrees, delta_pytree,
+                                    fedauto_async_weights,
+                                    fedauto_simple_average_weights,
                                     fedauto_weights, missing_classes)
 from repro.core.weights_qp import heuristic_weights
 
@@ -316,6 +318,184 @@ class FedAuto(Strategy):
         return aggregate_pytrees(models, beta)
 
 
+# ---------------------------------------------------------------------------
+# asynchronous strategy family (driven by repro.fl.server.AsyncRoundLoop)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Arrival:
+    """One client upload as it lands at the asynchronous server."""
+    client: int
+    origin_round: int                     # round whose global seeded the update
+    staleness: int                        # rnd − origin_round (0 = fresh)
+    arrival_s: float                      # absolute simulated landing time
+    model: Any                            # w_i^{origin,E}
+    delta: Any = None                     # w_i^{origin,E} − w̄^{origin}
+
+
+@dataclasses.dataclass
+class AsyncRoundContext:
+    """What the async server knows when it aggregates at round ``rnd``."""
+    rnd: int
+    now_s: float                          # simulated clock at the round's end
+    global_params: Any
+    server_model: Any                     # w_s^{r,E} (always staleness 0)
+    arrivals: list                        # List[Arrival], landing-time order
+    p: np.ndarray
+    client_hists: np.ndarray
+    server_hist: np.ndarray
+    global_hist: np.ndarray
+    runner: Any = None
+
+
+class AsyncStrategy(Strategy):
+    """Aggregates a stream of (possibly stale) arrivals instead of a
+    synchronized cohort.  Under ``server_mode="sync"`` the round's connected
+    cohort is presented as staleness-0 arrivals, so async strategies remain
+    runnable everywhere.  ``wants_delta`` tells the async loop to snapshot
+    ``w_i − w̄^{origin}`` at dispatch time — a stale arrival's delta cannot
+    be reconstructed later, once the global has moved on."""
+    is_async = True
+    wants_delta = False
+
+    def aggregate_async(self, ctx: AsyncRoundContext):
+        raise NotImplementedError
+
+    def aggregate(self, ctx: RoundContext):
+        arrivals = [Arrival(client=i, origin_round=ctx.rnd, staleness=0,
+                            arrival_s=float(ctx.rnd), model=m,
+                            delta=delta_pytree(m, ctx.global_params))
+                    for i, m in sorted(ctx.client_models.items())]
+        actx = AsyncRoundContext(
+            rnd=ctx.rnd, now_s=float(ctx.rnd),
+            global_params=ctx.global_params, server_model=ctx.server_model,
+            arrivals=arrivals, p=ctx.p, client_hists=ctx.client_hists,
+            server_hist=ctx.server_hist, global_hist=ctx.global_hist,
+            runner=ctx.runner)
+        return self.aggregate_async(actx)
+
+
+def _staleness_discount(staleness: int, a: float) -> float:
+    """Polynomial discount of FedAsync: (1+s)^{-a}; 1 when fresh."""
+    return float((1.0 + max(int(staleness), 0)) ** -a)
+
+
+class FedAsync(AsyncStrategy):
+    """FedAsync-style sequential mixing: each arrival is folded into the
+    global model in landing order with rate γ0·(1+s)^{-a}; the server's own
+    update is a staleness-0 arrival applied last each round."""
+    name = "fedasync"
+
+    def __init__(self, gamma0: float = 0.6, discount_a: float = 0.5,
+                 gamma_server: float = 0.3):
+        self.gamma0 = gamma0
+        self.discount_a = discount_a
+        self.gamma_server = gamma_server
+
+    @staticmethod
+    def _mix(global_params, model, gamma: float):
+        return jax.tree.map(
+            lambda g, w: ((1.0 - gamma) * g.astype(jnp.float32) +
+                          gamma * w.astype(jnp.float32)).astype(g.dtype),
+            global_params, model)
+
+    def aggregate_async(self, ctx: AsyncRoundContext):
+        w = ctx.global_params
+        for arr in ctx.arrivals:
+            gamma = self.gamma0 * _staleness_discount(arr.staleness,
+                                                      self.discount_a)
+            w = self._mix(w, arr.model, gamma)
+        return self._mix(w, ctx.server_model, self.gamma_server)
+
+
+class FedBuff(AsyncStrategy):
+    """FedBuff-style buffered-K aggregation: client deltas accumulate (with
+    staleness discounts) and are applied as one averaged server step only
+    once K of them have landed; the server's own delta is applied every
+    round so training never stalls on an empty buffer."""
+    name = "fedbuff"
+    wants_delta = True
+
+    def __init__(self, buffer_k: int = 4, eta: float = 1.0,
+                 discount_a: float = 0.5):
+        self.buffer_k = buffer_k
+        self.eta = eta
+        self.discount_a = discount_a
+
+    def init_state(self, runner) -> None:
+        self._held: list = []
+
+    def aggregate_async(self, ctx: AsyncRoundContext):
+        for arr in ctx.arrivals:
+            # dispatch-time snapshot (w_i − w̄^{origin}); fall back to the
+            # current global only for fresh arrivals (origin == now)
+            delta = (arr.delta if arr.delta is not None
+                     else delta_pytree(arr.model, ctx.global_params))
+            self._held.append(
+                (delta, _staleness_discount(arr.staleness, self.discount_a)))
+        server_delta = delta_pytree(ctx.server_model, ctx.global_params)
+        deltas = [server_delta]
+        discs = [1.0]
+        if len(self._held) >= self.buffer_k:
+            for d, disc in self._held:
+                deltas.append(d)
+                discs.append(disc)
+            self._held = []
+        step = aggregate_pytrees(deltas, np.asarray(discs) / len(deltas))
+        return jax.tree.map(
+            lambda g, d: (g.astype(jnp.float32) +
+                          self.eta * d.astype(jnp.float32)).astype(g.dtype),
+            ctx.global_params, step)
+
+
+class FedAutoAsync(AsyncStrategy):
+    """FedAuto under staleness: Module 1 compensatory training over the
+    classes the *arrived* cohort misses, then Module 2's QP (Eq. 8 with the
+    Eq. 9 server pin) on the arrivals' α-rows with each β discounted by
+    (1+s)^{-a} (``fedauto_async_weights``).  With every arrival fresh this
+    is exactly FedAuto."""
+    name = "fedauto_async"
+
+    def __init__(self, use_module1: bool = True, discount_a: float = 0.5):
+        self.use_module1 = use_module1
+        self.discount_a = discount_a
+
+    def aggregate_async(self, ctx: AsyncRoundContext):
+        runner = ctx.runner
+        received = np.zeros(len(ctx.client_hists), dtype=bool)
+        for arr in ctx.arrivals:
+            received[arr.client] = True
+        miss = missing_classes(ctx.client_hists, received)
+        comp_model, comp_hist = None, None
+        if self.use_module1 and miss.any():
+            comp_model, comp_hist = runner.train_compensatory(miss, ctx.rnd)
+
+        def dist(h):
+            tot = h.sum()
+            return h / tot if tot > 0 else np.full_like(h, 1.0 / len(h),
+                                                        dtype=float)
+
+        rows = [dist(ctx.server_hist.astype(float))]
+        models = [ctx.server_model]
+        staleness = [0]
+        if comp_model is not None:
+            rows.append(dist(comp_hist.astype(float)))
+            models.append(comp_model)
+            staleness.append(0)
+        # client-index order (not landing order): the QP is a batch solve, and
+        # this makes the fresh-cohort case bit-identical to synchronous FedAuto
+        for arr in sorted(ctx.arrivals, key=lambda a: (a.client,
+                                                       a.origin_round)):
+            rows.append(dist(ctx.client_hists[arr.client].astype(float)))
+            models.append(arr.model)
+            staleness.append(arr.staleness)
+        alpha_rows = np.stack(rows)
+        alpha_g = dist(ctx.global_hist.astype(float))
+        beta = fedauto_async_weights(alpha_rows, alpha_g,
+                                     np.asarray(staleness), server_row=0,
+                                     discount_a=self.discount_a)
+        return aggregate_pytrees(models, beta)
+
+
 class CentralizedPublic(Strategy):
     """Server-only training on the public dataset (no client knowledge)."""
     name = "centralized_public"
@@ -334,4 +514,7 @@ STRATEGIES = {
     "fedex_lora": FedExLoRA,
     "fedauto": FedAuto,
     "centralized_public": CentralizedPublic,
+    "fedasync": FedAsync,
+    "fedbuff": FedBuff,
+    "fedauto_async": FedAutoAsync,
 }

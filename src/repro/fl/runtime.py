@@ -4,6 +4,9 @@ Drives: client selection → failure draw → parallel local SGD (clients +
 server, Eq. 2–3) → strategy aggregation (Eq. 5/7). Supports full- and
 partial-parameter (LoRA) fine-tuning, all strategies in
 ``repro.core.strategies``, and the ResourceOpt network interventions.
+The round loop itself is pluggable (``repro.fl.server``):
+``FFTConfig.server_mode`` picks the synchronous driver or the
+staleness-buffered asynchronous/buffered ones.
 
 Local updates are one jitted ``lax.scan`` of E minibatch-SGD steps; client
 datasets are resampled to a common static shape so a single compiled update
@@ -13,13 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.strategies import RoundContext, Strategy
+from repro.core.strategies import Strategy
 from repro.data.synthetic import Dataset
 from repro.fl import failures as fail_mod
 from repro.fl import network as net_mod
@@ -50,6 +53,10 @@ class FFTConfig:
     trace_record: Optional[str] = None    # NDJSON path: record realized rounds
     trace_replay: Optional[str] = None    # NDJSON path: replay (overrides
     #                                       failure_mode)
+    # --- asynchronous server (repro.fl.server) --------------------------------
+    server_mode: str = "sync"             # sync | async | buffered
+    tau_max: int = 5                      # max staleness (rounds) accepted async
+    buffer_k: int = 4                     # buffered mode: arrivals per agg step
 
 
 class FFTRunner:
@@ -125,6 +132,18 @@ class FFTRunner:
             duration_max=cfg.duration_max, seed=cfg.seed,
             model_bytes=cfg.model_bytes, deadline_s=cfg.deadline_s,
             compute_s=cfg.compute_s)
+        if cfg.server_mode not in ("sync", "async", "buffered"):
+            raise ValueError(f"unknown server_mode {cfg.server_mode!r}")
+        if cfg.server_mode != "sync" and not hasattr(self.failures,
+                                                     "draw_events"):
+            # Legacy boolean failure models have no time dimension; the async
+            # server needs per-client arrival instants, so synthesize them
+            # from the physical channels (capacity -> upload time, Eq. 41).
+            from repro.fl.server.timeline import TimedFailureAdapter
+            self.failures = TimedFailureAdapter(
+                self.failures, self.channels, model_bytes=cfg.model_bytes,
+                deadline_s=cfg.deadline_s, compute_s=cfg.compute_s,
+                seed=cfg.seed)
         mc = np.random.default_rng(cfg.seed + 7)
         self.eps_estimates = np.array([
             c.outage_probability(rate, mc, 200) for c in self.channels])
@@ -268,6 +287,14 @@ class FFTRunner:
     # ------------------------------------------------------------------ run
     def run(self, strategy: Strategy, rounds: int,
             log: Optional[Callable[[int, float], None]] = None) -> List[float]:
+        """Drive ``rounds`` rounds under ``cfg.server_mode``'s loop.
+
+        Returns the accuracy history (one entry per evaluation, as before);
+        ``self.timeline`` additionally holds ``TimePoint(rnd, t_s, acc)``
+        entries indexed by simulated wall-clock seconds, and ``self.loop``
+        exposes the driver (staleness stats for the async modes)."""
+        from repro.fl.server.loops import TimePoint, make_round_loop
+
         strategy.init_state(self)
         self.failures.reset()
         tracer = None
@@ -281,53 +308,11 @@ class FFTRunner:
                 "deadline_s": self.cfg.deadline_s,
                 "model_bytes": self.cfg.model_bytes,
                 "seed": self.cfg.seed})
-        history: List[float] = []
-        full = self.k_selected >= self.n_clients
+        self.timeline: List[TimePoint] = []
+        self.loop = make_round_loop(self.cfg.server_mode, self, strategy,
+                                    tracer=tracer, log=log)
         try:
-            self._run_rounds(strategy, rounds, full, history, tracer, log)
+            return self.loop.run(rounds)
         finally:
             if tracer is not None:
                 tracer.close()
-        return history
-
-    def _run_rounds(self, strategy, rounds, full, history, tracer, log):
-        for r in range(1, rounds + 1):
-            if full:
-                selected = np.ones(self.n_clients, dtype=bool)
-            else:
-                sel = self.rng.choice(self.n_clients, self.k_selected,
-                                      replace=False)
-                selected = np.zeros(self.n_clients, dtype=bool)
-                selected[sel] = True
-            up, met_deadline, events = self._draw_network(r)
-            connected = selected & up & met_deadline
-            if tracer is not None:
-                tracer.write_round(r, selected, connected, events,
-                                   up=up, met_deadline=met_deadline)
-
-            t_global = self.global_params
-            client_models: Dict[int, Any] = {}
-            mu = strategy.prox_mu()
-            for i in np.where(connected)[0]:
-                corr = strategy.correction(i, self)
-                m = self.run_local(t_global, self.client_x[i], self.client_y[i],
-                                   r, mu=mu, corr=corr)
-                m = strategy.post_local(i, r, m, t_global, self)
-                client_models[int(i)] = m
-            server_model = self.run_local(t_global, self.public_x,
-                                          self.public_y, r)
-
-            ctx = RoundContext(
-                rnd=r, global_params=t_global, server_model=server_model,
-                client_models=client_models, selected=selected,
-                connected=connected, p=self.p, client_hists=self.client_hists,
-                server_hist=self.server_hist, global_hist=self.global_hist,
-                full_participation=full, eps_estimates=self.eps_estimates,
-                runner=self)
-            self.global_params = strategy.aggregate(ctx)
-
-            if r % self.cfg.eval_every == 0 or r == rounds:
-                acc = self.evaluate()
-                history.append(acc)
-                if log:
-                    log(r, acc)

@@ -82,6 +82,13 @@ class RoundEvents:
     def connected_mask(self) -> np.ndarray:
         return self.up_mask() & self.deadline_mask()
 
+    def late_mask(self) -> np.ndarray:
+        """Clients whose upload physically lands, just after the deadline —
+        the asynchronous server's staleness-buffer candidates."""
+        return np.array([e.up and math.isfinite(e.finish_s)
+                         and not e.met_deadline for e in self.events],
+                        dtype=bool)
+
     def server_wait(self, selected: Optional[np.ndarray] = None) -> float:
         """Wall-clock the server waited on the given cohort: the last
         upload's landing time if every selected client delivered, else the

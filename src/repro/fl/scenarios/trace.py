@@ -11,13 +11,18 @@ Schema (one JSON object per line):
    "deadline_s": ..., "model_bytes": ..., "seed": ...}
   {"record": "round", "round": r, "deadline_s": ..., "duration_s": ...,
    "clients": [{"id": i, "capacity_bps": ..., "up": true,
-                "duration_s": ..., "selected": true, "met_deadline": true,
+                "duration_s": ..., "t_download_s": ..., "t_compute_s": ...,
+                "t_upload_s": ..., "selected": true, "met_deadline": true,
                 "connected": true, "cause": "ok"}, ...]}
 
-``capacity_bps``/``duration_s`` are null for legacy failure models that have
-no timing semantics; ``connected`` is always present, so any model's
-realization is replayable.  Infinities are serialized as the string "inf"
-(JSON has no Infinity literal).
+``capacity_bps``/``duration_s``/``t_*_s`` are null for legacy failure models
+that have no timing semantics; ``connected`` is always present, so any
+model's realization is replayable.  Per-client ``duration_s`` is the landing
+instant (``ClientRoundEvent.finish_s``) — recorded even for uploads that
+missed the deadline, so an asynchronous run replays its staleness-buffered
+arrivals bit-exactly.  Non-finite floats are serialized as the strings
+"inf"/"-inf"/"nan" (JSON has no literals for them) and decoded back
+losslessly by ``_unnum``.
 """
 from __future__ import annotations
 
@@ -35,14 +40,14 @@ TRACE_VERSION = 1
 
 
 def _num(x) -> object:
-    """JSON-safe float: inf/nan become strings, None passes through."""
+    """JSON-safe float: inf/-inf/nan become strings, None passes through."""
     if x is None:
         return None
     x = float(x)
     if math.isinf(x):
         return "inf" if x > 0 else "-inf"
     if math.isnan(x):
-        return None
+        return "nan"
     return x
 
 
@@ -53,6 +58,8 @@ def _unnum(x) -> Optional[float]:
         return math.inf
     if x == "-inf":
         return -math.inf
+    if x == "nan":
+        return math.nan
     return float(x)
 
 
@@ -83,6 +90,9 @@ class TraceRecorder:
                 e = events.events[i]
                 row = {"id": i, "capacity_bps": _num(e.capacity_bps),
                        "up": bool(e.up), "duration_s": _num(e.finish_s),
+                       "t_download_s": _num(e.t_download_s),
+                       "t_compute_s": _num(e.t_compute_s),
+                       "t_upload_s": _num(e.t_upload_s),
                        "selected": bool(selected[i]),
                        "met_deadline": bool(e.met_deadline),
                        "connected": bool(connected[i]), "cause": e.cause}
@@ -185,8 +195,10 @@ class ReplayFailureModel(FailureModel):
             events.append(ClientRoundEvent(
                 client=int(c["id"]),
                 capacity_bps=val(_unnum(c.get("capacity_bps")), 0.0),
-                up=bool(c["up"]), t_download_s=0.0, t_compute_s=0.0,
-                t_upload_s=0.0,
+                up=bool(c["up"]),
+                t_download_s=val(_unnum(c.get("t_download_s")), 0.0),
+                t_compute_s=val(_unnum(c.get("t_compute_s")), 0.0),
+                t_upload_s=val(_unnum(c.get("t_upload_s")), 0.0),
                 finish_s=val(_unnum(c.get("duration_s")), math.inf),
                 met_deadline=bool(c.get("met_deadline", c["connected"])),
                 cause=str(c.get("cause", CAUSE_OK))))

@@ -1,0 +1,27 @@
+"""Asynchronous aggregation server: staleness-buffered rounds over the
+scenario engine's per-client arrival timelines.
+
+Three layers:
+
+* ``buffer``   — ``StalenessBuffer``: late uploads carried into rounds
+  ``r+1..r+tau_max``, tagged with staleness and originating round.
+* ``loops``    — pluggable ``SyncRoundLoop`` / ``AsyncRoundLoop`` drivers
+  behind ``FFTConfig.server_mode = "sync" | "async" | "buffered"``, sharing
+  the runner's jitted local-update path; simulated wall-clock ``timeline``.
+* ``timeline`` — ``TimedFailureAdapter``: synthesizes arrival times for
+  legacy boolean failure models so every ``failure_mode`` works async.
+
+Strategy-side counterparts (``fedasync`` / ``fedbuff`` / ``fedauto_async``)
+live in ``repro.core.strategies``.
+"""
+from repro.fl.server.buffer import PendingUpdate, StalenessBuffer
+from repro.fl.server.loops import (SERVER_MODES, AsyncRoundLoop, RoundLoop,
+                                   SyncRoundLoop, TimePoint, make_round_loop)
+from repro.fl.server.timeline import TimedFailureAdapter
+
+__all__ = [
+    "PendingUpdate", "StalenessBuffer",
+    "SERVER_MODES", "AsyncRoundLoop", "RoundLoop", "SyncRoundLoop",
+    "TimePoint", "make_round_loop",
+    "TimedFailureAdapter",
+]

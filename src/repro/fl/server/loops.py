@@ -1,0 +1,275 @@
+"""Pluggable server round loops (``FFTConfig.server_mode``).
+
+``FFTRunner.run`` used to hard-code the synchronous Algorithm-1 loop; it now
+delegates to one of these drivers, all sharing the runner's jitted
+local-update path, client selection RNG, trace recording, and evaluation
+cadence:
+
+* ``SyncRoundLoop``  ("sync", the default) — the original behavior:
+  ``connected = selected & up & met_deadline``, stragglers discarded.
+* ``AsyncRoundLoop`` ("async") — stragglers are *computed anyway* (their
+  local update started from the round's global model) and parked in a
+  ``StalenessBuffer`` keyed by the exact wall-clock instant the scenario
+  engine says their upload lands; they are aggregated, staleness-tagged, in
+  the round their arrival time falls into (up to ``tau_max`` rounds late).
+* ``AsyncRoundLoop(buffered=True)`` ("buffered") — semi-async FedBuff-style
+  server: arrivals additionally accumulate until ``buffer_k`` of them have
+  landed, and only then is an aggregation step taken.
+
+Every loop also advances a simulated wall clock (``RoundEvents.server_wait``
+per round) and records ``TimePoint(rnd, t_s, acc)`` into
+``runner.timeline`` at each evaluation, so sync-vs-async comparisons can be
+made in simulated seconds instead of round counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.core.aggregation import delta_pytree
+from repro.core.strategies import (Arrival, AsyncRoundContext, AsyncStrategy,
+                                   RoundContext, Strategy)
+from repro.fl.server.buffer import PendingUpdate, StalenessBuffer
+
+
+@dataclasses.dataclass
+class TimePoint:
+    """One evaluation, indexed by both round and simulated wall clock."""
+    rnd: int
+    t_s: float                   # simulated seconds since training start
+    acc: float
+
+
+class RoundLoop:
+    """Skeleton shared by all server modes."""
+
+    def __init__(self, runner, strategy: Strategy, tracer=None, log=None):
+        self.runner = runner
+        self.strategy = strategy
+        self.tracer = tracer
+        self.log = log
+        self.clock_s = 0.0
+
+    # ------------------------------------------------------------- shared
+    def _select(self) -> np.ndarray:
+        runner = self.runner
+        if runner.k_selected >= runner.n_clients:
+            return np.ones(runner.n_clients, dtype=bool)
+        sel = runner.rng.choice(runner.n_clients, runner.k_selected,
+                                replace=False)
+        selected = np.zeros(runner.n_clients, dtype=bool)
+        selected[sel] = True
+        return selected
+
+    def _round_duration(self, selected, connected, events) -> float:
+        """Simulated seconds the server spent on this round."""
+        if events is not None:
+            return float(events.server_wait(selected))
+        # Legacy models have no time dimension: the server waits out its
+        # timeout whenever a selected client is missing, else a nominal
+        # compute+transmit round.
+        cfg = self.runner.cfg
+        if bool((selected & ~connected).any()):
+            return float(cfg.deadline_s)
+        return float(cfg.compute_s + cfg.tx_delay_s)
+
+    def _maybe_eval(self, r: int, rounds: int, history: List[float]) -> None:
+        runner = self.runner
+        if r % runner.cfg.eval_every == 0 or r == rounds:
+            acc = runner.evaluate()
+            history.append(acc)
+            runner.timeline.append(TimePoint(rnd=r, t_s=self.clock_s,
+                                             acc=acc))
+            if self.log:
+                self.log(r, acc)
+
+    def run(self, rounds: int) -> List[float]:
+        history: List[float] = []
+        for r in range(1, rounds + 1):
+            self.clock_s += self.run_round(r)
+            self._maybe_eval(r, rounds, history)
+        return history
+
+    def run_round(self, r: int) -> float:
+        raise NotImplementedError
+
+
+class SyncRoundLoop(RoundLoop):
+    """Algorithm 1 verbatim: deadline stragglers are discarded."""
+
+    def run_round(self, r: int) -> float:
+        runner, strategy = self.runner, self.strategy
+        selected = self._select()
+        up, met_deadline, events = runner._draw_network(r)
+        connected = selected & up & met_deadline
+        if self.tracer is not None:
+            self.tracer.write_round(r, selected, connected, events,
+                                    up=up, met_deadline=met_deadline)
+
+        t_global = runner.global_params
+        client_models: Dict[int, Any] = {}
+        mu = strategy.prox_mu()
+        for i in np.where(connected)[0]:
+            corr = strategy.correction(i, runner)
+            m = runner.run_local(t_global, runner.client_x[i],
+                                 runner.client_y[i], r, mu=mu, corr=corr)
+            m = strategy.post_local(i, r, m, t_global, runner)
+            client_models[int(i)] = m
+        server_model = runner.run_local(t_global, runner.public_x,
+                                        runner.public_y, r)
+
+        ctx = RoundContext(
+            rnd=r, global_params=t_global, server_model=server_model,
+            client_models=client_models, selected=selected,
+            connected=connected, p=runner.p,
+            client_hists=runner.client_hists, server_hist=runner.server_hist,
+            global_hist=runner.global_hist,
+            full_participation=runner.k_selected >= runner.n_clients,
+            eps_estimates=runner.eps_estimates, runner=runner)
+        runner.global_params = strategy.aggregate(ctx)
+        return self._round_duration(selected, connected, events)
+
+
+class AsyncRoundLoop(RoundLoop):
+    """Staleness-buffered server over the scenario engine's arrival times.
+
+    Per round: every selected client with an up link *and a physically
+    landing upload* runs its local update from the current global model.
+    On-deadline uploads land this round; late ones are pushed into the
+    ``StalenessBuffer`` with their absolute landing instant (round start +
+    ``ClientRoundEvent.finish_s``) — unless even ``tau_max`` extra rounds of
+    server waiting (``(tau_max+1) * deadline_s``) could not cover their
+    upload, in which case they are dropped up front (``n_unreachable``).
+    At the round's end the buffer releases everything that landed within the
+    round's window, staleness-tagged, and the strategy aggregates.
+    """
+
+    def __init__(self, runner, strategy, tracer=None, log=None,
+                 buffered: bool = False):
+        super().__init__(runner, strategy, tracer=tracer, log=log)
+        self.buffer = StalenessBuffer(runner.cfg.tau_max)
+        self.buffered = buffered
+        self.n_unreachable = 0
+        self.staleness_applied: List[int] = []
+        # Global-model version: bumped per *aggregation step*, not per round.
+        # Discount staleness is version lag, so a buffered server's deferred
+        # rounds (global unchanged) don't penalize updates that are still
+        # computed from the current model.  Eviction stays round-based.
+        self.version = 0
+
+    def run_round(self, r: int) -> float:
+        runner, strategy, cfg = self.runner, self.strategy, self.runner.cfg
+        selected = self._select()
+        up, met_deadline, events = runner._draw_network(r)
+        if events is None:
+            raise RuntimeError(
+                "async server modes need per-client arrival timelines; the "
+                "runner should have wrapped this failure model in "
+                "TimedFailureAdapter")
+        fresh_connected = selected & up & met_deadline
+        if self.tracer is not None:
+            self.tracer.write_round(r, selected, fresh_connected, events,
+                                    up=up, met_deadline=met_deadline)
+
+        t_global = runner.global_params
+        mu = strategy.prox_mu()
+        t_start = self.clock_s
+        horizon_s = cfg.deadline_s * (cfg.tau_max + 1)
+        for i in np.where(selected & up)[0]:
+            e = events.events[int(i)]
+            if not math.isfinite(e.finish_s):
+                continue                       # never lands at all
+            late = not e.met_deadline
+            if late and (cfg.tau_max == 0 or e.finish_s > horizon_s):
+                # even tau_max full-deadline rounds cannot stretch to this
+                # landing time: don't waste the local compute
+                self.n_unreachable += 1
+                continue
+            corr = strategy.correction(int(i), runner)
+            m = runner.run_local(t_global, runner.client_x[i],
+                                 runner.client_y[i], r, mu=mu, corr=corr)
+            m = strategy.post_local(int(i), r, m, t_global, runner)
+            # Only delta-based strategies (FedBuff) need the dispatch-time
+            # snapshot; skipping it elsewhere halves the buffer's memory.
+            delta = (delta_pytree(m, t_global)
+                     if getattr(strategy, "wants_delta", False) else None)
+            self.buffer.push(PendingUpdate(
+                client=int(i), origin_round=r,
+                arrival_s=t_start + float(e.finish_s), model=m, delta=delta,
+                origin_version=self.version))
+
+        duration = self._round_duration(selected, fresh_connected, events)
+        if not math.isfinite(duration):
+            raise RuntimeError(
+                f"round {r}: infinite server wait — the failure model has no "
+                "timing data (e.g. a trace recorded from a legacy boolean "
+                "mode); async server modes need real arrival timelines")
+        now = t_start + duration
+        if self.buffered and self.buffer.ready_count(now, r) < cfg.buffer_k:
+            # semi-async server: not enough landed updates to justify a step;
+            # advance the clock, age the buffer, keep the global model
+            self.buffer.evict(r)
+            return duration
+
+        arrivals = [Arrival(client=p.client, origin_round=p.origin_round,
+                            staleness=self.version - p.origin_version,
+                            arrival_s=p.arrival_s,
+                            model=p.model, delta=p.delta)
+                    for p in self.buffer.collect(now, r)]
+        self.staleness_applied.extend(a.staleness for a in arrivals)
+        server_model = runner.run_local(t_global, runner.public_x,
+                                        runner.public_y, r)
+        runner.global_params = self._aggregate(r, now, t_global, server_model,
+                                               selected, arrivals)
+        self.version += 1
+        return duration
+
+    def _aggregate(self, r, now, t_global, server_model, selected, arrivals):
+        runner, strategy = self.runner, self.strategy
+        if isinstance(strategy, AsyncStrategy):
+            ctx = AsyncRoundContext(
+                rnd=r, now_s=now, global_params=t_global,
+                server_model=server_model, arrivals=arrivals, p=runner.p,
+                client_hists=runner.client_hists,
+                server_hist=runner.server_hist,
+                global_hist=runner.global_hist, runner=runner)
+            return strategy.aggregate_async(ctx)
+        # Synchronous strategy under the async server: present the freshest
+        # landed update per client as this round's cohort (staleness is
+        # invisible to it — the documented degradation).
+        freshest: Dict[int, Arrival] = {}
+        for a in arrivals:
+            cur = freshest.get(a.client)
+            if cur is None or a.origin_round > cur.origin_round:
+                freshest[a.client] = cur = a
+        connected = np.zeros(runner.n_clients, dtype=bool)
+        for c in freshest:
+            connected[c] = True
+        ctx = RoundContext(
+            rnd=r, global_params=t_global, server_model=server_model,
+            client_models={c: a.model for c, a in freshest.items()},
+            selected=selected, connected=connected, p=runner.p,
+            client_hists=runner.client_hists, server_hist=runner.server_hist,
+            global_hist=runner.global_hist,
+            full_participation=runner.k_selected >= runner.n_clients,
+            eps_estimates=runner.eps_estimates, runner=runner)
+        return strategy.aggregate(ctx)
+
+
+SERVER_MODES = ("sync", "async", "buffered")
+
+
+def make_round_loop(mode: str, runner, strategy: Strategy, tracer=None,
+                    log=None) -> RoundLoop:
+    if mode == "sync":
+        return SyncRoundLoop(runner, strategy, tracer=tracer, log=log)
+    if mode == "async":
+        return AsyncRoundLoop(runner, strategy, tracer=tracer, log=log)
+    if mode == "buffered":
+        return AsyncRoundLoop(runner, strategy, tracer=tracer, log=log,
+                              buffered=True)
+    raise ValueError(f"unknown server_mode {mode!r} "
+                     f"(known: {', '.join(SERVER_MODES)})")

@@ -1,0 +1,63 @@
+"""Arrival-timeline synthesis for legacy (boolean) failure models.
+
+The async server needs to know *when* each upload lands, but the seed
+failure processes (``transient`` / ``intermittent`` / ``mixed`` / ``none``)
+only answer up-or-down.  This adapter gives them the time dimension the
+scenario worlds already have: each round it takes the inner model's up/down
+draw, samples a capacity realization from the client's physical channel
+(Eq. 37–39), and runs the same ``DeadlineSimulator`` the scenario engine
+uses — capacity → upload time via the Eq. 41 rate relation
+(``net_mod.uplink_rate`` fixes the bits; the channel draw fixes the bps).
+
+The synthesized capacity is an independent realization of the same channel,
+so under ``transient`` an up-flagged client can still draw a slow channel
+and become a straggler — richer than the boolean model, by design.  Rounds
+are cached so repeated draws replay the realization, matching
+``ScenarioFailureModel``'s contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.fl.failures import FailureModel
+from repro.fl.network import ClientChannel
+from repro.fl.scenarios.engine import (DeadlineSimulator, LinkState,
+                                       RoundEvents)
+
+
+class TimedFailureAdapter(FailureModel):
+    """Wraps a boolean ``FailureModel`` with synthesized arrival timelines."""
+
+    def __init__(self, inner: FailureModel, channels: List[ClientChannel], *,
+                 model_bytes: float, deadline_s: float,
+                 compute_s: float = 2.0, seed: int = 0):
+        self.inner = inner
+        self.channels = channels
+        self.sim = DeadlineSimulator(len(channels), model_bytes=model_bytes,
+                                     deadline_s=deadline_s,
+                                     compute_s=compute_s, seed=seed + 13)
+        self.seed = seed
+        self.reset()
+
+    def reset(self) -> None:
+        self.inner.reset()
+        self.sim.reset()
+        self.rng = np.random.default_rng(self.seed + 29)
+        self._cache: Dict[int, RoundEvents] = {}
+
+    def draw_events(self, r: int) -> RoundEvents:
+        if r not in self._cache:
+            up = self.inner.draw(r)
+            links = []
+            for i, chan in enumerate(self.channels):
+                if not up[i]:
+                    links.append(LinkState(0.0, up=False, cause="outage"))
+                else:
+                    links.append(LinkState(float(chan.capacity(self.rng))))
+            self._cache[r] = self.sim.simulate_round(r, links)
+        return self._cache[r]
+
+    def draw(self, r: int) -> np.ndarray:
+        return self.draw_events(r).connected_mask()

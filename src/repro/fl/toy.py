@@ -7,6 +7,9 @@ benchmark variant with LoRA/ResourceOpt knobs lives in
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Dict
+
 from repro.data.synthetic import fft_split, make_dataset, train_test_split
 from repro.fl.partition import partition
 from repro.fl.runtime import FFTConfig, FFTRunner
@@ -29,3 +32,13 @@ def make_toy_runner(cfg: FFTConfig, *, n_samples: int = 1500,
     init_fn, apply_fn = make_model("cnn", n_classes, image_size, 1)
     return FFTRunner(cfg, init_fn, apply_fn, public, parts, private, test,
                      pretrain_steps=pretrain_steps)
+
+
+def make_server_mode_runners(cfg: FFTConfig, modes=("sync", "async"),
+                             **toy_kwargs) -> Dict[str, FFTRunner]:
+    """Identically-seeded runners differing only in ``server_mode`` — the
+    fair way to compare the synchronous and asynchronous servers: same
+    data split, same initial params, same failure realization seed."""
+    return {mode: make_toy_runner(dataclasses.replace(cfg, server_mode=mode),
+                                  **toy_kwargs)
+            for mode in modes}

@@ -1,0 +1,311 @@
+"""Asynchronous-server subsystem tests (``repro.fl.server``).
+
+Covers: staleness-buffer invariants (no double apply, staleness <= tau_max,
+eviction, churn draining), FedAuto-Async weight properties mirroring
+``test_qp_solver``, sync/async equivalence when the deadline is infinite,
+bit-exact record -> replay of an async run, and legacy failure modes gaining
+synthesized arrival timelines."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import fedauto_async_weights, fedauto_weights
+from repro.core.strategies import STRATEGIES
+from repro.fl.runtime import FFTConfig
+from repro.fl.server import (PendingUpdate, StalenessBuffer,
+                             TimedFailureAdapter, make_round_loop)
+from repro.fl.scenarios.trace import _num, _unnum
+
+
+# ---------------------------------------------------------------------------
+# StalenessBuffer invariants
+# ---------------------------------------------------------------------------
+def _upd(client, origin, arrival):
+    return PendingUpdate(client=client, origin_round=origin,
+                         arrival_s=arrival, model=f"m{client}_{origin}")
+
+
+def test_buffer_no_update_applied_twice():
+    buf = StalenessBuffer(tau_max=3)
+    buf.push(_upd(0, 1, 5.0))
+    with pytest.raises(ValueError, match="twice"):
+        buf.push(_upd(0, 1, 6.0))
+    got = buf.collect(now_s=10.0, current_round=2)
+    assert [e.client for e in got] == [0]
+    assert buf.collect(now_s=100.0, current_round=3) == []   # gone for good
+
+
+def test_buffer_collect_orders_by_arrival_and_respects_now():
+    buf = StalenessBuffer(tau_max=5)
+    buf.push(_upd(2, 1, 9.0))
+    buf.push(_upd(1, 1, 4.0))
+    buf.push(_upd(3, 1, 30.0))                               # lands later
+    got = buf.collect(now_s=10.0, current_round=2)
+    assert [e.client for e in got] == [1, 2]
+    assert len(buf) == 1                                     # 3 still in flight
+    assert buf.collect(now_s=31.0, current_round=3)[0].client == 3
+
+
+def test_buffer_staleness_bounded_by_tau_max():
+    buf = StalenessBuffer(tau_max=2)
+    buf.push(_upd(0, 1, 1.0))
+    buf.push(_upd(1, 1, 2.0))
+    # round 5: staleness 4 > tau_max -> evicted, never applied
+    got = buf.collect(now_s=100.0, current_round=5)
+    assert got == [] and len(buf) == 0
+    assert buf.n_evicted == 2
+    buf.push(_upd(2, 5, 3.0))
+    got = buf.collect(now_s=100.0, current_round=7)
+    assert [e.staleness(7) for e in got] == [2]              # == tau_max: kept
+
+
+def test_buffer_evict_and_ready_count():
+    buf = StalenessBuffer(tau_max=2)
+    buf.push(_upd(0, 1, 1.0))
+    buf.push(_upd(1, 3, 2.0))
+    buf.push(_upd(2, 3, 99.0))
+    # landed & fresh: only (1, origin 3) — client 0 is beyond tau_max,
+    # client 2 is still in flight
+    assert buf.ready_count(now_s=10.0, current_round=4) == 1
+    assert buf.evict(current_round=4) == 1                   # origin 1 too old
+    assert sorted(e.client for e in buf.pending()) == [1, 2]
+
+
+def test_buffer_drained_on_churn():
+    buf = StalenessBuffer(tau_max=4)
+    for origin in [1, 2, 3]:
+        buf.push(_upd(7, origin, 10.0 * origin))
+    buf.push(_upd(3, 2, 5.0))
+    assert buf.drop_client(7) == 3
+    assert [e.client for e in buf.pending()] == [3]
+
+
+def test_buffer_rejects_negative_tau():
+    with pytest.raises(ValueError, match="tau_max"):
+        StalenessBuffer(tau_max=-1)
+
+
+# ---------------------------------------------------------------------------
+# FedAuto-Async weights: simplex / pin / discount (mirrors test_qp_solver)
+# ---------------------------------------------------------------------------
+def _rows(rng, J, C):
+    alpha = rng.dirichlet(np.ones(C) * 0.5, size=J)
+    p = rng.dirichlet(np.ones(J))
+    return alpha, p @ alpha
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fedauto_async_weights_feasibility_and_pin(seed):
+    rng = np.random.default_rng(seed)
+    J, C = 4 + seed, 5 + seed
+    alpha, alpha_g = _rows(rng, J, C)
+    staleness = rng.integers(0, 4, J)
+    staleness[0] = 0
+    beta = fedauto_async_weights(alpha, alpha_g, staleness, server_row=0)
+    assert np.all(beta >= -1e-6)
+    assert abs(beta.sum() - 1.0) < 1e-4
+    # Eq. 9 pin survives the staleness discount: beta_s = 1/(1+m)
+    assert abs(beta[0] - 1.0 / J) < 1e-4
+
+
+def test_fedauto_async_weights_fresh_equals_sync():
+    rng = np.random.default_rng(5)
+    alpha, alpha_g = _rows(rng, 6, 8)
+    sync = fedauto_weights(alpha, alpha_g, np.ones(6, bool), server_row=0)
+    fresh = fedauto_async_weights(alpha, alpha_g, np.zeros(6, int),
+                                  server_row=0)
+    np.testing.assert_array_equal(sync, fresh)               # bit-identical
+
+
+def test_fedauto_async_weights_discount_is_monotone():
+    """Two participants with the *same* alpha row and different staleness:
+    the staler one must never get more weight."""
+    rng = np.random.default_rng(8)
+    C = 6
+    row = rng.dirichlet(np.ones(C))
+    alpha = np.stack([rng.dirichlet(np.ones(C)), row, row])
+    alpha_g = np.array([0.3, 0.3, 0.4]) @ alpha
+    beta = fedauto_async_weights(alpha, alpha_g, np.array([0, 0, 3]),
+                                 server_row=0)
+    assert beta[2] < beta[1]
+    even = fedauto_async_weights(alpha, alpha_g, np.array([0, 2, 2]),
+                                 server_row=0)
+    assert abs(even[1] - even[2]) < 1e-5                     # equal discount
+
+
+# ---------------------------------------------------------------------------
+# server loops on the toy problem
+# ---------------------------------------------------------------------------
+BASE = dict(n_clients=6, k_selected=6, local_steps=2, batch_size=8, lr=0.05,
+            seed=0, eval_every=2, model_bytes=0.2e6)
+
+
+def _tiny(cfg):
+    from repro.fl.toy import make_toy_runner
+    return make_toy_runner(cfg, n_samples=600, public_per_class=10,
+                           pretrain_steps=9)
+
+
+@pytest.mark.parametrize("sync_name,async_name",
+                         [("fedavg", "fedavg"),
+                          ("fedauto", "fedauto_async")])
+def test_sync_async_equivalent_under_infinite_deadline(sync_name, async_name):
+    """With no deadline pressure nothing is ever late, so the async server
+    degenerates to the synchronous one — identical accuracy histories."""
+    hist = {}
+    for mode, name in [("sync", sync_name), ("async", async_name)]:
+        cfg = FFTConfig(failure_mode="scenario:correlated_wifi",
+                        deadline_s=1e9, server_mode=mode, **BASE)
+        hist[mode] = _tiny(cfg).run(STRATEGIES[name](), rounds=3)
+    assert hist["sync"] == hist["async"]
+
+
+def test_async_applies_stale_updates_under_tight_deadline():
+    cfg = FFTConfig(failure_mode="scenario:diurnal", deadline_s=2.0,
+                    server_mode="async", tau_max=4, **BASE)
+    runner = _tiny(cfg)
+    runner.run(STRATEGIES["fedauto_async"](), rounds=6)
+    applied = runner.loop.staleness_applied
+    assert applied and max(applied) > 0                      # real staleness
+    assert max(applied) <= cfg.tau_max                       # bounded by it
+    # every pending upload left in the buffer is still within its horizon
+    for e in runner.loop.buffer.pending():
+        assert e.staleness(6) <= cfg.tau_max
+    # wall-clock timeline is populated and strictly advancing
+    ts = [t.t_s for t in runner.timeline]
+    assert ts == sorted(ts) and ts[0] > 0.0
+
+
+def test_async_record_then_replay_bit_exact(tmp_path):
+    """Acceptance: an async run replayed from its recorded trace is
+    bit-exact — across live vs replay AND across two replays."""
+    path = str(tmp_path / "async.ndjson")
+    cfg = FFTConfig(failure_mode="scenario:diurnal", deadline_s=2.0,
+                    server_mode="async", tau_max=4, trace_record=path, **BASE)
+    live = _tiny(cfg).run(STRATEGIES["fedauto_async"](), rounds=4)
+    rep_cfg = FFTConfig(failure_mode="scenario:diurnal", deadline_s=2.0,
+                        server_mode="async", tau_max=4, trace_replay=path,
+                        **BASE)
+    rep1 = _tiny(rep_cfg).run(STRATEGIES["fedauto_async"](), rounds=4)
+    rep2 = _tiny(rep_cfg).run(STRATEGIES["fedauto_async"](), rounds=4)
+    assert rep1 == rep2 == live
+
+
+def test_buffered_mode_defers_until_k_arrivals():
+    cfg = FFTConfig(failure_mode="scenario:diurnal", deadline_s=2.0,
+                    server_mode="buffered", tau_max=4, buffer_k=4, **BASE)
+    runner = _tiny(cfg)
+    hist = runner.run(STRATEGIES["fedbuff"](buffer_k=1), rounds=6)
+    assert len(hist) == 3
+    # deferred rounds still advance the simulated clock
+    assert runner.timeline[-1].t_s > 0.0
+
+
+@pytest.mark.parametrize("failure_mode",
+                         ["none", "transient", "intermittent", "mixed"])
+def test_async_works_with_legacy_failure_modes(failure_mode):
+    """Non-scenario modes synthesize arrival timelines via
+    TimedFailureAdapter, so server_mode='async' works for every mode."""
+    cfg = FFTConfig(failure_mode=failure_mode, deadline_s=6.0,
+                    server_mode="async", tau_max=3, **BASE)
+    runner = _tiny(cfg)
+    assert isinstance(runner.failures, TimedFailureAdapter)
+    hist = runner.run(STRATEGIES["fedasync"](), rounds=3)
+    assert len(hist) == 2 and all(0.0 <= a <= 1.0 for a in hist)
+    ev = runner.failures.draw_events(1)
+    assert len(ev.events) == cfg.n_clients
+    # adapter caches: repeated draws replay the realization
+    np.testing.assert_array_equal(runner.failures.draw(2),
+                                  runner.failures.draw(2))
+
+
+def test_async_rejects_timing_less_trace(tmp_path):
+    """A trace recorded from a legacy boolean mode has no arrival times
+    (duration_s null -> finish_s inf); replaying it async must fail loudly
+    instead of silently training on server data alone."""
+    path = str(tmp_path / "legacy.ndjson")
+    rec_cfg = FFTConfig(failure_mode="intermittent", server_mode="sync",
+                        trace_record=path, **BASE)
+    _tiny(rec_cfg).run(STRATEGIES["fedavg"](), rounds=2)
+    rep_cfg = FFTConfig(failure_mode="intermittent", server_mode="async",
+                        trace_replay=path, **BASE)
+    with pytest.raises(RuntimeError, match="timing"):
+        _tiny(rep_cfg).run(STRATEGIES["fedasync"](), rounds=2)
+
+
+def test_buffered_deferral_does_not_age_fresh_updates():
+    """Staleness that discounts an update is *global-model version* lag:
+    rounds the buffered server skipped (no aggregation) don't count."""
+    cfg = FFTConfig(failure_mode="scenario:diurnal", deadline_s=2.0,
+                    server_mode="buffered", tau_max=4, buffer_k=6, **BASE)
+    runner = _tiny(cfg)
+    runner.run(STRATEGIES["fedauto_async"](), rounds=6)
+    loop = runner.loop
+    # aggregation steps happened at most once per round, some rounds deferred
+    assert loop.version <= 6
+    for s in loop.staleness_applied:
+        assert 0 <= s <= loop.version
+
+
+def test_legacy_sync_mode_keeps_boolean_models_unwrapped():
+    cfg = FFTConfig(failure_mode="mixed", server_mode="sync", **BASE)
+    runner = _tiny(cfg)
+    assert not isinstance(runner.failures, TimedFailureAdapter)
+
+
+def test_async_strategy_runs_under_sync_server():
+    """AsyncStrategy.aggregate adapts the cohort to staleness-0 arrivals."""
+    cfg = FFTConfig(failure_mode="scenario:correlated_wifi", deadline_s=8.0,
+                    server_mode="sync", **BASE)
+    hist = _tiny(cfg).run(STRATEGIES["fedasync"](), rounds=3)
+    assert len(hist) == 2
+
+
+def test_unknown_server_mode_rejected():
+    with pytest.raises(ValueError, match="server_mode"):
+        _tiny(FFTConfig(server_mode="warp", **BASE))
+    with pytest.raises(ValueError, match="server_mode"):
+        make_round_loop("warp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# trace float encoding: lossless inf/nan round-trip (deterministic version;
+# the hypothesis sweep lives in test_hypothesis_properties.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("x", [0.0, -1.5, 3.25e9, math.inf, -math.inf])
+def test_num_unnum_round_trip(x):
+    encoded = json.loads(json.dumps(_num(x)))
+    assert _unnum(encoded) == x
+
+
+def test_num_unnum_nan_and_none():
+    assert math.isnan(_unnum(json.loads(json.dumps(_num(math.nan)))))
+    assert _unnum(_num(None)) is None
+
+
+def test_trace_round_trips_phase_times(tmp_path):
+    """Per-phase times (download/compute/upload) and landing instants of
+    *late* uploads survive record -> load -> draw_events."""
+    from repro.fl.scenarios import (ReplayFailureModel, TraceRecorder,
+                                    make_scenario_model)
+    path = str(tmp_path / "t.ndjson")
+    m = make_scenario_model("diurnal", 8, model_bytes=0.2e6, deadline_s=2.0,
+                            seed=0)
+    sel = np.ones(8, dtype=bool)
+    with TraceRecorder(path, {"scenario": "scenario:diurnal",
+                              "n_clients": 8, "deadline_s": 2.0}) as rec:
+        for r in range(1, 6):
+            ev = m.draw_events(r)
+            rec.write_round(r, sel, ev.connected_mask(), ev)
+    replay = ReplayFailureModel(path, n_clients=8)
+    m.reset()
+    for r in range(1, 6):
+        want, got = m.draw_events(r), replay.draw_events(r)
+        for we, ge in zip(want.events, got.events):
+            assert ge.finish_s == we.finish_s                # incl. inf, late
+            assert ge.t_download_s == we.t_download_s
+            assert ge.t_compute_s == we.t_compute_s
+            assert ge.t_upload_s == we.t_upload_s
+        np.testing.assert_array_equal(want.late_mask(), got.late_mask())

@@ -14,6 +14,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.weights_qp import (chi2_effective, project_simplex,  # noqa: E402
                                    solve_weights)
 from repro.fl.partition import partition  # noqa: E402
+from repro.fl.scenarios.trace import _num, _unnum  # noqa: E402
 from repro.kernels.fedagg import fedagg  # noqa: E402
 
 
@@ -106,6 +107,24 @@ def test_simplex_projection_properties(seed, n):
     assert np.all(x >= -1e-6)
     assert abs(x.sum() - total) < 1e-4
     assert np.all(x[~mask] == 0)
+
+
+# ---------------------------------------------------------------------------
+# trace float encoding: lossless JSON round-trip incl. inf/-inf/nan, so an
+# async run's recorded arrival times replay bit-exactly
+# ---------------------------------------------------------------------------
+@given(st.one_of(st.none(),
+                 st.floats(allow_nan=True, allow_infinity=True)))
+@settings(max_examples=200, deadline=None)
+def test_trace_num_unnum_round_trip(x):
+    import json
+    got = _unnum(json.loads(json.dumps(_num(x))))
+    if x is None:
+        assert got is None
+    elif np.isnan(x):
+        assert np.isnan(got)
+    else:
+        assert got == x
 
 
 # ---------------------------------------------------------------------------
