@@ -1,0 +1,121 @@
+"""Codec × scenario world × server mode sweep: does compression convert
+``deadline``-cause drops into participants?
+
+The deadline simulator prices every upload at the codec's exact byte count,
+so a lossy codec's smaller payload finishes earlier and clients that missed
+the fp32 deadline recover.  ``model_bytes`` simulates a paper-scale payload
+over the toy problem (the codec scales it by its measured compression ratio
+on the real trainable pytree).  Rows:
+
+  comm:<world>/<mode>/<codec>,us_per_round,final_accuracy
+  comm:<world>/<mode>/<codec>/participants,0,mean per-round participant count
+  comm:<world>/<mode>/<codec>/upload_bytes,0,per-client bytes on wire
+  comm:<world>/deadline_drop_fp32,0,fraction of up-link rounds lost to the
+      deadline at fp32 size (the recovery headroom compression plays for)
+  comm:kernel/dequant_fedagg_*,us,fused vs decode-then-aggregate timing
+
+Acceptance (ISSUE 3): on ≥ 2 worlds a lossy codec strictly increases the
+mean participant count vs fp32 at the same deadline, with final accuracy
+within 1 point.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_problem
+from repro.core.strategies import STRATEGIES
+from repro.fl.scenarios.engine import CAUSE_DEADLINE
+
+# Simulated fp32 payload (bytes): paper-scale upload over the toy model.
+MODEL_BYTES = 4e6
+DEADLINE_S = 5.0
+
+MODES = {"sync": "fedauto", "async": "fedauto_async"}
+
+
+def _run_one(world: str, mode: str, codec: str, rounds: int, quick: bool):
+    runner = make_problem(non_iid=True, failure_mode=f"scenario:{world}",
+                          quick=quick, deadline_s=DEADLINE_S, seed=0,
+                          server_mode=mode, tau_max=4, buffer_k=4,
+                          codec=codec, model_bytes=MODEL_BYTES)
+    t0 = time.time()
+    hist = runner.run(STRATEGIES[MODES[mode]](), rounds=rounds)
+    us_per_round = (time.time() - t0) / rounds * 1e6
+    parts = runner.loop.participants_per_round
+    return (hist[-1], float(np.mean(parts)) if parts else 0.0,
+            runner.upload_bytes, us_per_round)
+
+
+def _deadline_drop_fraction(world: str, rounds: int, quick: bool) -> float:
+    """Of the client-rounds whose link was up, how many died to the
+    deadline at fp32 size — the headroom compression can recover."""
+    m = make_problem(non_iid=True, failure_mode=f"scenario:{world}",
+                     quick=quick, deadline_s=DEADLINE_S, seed=0,
+                     model_bytes=MODEL_BYTES)
+    m.failures.reset()
+    up, late = 0, 0
+    for r in range(1, rounds + 1):
+        for e in m.failures.draw_events(r).events:
+            up += int(e.up)
+            late += int(e.up and e.cause == CAUSE_DEADLINE)
+    return late / max(up, 1)
+
+
+def _bench_kernel(quick: bool) -> List[str]:
+    """Fused dequantize-and-β-accumulate vs decode-then-fedagg."""
+    from repro.kernels import ref
+    M, P = 22, 100_000 if quick else 1_000_000
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.integers(-127, 128, (M, P)), jnp.int8)
+    scales = jnp.asarray(rng.uniform(1e-4, 1e-2, M), jnp.float32)
+    betas = jnp.asarray(rng.dirichlet(np.ones(M)), jnp.float32)
+
+    fused = jax.jit(ref.dequant_fedagg)
+    unfused = jax.jit(lambda q_, s_, b_: ref.fedagg(
+        q_.astype(jnp.float32) * s_[:, None], b_))
+    rows = []
+    for name, fn in [("fused", fused), ("decode_then_agg", unfused)]:
+        fn(q, scales, betas)                        # compile
+        t0 = time.time()
+        for _ in range(5):
+            out = fn(q, scales, betas)
+        jax.block_until_ready(out)
+        us = (time.time() - t0) / 5 * 1e6
+        gbps = M * P / (us / 1e6) / 1e9             # int8 payload bytes read
+        rows.append(f"comm:kernel/dequant_fedagg_{name},{us:.0f},{gbps:.1f}")
+    return rows
+
+
+def run(quick: bool = True) -> List[str]:
+    rows = []
+    rounds = 8 if quick else 30
+    worlds = (["lossy_uplink", "diurnal"] if quick
+              else ["lossy_uplink", "diurnal", "correlated_wifi",
+                    "cross_region"])
+    codecs = (["fp32", "int8", "topk:0.1"] if quick
+              else ["fp32", "fp16", "int8", "qsgd:4", "topk:0.1", "sign1"])
+    for world in worlds:
+        rows.append(f"comm:{world}/deadline_drop_fp32,0,"
+                    f"{_deadline_drop_fraction(world, rounds, quick):.4f}")
+        for mode in MODES:
+            for codec in codecs:
+                final, parts, up_bytes, us = _run_one(world, mode, codec,
+                                                      rounds, quick)
+                rows.append(f"comm:{world}/{mode}/{codec},{us:.0f},"
+                            f"{final:.4f}")
+                rows.append(f"comm:{world}/{mode}/{codec}/participants,0,"
+                            f"{parts:.3f}")
+                rows.append(f"comm:{world}/{mode}/{codec}/upload_bytes,0,"
+                            f"{up_bytes:.0f}")
+    rows.extend(_bench_kernel(quick))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

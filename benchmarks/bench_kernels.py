@@ -32,6 +32,15 @@ def run(quick: bool = True):
     gbps = 22 * P * 4 / (us / 1e6) / 1e9
     rows.append(f"kernels/fedagg_ref_xla,{us:.0f},{gbps:.1f}")
 
+    # dequant_fedagg: same reduction over int8 payloads (repro.fl.comm) —
+    # 1 byte/param streamed instead of 4, dequantized in-register
+    q = jnp.asarray(jax.random.randint(key, (22, P), -127, 128), jnp.int8)
+    scales = jax.random.uniform(key, (22,), jnp.float32, 1e-4, 1e-2)
+    dq_ref = jax.jit(ref.dequant_fedagg)
+    us = _time(dq_ref, q, scales, betas)
+    gbps = 22 * P / (us / 1e6) / 1e9                # int8: 1 B/param read
+    rows.append(f"kernels/dequant_fedagg_ref_xla,{us:.0f},{gbps:.1f}")
+
     # flash attention reference (B=1, S=1024, H=8)
     S = 512 if quick else 2048
     q = jax.random.normal(key, (1, S, 8, 64), jnp.float32)

@@ -28,7 +28,9 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
                  trace_record: Optional[str] = None,
                  trace_replay: Optional[str] = None,
                  server_mode: str = "sync", tau_max: int = 5,
-                 buffer_k: int = 4, eval_every: Optional[int] = None):
+                 buffer_k: int = 4, eval_every: Optional[int] = None,
+                 codec: str = "fp32",
+                 model_bytes: Optional[float] = -1.0):
     n_clients = 8 if quick else 20
     n_classes = 4 if quick else 10
     img = 8 if quick else 16
@@ -57,12 +59,16 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
         resource_opt=resource_opt,
         seed=seed,
         eval_every=eval_every if eval_every is not None else 10 ** 6,
-        model_bytes=0.2e6 if quick else 0.86e6,
+        # -1 keeps the historical benchmark sizes; None derives from the
+        # trainable pytree (the FFTConfig default); a float overrides.
+        model_bytes=(0.2e6 if quick else 0.86e6) if model_bytes == -1.0
+        else model_bytes,
         trace_record=trace_record,
         trace_replay=trace_replay,
         server_mode=server_mode,
         tau_max=tau_max,
         buffer_k=buffer_k,
+        codec=codec,
     )
     if deadline_s is not None:
         cfg.deadline_s = deadline_s

@@ -14,10 +14,11 @@ def main() -> None:
                     help="comma-separated bench names (e.g. table2,kernels)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_aggregation, bench_async, bench_convergence,
-                            bench_kernels, bench_resourceopt, bench_scenarios,
-                            bench_table1, bench_table2, bench_table3,
-                            bench_table4, bench_table5, roofline)
+    from benchmarks import (bench_aggregation, bench_async, bench_comm,
+                            bench_convergence, bench_kernels,
+                            bench_resourceopt, bench_scenarios, bench_table1,
+                            bench_table2, bench_table3, bench_table4,
+                            bench_table5, roofline)
     benches = {
         "kernels": bench_kernels,
         "aggregation": bench_aggregation,
@@ -30,6 +31,7 @@ def main() -> None:
         "resourceopt": bench_resourceopt,
         "scenarios": bench_scenarios,
         "async": bench_async,
+        "comm": bench_comm,
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else None

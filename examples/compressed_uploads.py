@@ -1,0 +1,69 @@
+"""Compressed uploads through the deadline simulator.
+
+Runs the same scenario world twice — fp32 uploads vs a lossy codec — and
+shows the codec converting deadline-cause drops into participants: smaller
+payloads finish before the round timeout, so clients the fp32 run lost are
+back in the cohort, at (near) identical accuracy thanks to error feedback.
+
+    PYTHONPATH=src python examples/compressed_uploads.py
+    PYTHONPATH=src python examples/compressed_uploads.py --codec topk:0.05
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.core.strategies import STRATEGIES
+from repro.fl.runtime import FFTConfig
+from repro.fl.toy import make_toy_runner
+
+
+def run_once(cfg: FFTConfig, rounds: int):
+    runner = make_toy_runner(cfg, n_samples=900, public_per_class=10,
+                             pretrain_steps=15)
+    hist = runner.run(STRATEGIES["fedauto"](), rounds=rounds)
+    parts = runner.loop.participants_per_round
+    return {
+        "acc": hist[-1],
+        "participants": float(np.mean(parts)),
+        "upload_bytes": runner.upload_bytes,
+        "uplink_total": runner.comm.total_uplink_bytes,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--codec", default="int8",
+                    help="lossy codec to compare against fp32")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--world", default="lossy_uplink")
+    args = ap.parse_args()
+
+    # model_bytes simulates a paper-scale fp32 payload over the toy CNN; the
+    # codec scales it by its exact compression ratio on the real pytree.
+    base = FFTConfig(n_clients=8, k_selected=8, local_steps=3, batch_size=16,
+                     lr=0.05, seed=0, eval_every=2,
+                     failure_mode=f"scenario:{args.world}",
+                     deadline_s=5.0, model_bytes=4e6)
+
+    print(f"world={args.world} deadline={base.deadline_s}s "
+          f"fp32_payload={base.model_bytes:.0f}B rounds={args.rounds}\n")
+    results = {}
+    for codec in ["fp32", args.codec]:
+        results[codec] = run_once(dataclasses.replace(base, codec=codec),
+                                  args.rounds)
+        r = results[codec]
+        print(f"  {codec:>10}: upload {r['upload_bytes']:>10.0f} B/client  "
+              f"mean participants {r['participants']:.2f}/8  "
+              f"final acc {r['acc']:.4f}")
+    f, c = results["fp32"], results[args.codec]
+    print(f"\n{args.codec} cut bytes-on-wire "
+          f"{f['upload_bytes'] / max(c['upload_bytes'], 1):.1f}x and "
+          f"recovered {c['participants'] - f['participants']:+.2f} "
+          f"participants/round (acc {c['acc'] - f['acc']:+.4f}).")
+
+
+if __name__ == "__main__":
+    main()

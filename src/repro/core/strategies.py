@@ -41,6 +41,8 @@ class RoundContext:
     full_participation: bool
     eps_estimates: Optional[np.ndarray] = None   # TF-Aggregation inputs
     runner: Any = None                    # back-reference (compensatory training)
+    codec: Optional[str] = None           # wire codec of the client uploads
+    upload_nbytes: Optional[float] = None  # bytes-on-wire per client upload
 
 
 class Strategy:
@@ -345,6 +347,8 @@ class AsyncRoundContext:
     server_hist: np.ndarray
     global_hist: np.ndarray
     runner: Any = None
+    codec: Optional[str] = None           # wire codec of the client uploads
+    upload_nbytes: Optional[float] = None  # bytes-on-wire per client upload
 
 
 class AsyncStrategy(Strategy):
@@ -370,7 +374,8 @@ class AsyncStrategy(Strategy):
             global_params=ctx.global_params, server_model=ctx.server_model,
             arrivals=arrivals, p=ctx.p, client_hists=ctx.client_hists,
             server_hist=ctx.server_hist, global_hist=ctx.global_hist,
-            runner=ctx.runner)
+            runner=ctx.runner, codec=ctx.codec,
+            upload_nbytes=ctx.upload_nbytes)
         return self.aggregate_async(actx)
 
 

@@ -1,0 +1,24 @@
+"""Communication codec subsystem (compressed uploads, bytes-on-wire).
+
+Three layers:
+
+* ``codecs`` — registry of update codecs (``FFTConfig.codec = "fp32" |
+  "fp16" | "int8" | "qsgd:<bits>" | "topk:<frac>" | "sign1" | "lora_only"``)
+  mapping update pytrees to payloads with exact, value-independent byte
+  counts.
+* ``state``  — per-run ``CommState``: client-side encode / server-side
+  decode with per-client error-feedback residuals, plus the upload/download
+  byte accounting the deadline simulator prices rounds with.
+* the fused dequantize-and-β-accumulate Pallas kernel lives with the other
+  kernels (``repro.kernels.dequant_agg``; dispatch via ``kernels.ops``).
+"""
+from repro.fl.comm.codecs import (CODECS, Codec, EncodedLeaf, Payload,
+                                  available_codecs, make_codec)
+from repro.fl.comm.fused import aggregate_quantized, is_quantized
+from repro.fl.comm.state import CommState, fp32_nbytes
+
+__all__ = [
+    "CODECS", "Codec", "EncodedLeaf", "Payload", "available_codecs",
+    "make_codec", "CommState", "fp32_nbytes",
+    "aggregate_quantized", "is_quantized",
+]

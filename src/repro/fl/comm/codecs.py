@@ -1,0 +1,294 @@
+"""Update codecs: client update pytree ⇄ wire payload with exact byte counts.
+
+The paper's failure mechanism is uploads that don't survive the link; the
+one lever a deployment has against deadline drops is *sending fewer bytes*.
+Each codec here encodes a client's update (the float32 delta from the round's
+global model, plus any error-feedback residual) into a ``Payload`` whose
+``nbytes`` is the exact bytes-on-wire count, and decodes it server-side.
+
+Crucially, every codec's byte count is a function of the pytree *structure*
+only, never of the values (``nbytes(template)``) — so the deadline simulator
+can price the upload before local training runs, exactly as a real client
+knows its payload size from the model architecture alone.
+
+Registry specs (``FFTConfig.codec``):
+
+  fp32        identity float32 (4 B/param) — the lossless baseline
+  fp16        half-precision cast (2 B/param)
+  int8        per-leaf absmax linear quantization (1 B/param + 4 B scale)
+  qsgd:<b>    b-bit (2..8) absmax quantization, deterministic nearest
+              rounding (⌈b·n/8⌉ B + 4 B scale per leaf); the 1-bit
+              FeedSign-style case is ``sign1``
+  topk:<f>    top-⌈f·n⌉ magnitudes per leaf as (int32 index, fp32 value)
+  sign1       1 bit/param sign + per-leaf mean-|x| scale (signSGD/FeedSign)
+  lora_only   identity fp32 over a LoRA adapter pytree; *refuses* full-param
+              trees, making "adapters only travel" an enforced invariant
+
+All codecs are deterministic (no RNG), so record/replay of a compressed run
+is bit-exact; lossy ones stay convergent through the per-client
+error-feedback residuals kept by ``CommState`` (see ``state.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class EncodedLeaf:
+    """One pytree leaf on the wire."""
+    shape: Tuple[int, ...]
+    data: Dict[str, Any]          # codec-specific arrays/scalars
+    nbytes: int                   # exact wire bytes for this leaf
+
+
+@dataclasses.dataclass
+class Payload:
+    """One client upload: encoded leaves in ``jax.tree.leaves`` order."""
+    codec: str
+    leaves: List[EncodedLeaf]
+    treedef: Any
+    nbytes: int                   # Σ leaf nbytes (what the link carries)
+
+
+class Codec:
+    """Leaf-wise update codec.  ``encode_leaf``/``decode_leaf`` operate on
+    float32 arrays; ``leaf_nbytes`` must be value-independent."""
+
+    name = "base"
+    lossless = False              # lossless ⇒ no error-feedback residual kept
+
+    def encode_leaf(self, x: jnp.ndarray) -> EncodedLeaf:
+        raise NotImplementedError
+
+    def decode_leaf(self, el: EncodedLeaf) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def leaf_nbytes(self, shape: Tuple[int, ...]) -> int:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- pytrees
+    def encode(self, tree) -> Payload:
+        leaves, treedef = jax.tree.flatten(tree)
+        enc = [self.encode_leaf(jnp.asarray(l, jnp.float32)) for l in leaves]
+        return Payload(codec=self.name, leaves=enc, treedef=treedef,
+                       nbytes=sum(e.nbytes for e in enc))
+
+    def decode(self, payload: Payload):
+        dec = [self.decode_leaf(e) for e in payload.leaves]
+        return jax.tree.unflatten(payload.treedef, dec)
+
+    def nbytes(self, template) -> int:
+        """Exact wire bytes for any value with ``template``'s structure."""
+        return sum(self.leaf_nbytes(tuple(l.shape))
+                   for l in jax.tree.leaves(template))
+
+    def validate_template(self, template, lora_cfg=None) -> None:
+        """Hook: codecs with structural requirements raise here."""
+
+
+def _size(shape: Tuple[int, ...]) -> int:
+    return int(np.prod(shape)) if shape else 1
+
+
+# ---------------------------------------------------------------------------
+# lossless float codecs
+# ---------------------------------------------------------------------------
+class Fp32Codec(Codec):
+    name = "fp32"
+    lossless = True
+
+    def encode_leaf(self, x):
+        return EncodedLeaf(tuple(x.shape), {"v": x},
+                           self.leaf_nbytes(tuple(x.shape)))
+
+    def decode_leaf(self, el):
+        return el.data["v"]
+
+    def leaf_nbytes(self, shape):
+        return 4 * _size(shape)
+
+
+class Fp16Codec(Codec):
+    """Half-precision cast.  Lossy in general (hence error feedback), exact
+    on fp16-representable values."""
+    name = "fp16"
+
+    def encode_leaf(self, x):
+        return EncodedLeaf(tuple(x.shape), {"v": x.astype(jnp.float16)},
+                           self.leaf_nbytes(tuple(x.shape)))
+
+    def decode_leaf(self, el):
+        return el.data["v"].astype(jnp.float32)
+
+    def leaf_nbytes(self, shape):
+        return 2 * _size(shape)
+
+
+class LoRAOnlyCodec(Fp32Codec):
+    """fp32 over adapter factors only.  The runner's trainable pytree *is*
+    the adapter dict in LoRA mode, so numerically this is the identity — the
+    codec's job is to refuse full-parameter trees, turning "only adapters
+    travel" from a convention into an enforced invariant, and to make the
+    byte accounting reflect adapter-sized uploads."""
+    name = "lora_only"
+
+    def validate_template(self, template, lora_cfg=None) -> None:
+        if lora_cfg is None:
+            raise ValueError(
+                "codec 'lora_only' needs a LoRA run (lora_cfg set): the "
+                "trainable pytree must be the adapter dict, not full params")
+        ok = (isinstance(template, dict) and template and all(
+            isinstance(v, dict) and set(v) == {"a", "b"}
+            for v in template.values()))
+        if not ok:
+            raise ValueError(
+                "codec 'lora_only': trainable pytree is not an adapter dict "
+                "({path: {'a','b'}}); refusing full-parameter upload")
+
+
+# ---------------------------------------------------------------------------
+# quantizers (deterministic nearest rounding; EF makes them convergent)
+# ---------------------------------------------------------------------------
+class Int8Codec(Codec):
+    """Per-leaf absmax linear quantization to int8: q = round(127·x/‖x‖∞).
+    Wire: 1 B/param + one fp32 scale per leaf.  |x − x̂| ≤ scale/2."""
+    name = "int8"
+
+    def encode_leaf(self, x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return EncodedLeaf(tuple(x.shape), {"q": q, "scale": scale},
+                           self.leaf_nbytes(tuple(x.shape)))
+
+    def decode_leaf(self, el):
+        return el.data["q"].astype(jnp.float32) * el.data["scale"]
+
+    def leaf_nbytes(self, shape):
+        return _size(shape) + 4
+
+
+class QSGDCodec(Codec):
+    """b-bit absmax quantization (levels = 2^{b−1} − 1 signed).
+    Deterministic nearest rounding instead of QSGD's
+    stochastic rounding — the bias is absorbed by error feedback, and
+    determinism is what keeps record/replay and sync-vs-async comparisons
+    bit-exact.  Wire: ⌈b·n/8⌉ B + 4 B scale per leaf."""
+
+    def __init__(self, bits: int):
+        # 2^b − 1 symmetric values fit b bits; the 1-bit case is ``sign1``
+        if not 2 <= bits <= 8:
+            raise ValueError(f"qsgd bits must be in 2..8 (1-bit = sign1), "
+                             f"got {bits}")
+        self.bits = bits
+        self.name = f"qsgd:{bits}"
+        self.levels = (1 << (bits - 1)) - 1           # signed levels
+
+    def encode_leaf(self, x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / self.levels
+        q = jnp.clip(jnp.round(x / scale),
+                     -self.levels, self.levels).astype(jnp.int8)
+        return EncodedLeaf(tuple(x.shape), {"q": q, "scale": scale},
+                           self.leaf_nbytes(tuple(x.shape)))
+
+    def decode_leaf(self, el):
+        return el.data["q"].astype(jnp.float32) * el.data["scale"]
+
+    def leaf_nbytes(self, shape):
+        return math.ceil(self.bits * _size(shape) / 8) + 4
+
+
+class Sign1Codec(Codec):
+    """signSGD / FeedSign-style 1-bit codec: sign(x) at 1 bit/param, scaled
+    by the leaf's mean |x| (the L1 scaling that makes signSGD a descent
+    direction in expectation).  Wire: ⌈n/8⌉ B + 4 B scale per leaf."""
+    name = "sign1"
+
+    def encode_leaf(self, x):
+        scale = jnp.mean(jnp.abs(x))
+        s = jnp.where(x < 0, jnp.int8(-1), jnp.int8(1))
+        return EncodedLeaf(tuple(x.shape), {"q": s, "scale": scale},
+                           self.leaf_nbytes(tuple(x.shape)))
+
+    def decode_leaf(self, el):
+        return el.data["q"].astype(jnp.float32) * el.data["scale"]
+
+    def leaf_nbytes(self, shape):
+        return math.ceil(_size(shape) / 8) + 4
+
+
+class TopKCodec(Codec):
+    """Per-leaf magnitude sparsification: keep the ⌈f·n⌉ largest-|x| entries
+    as (int32 index, fp32 value) pairs; everything else is zero server-side
+    and carried forward by the error-feedback residual."""
+
+    def __init__(self, frac: float):
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"topk fraction must be in (0, 1], got {frac}")
+        self.frac = frac
+        self.name = f"topk:{frac:g}"
+
+    def _k(self, shape) -> int:
+        return max(1, math.ceil(self.frac * _size(shape)))
+
+    def encode_leaf(self, x):
+        flat = x.reshape(-1)
+        k = self._k(tuple(x.shape))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        idx = jnp.sort(idx)                      # deterministic order on wire
+        return EncodedLeaf(tuple(x.shape),
+                           {"idx": idx.astype(jnp.int32), "val": flat[idx]},
+                           self.leaf_nbytes(tuple(x.shape)))
+
+    def decode_leaf(self, el):
+        n = _size(el.shape)
+        flat = jnp.zeros((n,), jnp.float32).at[el.data["idx"]].set(
+            el.data["val"])
+        return flat.reshape(el.shape)
+
+    def leaf_nbytes(self, shape):
+        return 8 * self._k(shape)                # 4 B index + 4 B value
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+CODECS: Dict[str, Type[Codec]] = {
+    "fp32": Fp32Codec,
+    "fp16": Fp16Codec,
+    "int8": Int8Codec,
+    "sign1": Sign1Codec,
+    "lora_only": LoRAOnlyCodec,
+}
+
+PARAMETRIC_CODECS = ("qsgd", "topk")
+
+
+def available_codecs() -> List[str]:
+    return sorted(CODECS) + [f"{p}:<arg>" for p in PARAMETRIC_CODECS]
+
+
+def make_codec(spec: str) -> Codec:
+    """Parse a codec spec ("fp32", "qsgd:4", "topk:0.1", ...) and build it."""
+    spec = spec.strip()
+    if spec in CODECS:
+        return CODECS[spec]()
+    if ":" in spec:
+        family, arg = spec.split(":", 1)
+        if family == "qsgd":
+            try:
+                return QSGDCodec(int(arg))
+            except ValueError as e:
+                raise ValueError(f"bad codec spec {spec!r}: {e}") from None
+        if family == "topk":
+            try:
+                return TopKCodec(float(arg))
+            except ValueError as e:
+                raise ValueError(f"bad codec spec {spec!r}: {e}") from None
+    raise ValueError(f"unknown codec {spec!r}; "
+                     f"available: {available_codecs()}")

@@ -1,0 +1,57 @@
+"""Fused server-side aggregation of quantized payloads.
+
+The generic path decodes every payload to float32 and then β-reduces
+(``aggregate_pytrees``) — M·4 bytes/param of HBM traffic.  When every
+upload is an int8-family payload (``int8``, ``qsgd:<bits>``, ``sign1``),
+the dequantize and the β-reduction fuse into one pass over the 1-byte
+payloads (``kernels.ops.dequant_fedagg``; Pallas on TPU):
+
+    Σ_m β_m · decode(p_m)  =  Σ_m (β_m s_m^{(leaf)}) · q_m^{(leaf)}
+
+``aggregate_quantized`` returns that β-weighted *decoded-delta* sum.  With β
+on the simplex the full FedAvg-style model aggregate follows as
+``t_global + aggregate_quantized(...)`` since Σ β_m t_global = t_global —
+see ``bench_comm.py`` for the fused-vs-unfused comparison and
+``tests/test_comm.py`` for the fp32-tolerance equivalence.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.comm.codecs import Payload
+from repro.kernels import ops as kops
+
+_QUANT_KEYS = {"q", "scale"}
+
+
+def is_quantized(payload: Payload) -> bool:
+    """True iff every leaf is an int8-family (q, scale) payload."""
+    return all(set(el.data) == _QUANT_KEYS and el.data["q"].dtype == jnp.int8
+               for el in payload.leaves)
+
+
+def aggregate_quantized(payloads: Sequence[Payload], betas) -> object:
+    """β-weighted sum of decoded payload pytrees, dequantized in-kernel.
+
+    payloads: M same-structure int8-family payloads; betas: (M,).
+    Returns the pytree Σ_m β_m · decode(payloads[m]) in float32.
+    """
+    if not payloads:
+        raise ValueError("aggregate_quantized needs at least one payload")
+    if not all(is_quantized(p) for p in payloads):
+        raise ValueError("aggregate_quantized only takes int8-family "
+                         "payloads (int8 / qsgd:<bits> / sign1)")
+    betas = jnp.asarray(betas, jnp.float32)
+    n_leaves = len(payloads[0].leaves)
+    out_leaves: List[jnp.ndarray] = []
+    for li in range(n_leaves):
+        els = [p.leaves[li] for p in payloads]
+        q = jnp.stack([e.data["q"].reshape(-1) for e in els])       # (M, P)
+        scales = jnp.stack([jnp.asarray(e.data["scale"], jnp.float32)
+                            for e in els])                          # (M,)
+        flat = kops.dequant_fedagg(q, scales, betas)                # (P,)
+        out_leaves.append(flat.reshape(els[0].shape))
+    return jax.tree.unflatten(payloads[0].treedef, out_leaves)

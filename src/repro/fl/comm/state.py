@@ -1,0 +1,105 @@
+"""Per-run communication state: error feedback + bytes-on-wire accounting.
+
+``CommState`` sits between a client's local update and the server's
+aggregation: the client encodes its *delta* from the round's global model
+(plus its carried error-feedback residual), the link carries exactly
+``payload.nbytes`` bytes, and the server decodes back to a model pytree, so
+every strategy aggregates reconstructed models unchanged.
+
+Error feedback (EF / EF21 family): for client i with residual e_i,
+
+    c   = (w_i − w̄) + e_i          # compress the residual-corrected delta
+    p   = encode(c);  d = decode(p)
+    e_i ← c − d                     # what the wire dropped, retried next time
+    ŵ_i = w̄ + d                    # what the server reconstructs
+
+For lossless codecs e_i stays exactly zero and ŵ_i ≡ w_i (up to fp32 cast).
+The residual carry is what keeps biased compressors (deterministic
+quantizers, top-k, sign) convergent: the compression error is not lost, it
+is re-sent, so the *cumulative* decoded mass tracks the cumulative true
+delta with bounded lag (tested as residual contraction in
+``tests/test_comm.py``).
+
+Byte accounting: every codec's payload size is value-independent, so
+``upload_nbytes`` is known before local training — the deadline simulator
+prices uploads with it.  When ``FFTConfig.model_bytes`` overrides the
+derived fp32 size (simulating a larger model over the same toy problem),
+upload bytes scale by the codec's exact compression ratio on the real
+template, keeping the override and the codec composable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.comm.codecs import Codec, Payload
+
+
+def fp32_nbytes(template) -> int:
+    """Bytes of the baseline uncompressed fp32 upload of ``template``."""
+    return sum(4 * l.size for l in jax.tree.leaves(template))
+
+
+class CommState:
+    """Codec + per-client error-feedback residuals for one runner."""
+
+    def __init__(self, codec: Codec, template, *,
+                 model_bytes_override: Optional[float] = None,
+                 lora_cfg=None):
+        codec.validate_template(template, lora_cfg=lora_cfg)
+        self.codec = codec
+        self.fp32_nbytes = fp32_nbytes(template)
+        self.wire_nbytes = codec.nbytes(template)
+        self.compression_ratio = self.wire_nbytes / max(self.fp32_nbytes, 1)
+        # Simulated sizes: exact codec bytes by default; scaled by the
+        # codec's measured ratio under an explicit model_bytes override.
+        if model_bytes_override is None:
+            self.download_bytes = float(self.fp32_nbytes)
+            self.upload_bytes = float(self.wire_nbytes)
+        else:
+            self.download_bytes = float(model_bytes_override)
+            self.upload_bytes = float(model_bytes_override *
+                                      self.compression_ratio)
+        self._residuals: Dict[int, Any] = {}
+        self.total_uplink_bytes = 0.0          # cumulative, all clients
+        self.n_encoded = 0
+
+    # ---------------------------------------------------------------- wire
+    def reset(self) -> None:
+        self._residuals.clear()
+        self.total_uplink_bytes = 0.0
+        self.n_encoded = 0
+
+    def residual(self, client: int):
+        return self._residuals.get(client)
+
+    def roundtrip(self, client: int, model, global_params
+                  ) -> Tuple[Any, Payload]:
+        """Client-encode then server-decode one upload.
+
+        Returns ``(reconstructed_model, payload)`` where the reconstruction
+        has ``model``'s dtypes and the payload carries the exact wire bytes.
+        Mutates the client's error-feedback residual (lossy codecs only).
+        """
+        delta = jax.tree.map(
+            lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32),
+            model, global_params)
+        if self.codec.lossless:
+            payload = self.codec.encode(delta)
+            decoded = self.codec.decode(payload)
+        else:
+            resid = self._residuals.get(client)
+            carry = (delta if resid is None else
+                     jax.tree.map(jnp.add, delta, resid))
+            payload = self.codec.encode(carry)
+            decoded = self.codec.decode(payload)
+            self._residuals[client] = jax.tree.map(jnp.subtract, carry,
+                                                   decoded)
+        recon = jax.tree.map(
+            lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
+            global_params, decoded)
+        self.total_uplink_bytes += payload.nbytes
+        self.n_encoded += 1
+        return recon, payload

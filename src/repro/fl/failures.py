@@ -32,6 +32,12 @@ class FailureModel:
     def reset(self) -> None:
         pass
 
+    def set_payload_bytes(self, upload_bytes=None, download_bytes=None
+                          ) -> None:
+        """Per-client, per-direction wire sizes (repro.fl.comm codecs).
+        Boolean models have no time dimension, so the default is a no-op;
+        timing-aware models forward to their ``DeadlineSimulator``."""
+
 
 class NoFailures(FailureModel):
     def __init__(self, n: int):

@@ -6,7 +6,11 @@ partial-parameter (LoRA) fine-tuning, all strategies in
 ``repro.core.strategies``, and the ResourceOpt network interventions.
 The round loop itself is pluggable (``repro.fl.server``):
 ``FFTConfig.server_mode`` picks the synchronous driver or the
-staleness-buffered asynchronous/buffered ones.
+staleness-buffered asynchronous/buffered ones.  Client uploads travel
+through the communication codec (``FFTConfig.codec``, ``repro.fl.comm``):
+encoded client-side after the local update, decoded server-side before
+strategy aggregation, with the codec's exact byte count pricing the upload
+in the deadline simulator.
 
 Local updates are one jitted ``lax.scan`` of E minibatch-SGD steps; client
 datasets are resampled to a common static shape so a single compiled update
@@ -41,7 +45,8 @@ class FFTConfig:
     failure_mode: str = "mixed"           # none | transient | intermittent |
     #                                       mixed | scenario:<name> | replay:<path>
     duration_max: int = 10
-    model_bytes: float = 0.86e6
+    model_bytes: Optional[float] = None   # fp32 upload bytes; None = derive
+    #                                       from the actual trainable pytree
     tx_delay_s: float = 0.8
     resource_opt: Optional[str] = None    # None | "joint" | "per_standard"
     seed: int = 0
@@ -57,6 +62,9 @@ class FFTConfig:
     server_mode: str = "sync"             # sync | async | buffered
     tau_max: int = 5                      # max staleness (rounds) accepted async
     buffer_k: int = 4                     # buffered mode: arrivals per agg step
+    # --- communication codec (repro.fl.comm) ----------------------------------
+    codec: str = "fp32"                   # fp32 | fp16 | int8 | qsgd:<bits> |
+    #                                       topk:<frac> | sign1 | lora_only
 
 
 class FFTRunner:
@@ -117,9 +125,20 @@ class FFTRunner:
         else:
             self.global_params = self.base_params
 
+        # --- communication codec (repro.fl.comm) ------------------------------
+        # The trainable pytree (adapters in LoRA mode, full params otherwise)
+        # fixes the wire sizes: model_bytes derives from it unless the config
+        # overrides, and the codec's exact compression ratio prices uploads.
+        from repro.fl.comm import CommState, make_codec
+        self.comm = CommState(make_codec(cfg.codec), self.global_params,
+                              model_bytes_override=cfg.model_bytes,
+                              lora_cfg=lora_cfg)
+        self.model_bytes = self.comm.download_bytes       # fp32 reference size
+        self.upload_bytes = self.comm.upload_bytes        # codec wire size
+
         # --- network + failures ----------------------------------------------
         self.channels = net_mod.build_network(cfg.n_clients, seed=cfg.seed)
-        rate = net_mod.uplink_rate(cfg.model_bytes, cfg.tx_delay_s)
+        rate = net_mod.uplink_rate(self.upload_bytes, cfg.tx_delay_s)
         if cfg.resource_opt:
             self.channels = net_mod.resource_opt(
                 self.channels, rate, per_standard=cfg.resource_opt == "per_standard",
@@ -130,7 +149,7 @@ class FFTRunner:
         self.failures = fail_mod.make_failure_model(
             mode, self.channels, rate,
             duration_max=cfg.duration_max, seed=cfg.seed,
-            model_bytes=cfg.model_bytes, deadline_s=cfg.deadline_s,
+            model_bytes=self.model_bytes, deadline_s=cfg.deadline_s,
             compute_s=cfg.compute_s)
         if cfg.server_mode not in ("sync", "async", "buffered"):
             raise ValueError(f"unknown server_mode {cfg.server_mode!r}")
@@ -141,9 +160,35 @@ class FFTRunner:
             # from the physical channels (capacity -> upload time, Eq. 41).
             from repro.fl.server.timeline import TimedFailureAdapter
             self.failures = TimedFailureAdapter(
-                self.failures, self.channels, model_bytes=cfg.model_bytes,
+                self.failures, self.channels, model_bytes=self.model_bytes,
                 deadline_s=cfg.deadline_s, compute_s=cfg.compute_s,
                 seed=cfg.seed)
+        # Wire sizes into the timing model: uploads carry the codec's payload,
+        # downloads the fp32 global broadcast (uplink-only compression).
+        self.failures.set_payload_bytes(
+            upload_bytes=np.full(cfg.n_clients, self.upload_bytes),
+            download_bytes=np.full(cfg.n_clients, self.model_bytes))
+        if cfg.trace_replay:
+            # self.failures is the ReplayFailureModel here (replay overrides
+            # failure_mode and always has draw_events, so it is never
+            # wrapped).  Codec AND wire sizes must match the recording: the
+            # recorded timings were priced at the recorded byte counts.
+            if self.failures.codec != cfg.codec:
+                raise ValueError(
+                    f"trace {cfg.trace_replay} was recorded under codec "
+                    f"{self.failures.codec!r} but this run uses "
+                    f"{cfg.codec!r}; the recorded upload timings would be "
+                    "wrong — replay with the matching codec")
+            for field, ours in [("model_bytes", self.model_bytes),
+                                ("upload_bytes", self.upload_bytes)]:
+                rec = self.failures.header.get(field)
+                if rec is not None and not np.isclose(float(rec), ours,
+                                                      rtol=1e-6):
+                    raise ValueError(
+                        f"trace {cfg.trace_replay} was recorded with "
+                        f"{field}={float(rec):.0f} but this run derives "
+                        f"{ours:.0f}; the recorded upload timings would be "
+                        "wrong — replay with the matching model_bytes")
         mc = np.random.default_rng(cfg.seed + 7)
         self.eps_estimates = np.array([
             c.outage_probability(rate, mc, 200) for c in self.channels])
@@ -297,6 +342,7 @@ class FFTRunner:
 
         strategy.init_state(self)
         self.failures.reset()
+        self.comm.reset()                 # error-feedback residuals per run
         tracer = None
         if self.cfg.trace_record:
             from repro.fl.scenarios.trace import TraceRecorder
@@ -306,7 +352,9 @@ class FFTRunner:
                 "scenario": self.failure_mode_resolved,
                 "n_clients": self.n_clients,
                 "deadline_s": self.cfg.deadline_s,
-                "model_bytes": self.cfg.model_bytes,
+                "model_bytes": self.model_bytes,
+                "codec": self.cfg.codec,
+                "upload_bytes": self.upload_bytes,
                 "seed": self.cfg.seed})
         self.timeline: List[TimePoint] = []
         self.loop = make_round_loop(self.cfg.server_mode, self, strategy,

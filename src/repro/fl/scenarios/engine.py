@@ -124,6 +124,12 @@ class DeadlineSimulator:
         self.hetero_sigma = hetero_sigma
         self.jitter_sigma = jitter_sigma
         self.seed = seed
+        # Per-client, per-direction payload sizes.  ``model_bytes`` is the
+        # symmetric default; a codec-aware runner overrides them via
+        # ``set_payload_bytes`` (compressed uploads finish earlier, so
+        # clients that would miss the deadline at fp32 size can recover).
+        self.upload_bytes: Optional[np.ndarray] = None
+        self.download_bytes: Optional[np.ndarray] = None
         self.reset()
 
     def reset(self) -> None:
@@ -132,15 +138,32 @@ class DeadlineSimulator:
         self.speed = np.exp(self.rng.normal(0.0, self.hetero_sigma,
                                             self.n_clients))
 
+    def set_payload_bytes(self, upload_bytes=None, download_bytes=None
+                          ) -> None:
+        """Override the per-client wire sizes (scalar or (N,) array); None
+        keeps the symmetric ``model_bytes`` default for that direction.
+        Payload sizes survive ``reset()`` — they are configuration, not
+        realization state."""
+        def as_arr(x):
+            if x is None:
+                return None
+            return np.broadcast_to(np.asarray(x, float),
+                                   (self.n_clients,)).copy()
+        self.upload_bytes = as_arr(upload_bytes)
+        self.download_bytes = as_arr(download_bytes)
+
     # ------------------------------------------------------------------ core
     def _phase_durations(self, i: int, link: LinkState):
-        bits = self.model_bytes * 8.0
+        ul_bytes = (self.model_bytes if self.upload_bytes is None
+                    else self.upload_bytes[i])
+        dl_bytes = (self.model_bytes if self.download_bytes is None
+                    else self.download_bytes[i])
         if not link.up:
             return math.inf, math.inf, math.inf
         cap = max(link.capacity_bps, 1e-9)
-        t_ul = 0.0 if math.isinf(cap) else bits / cap
+        t_ul = 0.0 if math.isinf(cap) else ul_bytes * 8.0 / cap
         dl_cap = cap * max(link.downlink_ratio, 1e-9)
-        t_dl = 0.0 if math.isinf(dl_cap) else bits / dl_cap
+        t_dl = 0.0 if math.isinf(dl_cap) else dl_bytes * 8.0 / dl_cap
         jitter = math.exp(self.rng.normal(0.0, self.jitter_sigma))
         t_cp = self.compute_s * self.speed[i] * jitter
         return t_dl, t_cp, t_ul
@@ -224,6 +247,14 @@ class ScenarioFailureModel(FailureModel):
         self.scenario.reset()
         self.sim.reset()
         self._cache.clear()
+
+    def set_payload_bytes(self, upload_bytes=None, download_bytes=None
+                          ) -> None:
+        if self._cache:
+            raise RuntimeError("payload bytes must be set before any round "
+                               "is drawn — cached realizations would be "
+                               "priced at the old sizes")
+        self.sim.set_payload_bytes(upload_bytes, download_bytes)
 
     def draw_events(self, r: int) -> RoundEvents:
         # Cache keyed by round: repeated draws of a past round return the

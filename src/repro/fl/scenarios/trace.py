@@ -7,12 +7,14 @@ the identical sequence of ``connected`` masks.
 
 Schema (one JSON object per line):
 
-  {"record": "header", "version": 1, "scenario": "...", "n_clients": N,
-   "deadline_s": ..., "model_bytes": ..., "seed": ...}
+  {"record": "header", "version": 2, "scenario": "...", "n_clients": N,
+   "deadline_s": ..., "model_bytes": ..., "codec": "fp32",
+   "upload_bytes": ..., "seed": ...}
   {"record": "round", "round": r, "deadline_s": ..., "duration_s": ...,
    "clients": [{"id": i, "capacity_bps": ..., "up": true,
                 "duration_s": ..., "t_download_s": ..., "t_compute_s": ...,
-                "t_upload_s": ..., "selected": true, "met_deadline": true,
+                "t_upload_s": ..., "payload_bytes": ...,
+                "selected": true, "met_deadline": true,
                 "connected": true, "cause": "ok"}, ...]}
 
 ``capacity_bps``/``duration_s``/``t_*_s`` are null for legacy failure models
@@ -23,6 +25,13 @@ missed the deadline, so an asynchronous run replays its staleness-buffered
 arrivals bit-exactly.  Non-finite floats are serialized as the strings
 "inf"/"-inf"/"nan" (JSON has no literals for them) and decoded back
 losslessly by ``_unnum``.
+
+Version 2 (communication codecs, ``repro.fl.comm``) adds the codec name to
+the header and per-client ``payload_bytes`` (bytes-on-wire of that round's
+upload) to each client row.  Version-1 traces still load — they predate
+codecs, so they are implicitly ``fp32``; the runtime refuses to replay any
+trace under a codec other than the one it was recorded with (the recorded
+upload timings would be priced at the wrong byte count).
 """
 from __future__ import annotations
 
@@ -36,7 +45,8 @@ from repro.fl.failures import FailureModel
 from repro.fl.scenarios.engine import (CAUSE_OK, ClientRoundEvent,
                                        RoundEvents)
 
-TRACE_VERSION = 1
+TRACE_VERSION = 2
+SUPPORTED_TRACE_VERSIONS = (1, 2)
 
 
 def _num(x) -> object:
@@ -72,20 +82,29 @@ class TraceRecorder:
         self._fh = open(path, "w")
         hdr = {"record": "header", "version": TRACE_VERSION}
         hdr.update(header)
+        hdr.setdefault("codec", "fp32")
         hdr["model_bytes"] = _num(hdr.get("model_bytes"))
+        hdr["upload_bytes"] = _num(hdr.get("upload_bytes"))
         hdr["deadline_s"] = _num(hdr.get("deadline_s"))
         self._fh.write(json.dumps(hdr) + "\n")
 
     def write_round(self, rnd: int, selected: np.ndarray,
                     connected: np.ndarray, events: Optional[RoundEvents],
                     up: Optional[np.ndarray] = None,
-                    met_deadline: Optional[np.ndarray] = None) -> None:
+                    met_deadline: Optional[np.ndarray] = None,
+                    payload_bytes=None) -> None:
         """``up``/``met_deadline`` carry the failure draw for legacy models
         (no ``events``); without them replay would fabricate connectivity
-        for clients that were down but unselected."""
+        for clients that were down but unselected.  ``payload_bytes`` is a
+        scalar or (N,) array of this round's per-client upload sizes on the
+        wire (codec-encoded), recorded per client row."""
         clients = []
         n = len(selected)
+        if payload_bytes is not None:
+            payload_bytes = np.broadcast_to(
+                np.asarray(payload_bytes, float), (n,))
         for i in range(n):
+            pb = _num(payload_bytes[i]) if payload_bytes is not None else None
             if events is not None:
                 e = events.events[i]
                 row = {"id": i, "capacity_bps": _num(e.capacity_bps),
@@ -93,6 +112,7 @@ class TraceRecorder:
                        "t_download_s": _num(e.t_download_s),
                        "t_compute_s": _num(e.t_compute_s),
                        "t_upload_s": _num(e.t_upload_s),
+                       "payload_bytes": pb,
                        "selected": bool(selected[i]),
                        "met_deadline": bool(e.met_deadline),
                        "connected": bool(connected[i]), "cause": e.cause}
@@ -102,7 +122,8 @@ class TraceRecorder:
                 met_i = bool(met_deadline[i]) if met_deadline is not None \
                     else True
                 row = {"id": i, "capacity_bps": None, "up": up_i,
-                       "duration_s": None, "selected": bool(selected[i]),
+                       "duration_s": None, "payload_bytes": pb,
+                       "selected": bool(selected[i]),
                        "met_deadline": met_i,
                        "connected": bool(connected[i]),
                        "cause": CAUSE_OK if up_i and met_i else "outage"}
@@ -139,10 +160,11 @@ def load_trace(path: str):
             rec = json.loads(line)
             kind = rec.get("record")
             if kind == "header":
-                if rec.get("version") != TRACE_VERSION:
+                if rec.get("version") not in SUPPORTED_TRACE_VERSIONS:
                     raise ValueError(
                         f"{path}:{line_no}: unsupported trace version "
-                        f"{rec.get('version')!r} (want {TRACE_VERSION})")
+                        f"{rec.get('version')!r} "
+                        f"(supported: {SUPPORTED_TRACE_VERSIONS})")
                 header = rec
             elif kind == "round":
                 rounds[int(rec["round"])] = rec
@@ -177,6 +199,19 @@ class ReplayFailureModel(FailureModel):
 
     def rounds_available(self) -> List[int]:
         return sorted(self._rounds)
+
+    @property
+    def codec(self) -> str:
+        """Codec the trace was recorded under (v1 traces predate codecs)."""
+        return str(self.header.get("codec", "fp32"))
+
+    def payload_bytes(self, r: int) -> Optional[np.ndarray]:
+        """Recorded per-client upload sizes for round ``r`` (None for v1)."""
+        rows = sorted(self._round(r)["clients"], key=lambda c: c["id"])
+        vals = [_unnum(c.get("payload_bytes")) for c in rows]
+        if all(v is None for v in vals):
+            return None
+        return np.array([math.nan if v is None else v for v in vals])
 
     def _round(self, r: int) -> Dict:
         if r not in self._rounds:

@@ -52,6 +52,14 @@ class RoundLoop:
         self.tracer = tracer
         self.log = log
         self.clock_s = 0.0
+        self.participants_per_round: List[int] = []
+
+    def _uplink(self, client: int, model, t_global):
+        """Ship one local update through the communication codec: encode
+        client-side (error feedback applied), decode server-side.  Returns
+        the reconstructed model the strategy aggregates."""
+        recon, _payload = self.runner.comm.roundtrip(client, model, t_global)
+        return recon
 
     # ------------------------------------------------------------- shared
     def _select(self) -> np.ndarray:
@@ -105,9 +113,11 @@ class SyncRoundLoop(RoundLoop):
         selected = self._select()
         up, met_deadline, events = runner._draw_network(r)
         connected = selected & up & met_deadline
+        self.participants_per_round.append(int(connected.sum()))
         if self.tracer is not None:
             self.tracer.write_round(r, selected, connected, events,
-                                    up=up, met_deadline=met_deadline)
+                                    up=up, met_deadline=met_deadline,
+                                    payload_bytes=runner.comm.upload_bytes)
 
         t_global = runner.global_params
         client_models: Dict[int, Any] = {}
@@ -117,7 +127,7 @@ class SyncRoundLoop(RoundLoop):
             m = runner.run_local(t_global, runner.client_x[i],
                                  runner.client_y[i], r, mu=mu, corr=corr)
             m = strategy.post_local(i, r, m, t_global, runner)
-            client_models[int(i)] = m
+            client_models[int(i)] = self._uplink(int(i), m, t_global)
         server_model = runner.run_local(t_global, runner.public_x,
                                         runner.public_y, r)
 
@@ -128,7 +138,8 @@ class SyncRoundLoop(RoundLoop):
             client_hists=runner.client_hists, server_hist=runner.server_hist,
             global_hist=runner.global_hist,
             full_participation=runner.k_selected >= runner.n_clients,
-            eps_estimates=runner.eps_estimates, runner=runner)
+            eps_estimates=runner.eps_estimates, runner=runner,
+            codec=runner.cfg.codec, upload_nbytes=runner.comm.upload_bytes)
         runner.global_params = strategy.aggregate(ctx)
         return self._round_duration(selected, connected, events)
 
@@ -172,7 +183,8 @@ class AsyncRoundLoop(RoundLoop):
         fresh_connected = selected & up & met_deadline
         if self.tracer is not None:
             self.tracer.write_round(r, selected, fresh_connected, events,
-                                    up=up, met_deadline=met_deadline)
+                                    up=up, met_deadline=met_deadline,
+                                    payload_bytes=runner.comm.upload_bytes)
 
         t_global = runner.global_params
         mu = strategy.prox_mu()
@@ -192,6 +204,10 @@ class AsyncRoundLoop(RoundLoop):
             m = runner.run_local(t_global, runner.client_x[i],
                                  runner.client_y[i], r, mu=mu, corr=corr)
             m = strategy.post_local(int(i), r, m, t_global, runner)
+            # The wire sits between dispatch and landing: what the buffer
+            # holds is the *decoded* upload, exactly what the server will
+            # eventually see (the scenario engine already priced its bytes).
+            m = self._uplink(int(i), m, t_global)
             # Only delta-based strategies (FedBuff) need the dispatch-time
             # snapshot; skipping it elsewhere halves the buffer's memory.
             delta = (delta_pytree(m, t_global)
@@ -212,6 +228,7 @@ class AsyncRoundLoop(RoundLoop):
             # semi-async server: not enough landed updates to justify a step;
             # advance the clock, age the buffer, keep the global model
             self.buffer.evict(r)
+            self.participants_per_round.append(0)
             return duration
 
         arrivals = [Arrival(client=p.client, origin_round=p.origin_round,
@@ -220,6 +237,7 @@ class AsyncRoundLoop(RoundLoop):
                             model=p.model, delta=p.delta)
                     for p in self.buffer.collect(now, r)]
         self.staleness_applied.extend(a.staleness for a in arrivals)
+        self.participants_per_round.append(len(arrivals))
         server_model = runner.run_local(t_global, runner.public_x,
                                         runner.public_y, r)
         runner.global_params = self._aggregate(r, now, t_global, server_model,
@@ -235,7 +253,9 @@ class AsyncRoundLoop(RoundLoop):
                 server_model=server_model, arrivals=arrivals, p=runner.p,
                 client_hists=runner.client_hists,
                 server_hist=runner.server_hist,
-                global_hist=runner.global_hist, runner=runner)
+                global_hist=runner.global_hist, runner=runner,
+                codec=runner.cfg.codec,
+                upload_nbytes=runner.comm.upload_bytes)
             return strategy.aggregate_async(ctx)
         # Synchronous strategy under the async server: present the freshest
         # landed update per client as this round's cohort (staleness is
@@ -255,7 +275,8 @@ class AsyncRoundLoop(RoundLoop):
             client_hists=runner.client_hists, server_hist=runner.server_hist,
             global_hist=runner.global_hist,
             full_participation=runner.k_selected >= runner.n_clients,
-            eps_estimates=runner.eps_estimates, runner=runner)
+            eps_estimates=runner.eps_estimates, runner=runner,
+            codec=runner.cfg.codec, upload_nbytes=runner.comm.upload_bytes)
         return strategy.aggregate(ctx)
 
 

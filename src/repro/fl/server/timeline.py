@@ -47,6 +47,14 @@ class TimedFailureAdapter(FailureModel):
         self.rng = np.random.default_rng(self.seed + 29)
         self._cache: Dict[int, RoundEvents] = {}
 
+    def set_payload_bytes(self, upload_bytes=None, download_bytes=None
+                          ) -> None:
+        if self._cache:
+            raise RuntimeError("payload bytes must be set before any round "
+                               "is drawn — cached realizations would be "
+                               "priced at the old sizes")
+        self.sim.set_payload_bytes(upload_bytes, download_bytes)
+
     def draw_events(self, r: int) -> RoundEvents:
         if r not in self._cache:
             up = self.inner.draw(r)

@@ -44,6 +44,13 @@ def fedagg(stacked, betas):
     return k(stacked, betas, interpret=_interpret())
 
 
+def dequant_fedagg(q, scales, betas):
+    if _MODE == "off":
+        return _ref.dequant_fedagg(q, scales, betas)
+    from repro.kernels.dequant_agg import dequant_fedagg as k
+    return k(q, scales, betas, interpret=_interpret())
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None, scale=None):
     if _MODE == "off":

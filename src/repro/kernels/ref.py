@@ -24,6 +24,19 @@ def fedagg(stacked: jax.Array, betas: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# dequant_fedagg: fedagg fused with int8 payload dequantization
+# (repro.fl.comm int8/qsgd/sign uploads)
+# ---------------------------------------------------------------------------
+def dequant_fedagg(q: jax.Array, scales: jax.Array,
+                   betas: jax.Array) -> jax.Array:
+    """q: (M, P) int8 quantized payloads; scales/betas: (M,).
+    Returns (P,) fp32 = Σ_m β_m · s_m · q[m] — the unfused oracle
+    (dequantize to fp32, then β-reduce)."""
+    deq = q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+    return jnp.einsum("mp,m->p", deq, betas.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
 # flash attention (causal / sliding-window, GQA)
 # ---------------------------------------------------------------------------
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -13,8 +13,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.weights_qp import (chi2_effective, project_simplex,  # noqa: E402
                                    solve_weights)
+from repro.fl.comm import make_codec  # noqa: E402
 from repro.fl.partition import partition  # noqa: E402
 from repro.fl.scenarios.trace import _num, _unnum  # noqa: E402
+from repro.kernels.dequant_agg import dequant_fedagg  # noqa: E402
 from repro.kernels.fedagg import fedagg  # noqa: E402
 
 
@@ -125,6 +127,80 @@ def test_trace_num_unnum_round_trip(x):
         assert np.isnan(got)
     else:
         assert got == x
+
+
+# ---------------------------------------------------------------------------
+# communication codecs (repro.fl.comm): byte counts are value-independent
+# and exactly nbytes(template); quantizers respect their error bounds; every
+# lossy codec is a contraction (the EF convergence prerequisite)
+# ---------------------------------------------------------------------------
+CODEC_SPECS = ["fp32", "fp16", "int8", "qsgd:2", "qsgd:4", "qsgd:8",
+               "topk:0.1", "topk:0.5", "sign1"]
+
+
+@given(st.integers(0, 10_000), st.sampled_from(CODEC_SPECS),
+       st.integers(2, 40), st.integers(2, 40))
+@settings(max_examples=40, deadline=None)
+def test_codec_nbytes_value_independent_and_exact(seed, spec, d0, d1):
+    rng = np.random.default_rng(seed)
+    codec = make_codec(spec)
+    tree = {"w": jnp.asarray(rng.normal(0, 10, (d0, d1)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(d1,)), jnp.float32)}
+    payload = codec.encode(tree)
+    assert payload.nbytes == codec.nbytes(tree)
+    zeros = {k: jnp.zeros_like(v) for k, v in tree.items()}
+    assert codec.encode(zeros).nbytes == payload.nbytes
+    if not spec.startswith("topk"):
+        # topk pays 8 B per kept entry (index + value), which can exceed
+        # 4 B/param on tiny leaves or f = 0.5; the dense codecs only exceed
+        # fp32 on 1-element leaves (the 4 B per-leaf scale dominates), which
+        # the d0,d1 >= 2 draw excludes
+        assert payload.nbytes <= make_codec("fp32").nbytes(tree)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(1, 400))
+@settings(max_examples=25, deadline=None)
+def test_quantizer_error_bound_property(seed, bits, n):
+    rng = np.random.default_rng(seed)
+    codec = make_codec(f"qsgd:{bits}")
+    x = {"w": jnp.asarray(rng.normal(0, 5, (n,)), jnp.float32)}
+    dec = codec.decode(codec.encode(x))["w"]
+    levels = (1 << (bits - 1)) - 1
+    half_step = float(jnp.max(jnp.abs(x["w"]))) / levels / 2
+    assert float(jnp.max(jnp.abs(dec - x["w"]))) <= half_step + 1e-6
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from(["fp16", "int8", "qsgd:4", "topk:0.25", "sign1"]),
+       st.integers(2, 200))
+@settings(max_examples=30, deadline=None)
+def test_lossy_codec_contraction_property(seed, spec, n):
+    rng = np.random.default_rng(seed)
+    codec = make_codec(spec)
+    x = {"w": jnp.asarray(rng.normal(0, 3, (n,)), jnp.float32)}
+    if float(jnp.sum(jnp.abs(x["w"]))) < 1e-3:
+        return
+    dec = codec.decode(codec.encode(x))["w"]
+    err = float(jnp.sum(jnp.square(dec - x["w"]))) ** 0.5
+    norm = float(jnp.sum(jnp.square(x["w"]))) ** 0.5
+    assert err < norm * (1.0 - 1e-6) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# fused dequantize-and-β-accumulate kernel == reference on random payloads
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000), st.integers(1, 8), st.integers(1, 700))
+@settings(max_examples=15, deadline=None)
+def test_dequant_fedagg_matches_ref_property(seed, m, p):
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-127, 128, (m, p)), jnp.int8)
+    scales = jnp.asarray(rng.uniform(1e-4, 1e-1, m), jnp.float32)
+    betas = jnp.asarray(rng.dirichlet(np.ones(m)), jnp.float32)
+    out = np.asarray(dequant_fedagg(q, scales, betas, interpret=True,
+                                    block=256))
+    expect = np.asarray(ref.dequant_fedagg(q, scales, betas))
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------
