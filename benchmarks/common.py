@@ -29,7 +29,7 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
                  trace_replay: Optional[str] = None,
                  server_mode: str = "sync", tau_max: int = 5,
                  buffer_k: int = 4, eval_every: Optional[int] = None,
-                 codec: str = "fp32",
+                 codec: str = "fp32", downlink_codec: Optional[str] = None,
                  model_bytes: Optional[float] = -1.0):
     n_clients = 8 if quick else 20
     n_classes = 4 if quick else 10
@@ -69,6 +69,7 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
         tau_max=tau_max,
         buffer_k=buffer_k,
         codec=codec,
+        downlink_codec=downlink_codec,
     )
     if deadline_s is not None:
         cfg.deadline_s = deadline_s

@@ -14,8 +14,8 @@ def main() -> None:
                     help="comma-separated bench names (e.g. table2,kernels)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_aggregation, bench_async, bench_comm,
-                            bench_convergence, bench_kernels,
+    from benchmarks import (bench_adaptive, bench_aggregation, bench_async,
+                            bench_comm, bench_convergence, bench_kernels,
                             bench_resourceopt, bench_scenarios, bench_table1,
                             bench_table2, bench_table3, bench_table4,
                             bench_table5, roofline)
@@ -32,6 +32,7 @@ def main() -> None:
         "scenarios": bench_scenarios,
         "async": bench_async,
         "comm": bench_comm,
+        "adaptive": bench_adaptive,
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,85 @@
+"""Adaptive per-client codec assignment with a compressed downlink.
+
+Runs the same scenario world under static fp32, a static lossy codec, and
+the adaptive controller (``codec="adaptive:<lo>-<hi>"``).  The controller
+estimates each client's capacity online — from observed arrivals and
+deadline misses only, no oracle — and assigns the richest rung of the
+ladder predicted to land before the deadline, per client, per round; the
+global broadcast travels compressed too (server-side error feedback).  The
+punchline: adaptive recovers the deadline-dropped clients static fp32
+loses, at accuracy on par with the best static codec, while fast links
+keep their fidelity.
+
+    PYTHONPATH=src python examples/adaptive_codec.py
+    PYTHONPATH=src python examples/adaptive_codec.py --world correlated_wifi
+    PYTHONPATH=src python examples/adaptive_codec.py --spec adaptive:qsgd:2-fp32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.core.strategies import STRATEGIES
+from repro.fl.runtime import FFTConfig
+from repro.fl.toy import make_toy_runner
+
+
+def run_once(cfg: FFTConfig, rounds: int):
+    runner = make_toy_runner(cfg, n_samples=900, public_per_class=10,
+                             pretrain_steps=15)
+    hist = runner.run(STRATEGIES["fedauto"](), rounds=rounds)
+    return {
+        "acc": hist[-1],
+        "participants": float(np.mean(runner.loop.participants_per_round)),
+        "uplink_MB": runner.comm.total_uplink_bytes / 1e6,
+        "downlink_MB": runner.comm.total_downlink_bytes / 1e6,
+        "controller": runner.controller,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default="adaptive:sign1-fp16",
+                    help="adaptive codec spec (adaptive:<lo>-<hi>)")
+    ap.add_argument("--static", default="int8",
+                    help="static lossy codec to compare against")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--world", default="diurnal")
+    args = ap.parse_args()
+
+    # model_bytes simulates a paper-scale fp32 payload over the toy CNN; every
+    # codec (and each adaptive rung) scales it by its exact compression ratio.
+    base = FFTConfig(n_clients=8, k_selected=8, local_steps=3, batch_size=16,
+                     lr=0.05, seed=0, eval_every=2,
+                     failure_mode=f"scenario:{args.world}",
+                     deadline_s=5.0, model_bytes=4e6)
+
+    print(f"world={args.world} deadline={base.deadline_s}s "
+          f"fp32_payload={base.model_bytes:.0f}B rounds={args.rounds}\n")
+    results = {}
+    for codec in ["fp32", args.static, args.spec]:
+        results[codec] = run_once(dataclasses.replace(base, codec=codec),
+                                  args.rounds)
+        r = results[codec]
+        print(f"  {codec:>20}: mean participants "
+              f"{r['participants']:.2f}/8  final acc {r['acc']:.4f}  "
+              f"uplink {r['uplink_MB']:6.2f} MB  "
+              f"downlink {r['downlink_MB']:6.2f} MB")
+
+    ctl = results[args.spec]["controller"]
+    hist = {k: v for k, v in ctl.rung_histogram().items() if v}
+    print(f"\nrung assignments (client-rounds): {hist}")
+    print(f"estimated capacities: "
+          f"{np.round(ctl.cap_hat / 1e6, 2)} Mbps "
+          f"({ctl.n_success} landed / {ctl.n_miss} missed observations)")
+    f, a = results["fp32"], results[args.spec]
+    print(f"\n{args.spec} recovered "
+          f"{a['participants'] - f['participants']:+.2f} participants/round "
+          f"over fp32 (acc {a['acc'] - f['acc']:+.4f}) and cut the "
+          f"broadcast {f['downlink_MB'] / max(a['downlink_MB'], 1e-9):.1f}x.")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,11 +7,19 @@ Three layers:
   mapping update pytrees to payloads with exact, value-independent byte
   counts.
 * ``state``  — per-run ``CommState``: client-side encode / server-side
-  decode with per-client error-feedback residuals, plus the upload/download
-  byte accounting the deadline simulator prices rounds with.
+  decode with per-client error-feedback residuals, the downlink broadcast
+  codec with server-side error feedback, plus the upload/download byte
+  accounting the deadline simulator prices rounds with.
+* ``adaptive`` — the per-client, per-round bit-width controller behind
+  ``FFTConfig.codec = "adaptive:<lo>-<hi>"``: estimates each client's
+  effective capacity online from observed arrivals/misses (no oracle) and
+  assigns the richest rung of the ladder predicted to land in time.
 * the fused dequantize-and-β-accumulate Pallas kernel lives with the other
   kernels (``repro.kernels.dequant_agg``; dispatch via ``kernels.ops``).
 """
+from repro.fl.comm.adaptive import (RUNG_LADDER, AdaptiveCommController,
+                                    RoundAssignment, is_adaptive_spec,
+                                    ladder_between, parse_adaptive_spec)
 from repro.fl.comm.codecs import (CODECS, Codec, EncodedLeaf, Payload,
                                   available_codecs, make_codec)
 from repro.fl.comm.fused import aggregate_quantized, is_quantized
@@ -21,4 +29,6 @@ __all__ = [
     "CODECS", "Codec", "EncodedLeaf", "Payload", "available_codecs",
     "make_codec", "CommState", "fp32_nbytes",
     "aggregate_quantized", "is_quantized",
+    "RUNG_LADDER", "AdaptiveCommController", "RoundAssignment",
+    "is_adaptive_spec", "ladder_between", "parse_adaptive_spec",
 ]

@@ -1,0 +1,209 @@
+"""Adaptive per-client codec assignment from *observed* round outcomes.
+
+FedAuto's promise is robustness without prior knowledge of network
+conditions; a deployment that statically picks one codec for every client
+either wastes capacity on fast links (everyone pays sign1's fidelity loss)
+or keeps losing slow ones (everyone ships fp32 into a deadline they cannot
+make).  The ``AdaptiveCommController`` closes that gap with the only
+information a real server has: which selected clients' uploads landed, and
+when.  It never reads ``LinkState`` — capacity is *estimated*, not leaked.
+
+``FFTConfig.codec = "adaptive:<lo>-<hi>"`` (e.g. ``adaptive:sign1-fp16``)
+selects a contiguous slice of the rung ladder
+
+    sign1 → qsgd:2 → … → qsgd:8 → int8 → fp16 → fp32
+
+ordered by fidelity (and, because every rung's byte count is
+value-independent, by non-decreasing bytes-on-wire).  Each round, each
+client is assigned the *richest* rung whose predicted landing time fits
+inside a safety fraction of the deadline:
+
+    t_pred(i, rung) = compute_prior + wire_bits(rung) / ĉ_i
+
+where ĉ_i is the client's estimated effective capacity (bits/s) and
+``wire_bits`` counts the uplink payload plus the broadcast at the assumed
+downlink asymmetry.  The estimate is AIMD-flavored and needs no oracle:
+
+* a landed upload updates ĉ_i by EWMA toward the implied throughput
+  ``wire_bits / (finish_s − compute_prior)`` — *asymmetrically*: upward
+  moves use the faster ``ewma_up`` (an arrival is direct evidence the link
+  sustained that rate; climbing fast keeps a recovered client from lingering
+  on coarse rungs, whose isolated one-shot updates are far noisier than the
+  repeated ones error feedback is built for), downward moves the slower
+  ``ewma_down``;
+* a missed deadline (indistinguishable from a dead link, exactly as for a
+  real server) multiplies ĉ_i by ``backoff`` — the client slides down the
+  ladder until its uploads land again.
+
+The controller starts optimistic (round 1 assigns ``hi`` to everyone), is
+fully deterministic given the observed event stream, and therefore replays
+bit-exactly from a recorded trace: the same events re-derive the same
+assignments, and the v3 trace's per-round byte vectors cross-check that
+nothing drifted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# Fidelity-ordered rung ladder; byte counts are non-decreasing left→right
+# (qsgd:8 and int8 tie at 1 B/param + 4 B scale).
+RUNG_LADDER: Tuple[str, ...] = (
+    "sign1", "qsgd:2", "qsgd:3", "qsgd:4", "qsgd:5", "qsgd:6", "qsgd:7",
+    "qsgd:8", "int8", "fp16", "fp32")
+
+
+def is_adaptive_spec(spec: str) -> bool:
+    return spec == "adaptive" or spec.startswith("adaptive:")
+
+
+def parse_adaptive_spec(spec: str) -> Tuple[str, str]:
+    """``"adaptive:<lo>-<hi>"`` → ``(lo, hi)`` rung names; bare
+    ``"adaptive"`` spans the full ladder."""
+    if spec == "adaptive":
+        return RUNG_LADDER[0], RUNG_LADDER[-1]
+    if not spec.startswith("adaptive:"):
+        raise ValueError(f"not an adaptive codec spec: {spec!r}")
+    body = spec.split(":", 1)[1]
+    parts = body.split("-")
+    if len(parts) != 2:
+        raise ValueError(
+            f"bad adaptive spec {spec!r}: want adaptive:<lo>-<hi> with "
+            f"rungs from {RUNG_LADDER}")
+    lo, hi = parts
+    for name in (lo, hi):
+        if name not in RUNG_LADDER:
+            raise ValueError(f"bad adaptive spec {spec!r}: {name!r} is not "
+                             f"a ladder rung {RUNG_LADDER}")
+    if RUNG_LADDER.index(lo) > RUNG_LADDER.index(hi):
+        raise ValueError(f"bad adaptive spec {spec!r}: lo rung {lo!r} is "
+                         f"richer than hi rung {hi!r}")
+    return lo, hi
+
+
+def ladder_between(lo: str, hi: str) -> Tuple[str, ...]:
+    return RUNG_LADDER[RUNG_LADDER.index(lo):RUNG_LADDER.index(hi) + 1]
+
+
+@dataclasses.dataclass
+class RoundAssignment:
+    """One round's per-client codec decision (what the v3 trace records)."""
+    rnd: int
+    codecs: List[str]            # per-client rung name
+    upload_bytes: np.ndarray     # (N,) simulated uplink wire bytes
+    download_bytes: float        # broadcast bytes each client receives
+
+
+class AdaptiveCommController:
+    """Online per-client bit-width policy over a rung ladder.
+
+    ``assign(r)`` must be called once per round in order, ``observe(r, …)``
+    after the round's events are known; both are deterministic functions of
+    the observation history, which is what makes adaptive runs replayable.
+    """
+
+    def __init__(self, n_clients: int, comm, *, lo: str, hi: str,
+                 deadline_s: float, compute_s: float = 2.0,
+                 safety: float = 0.9, ewma_up: float = 0.7,
+                 ewma_down: float = 0.35, backoff: float = 0.5,
+                 dl_ratio: float = 8.0):
+        self.n_clients = n_clients
+        self.rungs = ladder_between(lo, hi)
+        self.rung_bytes = np.array([comm.nbytes_for(name)
+                                    for name in self.rungs], dtype=float)
+        self.download_bytes = float(comm.download_bytes)
+        self.deadline_s = float(deadline_s)
+        self.fixed_s = float(compute_s)      # compute prior (config, no oracle)
+        self.safety = float(safety)
+        self.ewma_up = float(ewma_up)
+        self.ewma_down = float(ewma_down)
+        self.backoff = float(backoff)
+        self.dl_ratio = float(dl_ratio)
+        # bits each rung moves end-to-end: uplink payload + the broadcast
+        # crossing the (assumed) dl_ratio-times-faster downlink
+        self.wire_bits = (self.rung_bytes +
+                          self.download_bytes / self.dl_ratio) * 8.0
+        self.budget_s = self.safety * self.deadline_s
+        # clamped into (0, 1e9]: an infinite (or sub-compute) deadline must
+        # not poison cap_init with 0 or inf — 0 * inf = NaN would demote
+        # everyone to the coarsest rung instead of the optimistic hi probe
+        self.transfer_budget_s = max(min(self.budget_s - self.fixed_s, 1e9),
+                                     1e-6)
+        # optimistic start: exactly the capacity at which hi fits the budget,
+        # so round 1 probes the richest rung and misses back off from there
+        self.cap_init = float(self.wire_bits[-1] / self.transfer_budget_s)
+        self.cap_min = float(self.wire_bits[0] / self.transfer_budget_s) * 1e-3
+        self.cap_max = 1e18
+        self.reset()
+
+    def reset(self) -> None:
+        """Back to the optimistic prior (start of a run): estimates are
+        per-run state, like error-feedback residuals."""
+        self.cap_hat = np.full(self.n_clients, self.cap_init)
+        self.assignments: Dict[int, RoundAssignment] = {}
+        self.n_success = 0
+        self.n_miss = 0
+
+    # ------------------------------------------------------------- policy
+    def rung_index_for(self, cap_bps: float) -> int:
+        """Richest feasible rung index at estimated capacity ``cap_bps``
+        (monotone non-decreasing in capacity; 0 when nothing fits)."""
+        feasible = self.wire_bits <= cap_bps * self.transfer_budget_s
+        if not feasible.any():
+            return 0
+        # wire_bits is non-decreasing, so the feasible set is a prefix
+        return int(np.nonzero(feasible)[0][-1])
+
+    def rung_for(self, cap_bps: float) -> str:
+        return self.rungs[self.rung_index_for(cap_bps)]
+
+    def assign(self, rnd: int) -> RoundAssignment:
+        idx = [self.rung_index_for(c) for c in self.cap_hat]
+        a = RoundAssignment(
+            rnd=rnd,
+            codecs=[self.rungs[k] for k in idx],
+            upload_bytes=self.rung_bytes[idx].copy(),
+            download_bytes=self.download_bytes)
+        self.assignments[rnd] = a
+        return a
+
+    # ---------------------------------------------------------- learning
+    def observe(self, rnd: int, events, selected: np.ndarray) -> None:
+        """Update capacity estimates from one round's resolved events.
+
+        Only *selected* clients are observed (the server sent nothing to the
+        rest), and only through what a server sees: landed uploads carry an
+        arrival instant; everything else — outage or straggler alike — is
+        one undifferentiated miss.
+        """
+        a = self.assignments.get(rnd)
+        if a is None:
+            return
+        for i in range(self.n_clients):
+            if not bool(selected[i]):
+                continue
+            e = events.events[i]
+            wire_bits = (a.upload_bytes[i] +
+                         a.download_bytes / self.dl_ratio) * 8.0
+            if e.met_deadline and math.isfinite(e.finish_s):
+                obs = wire_bits / max(e.finish_s - self.fixed_s, 1e-3)
+                w = self.ewma_up if obs > self.cap_hat[i] else self.ewma_down
+                self.cap_hat[i] = (1.0 - w) * self.cap_hat[i] + w * obs
+                self.n_success += 1
+            else:
+                self.cap_hat[i] *= self.backoff
+                self.n_miss += 1
+            self.cap_hat[i] = min(max(self.cap_hat[i], self.cap_min),
+                                  self.cap_max)
+
+    # ------------------------------------------------------------- stats
+    def rung_histogram(self) -> Dict[str, int]:
+        """Total per-rung assignment counts across all rounds so far."""
+        hist = {name: 0 for name in self.rungs}
+        for a in self.assignments.values():
+            for name in a.codecs:
+                hist[name] += 1
+        return hist

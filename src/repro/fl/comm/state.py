@@ -18,14 +18,27 @@ The residual carry is what keeps biased compressors (deterministic
 quantizers, top-k, sign) convergent: the compression error is not lost, it
 is re-sent, so the *cumulative* decoded mass tracks the cumulative true
 delta with bounded lag (tested as residual contraction in
-``tests/test_comm.py``).
+``tests/test_comm.py``).  The residual is per-*client* and codec-agnostic
+— the adaptive controller may hand a client a different rung every round
+and the carry still conserves mass (a lossless rung flushes it to zero).
+
+Downlink: the server's broadcast travels through ``downlink_codec`` with a
+*server-side* error-feedback residual of the same shape: the server tracks
+``_dl_ref``, the decoded global replica every client holds, encodes the
+delta (new global − replica) + residual each round, and clients apply the
+decoded delta to their replica.  ``broadcast`` returns that replica — the
+parameters clients actually start local training from — so the accuracy
+cost of compressing the downlink is borne honestly, not just the byte
+count.  ``downlink_codec=None`` keeps the exact fp32 broadcast (and the
+fp32 byte accounting) of earlier revisions.
 
 Byte accounting: every codec's payload size is value-independent, so
 ``upload_nbytes`` is known before local training — the deadline simulator
 prices uploads with it.  When ``FFTConfig.model_bytes`` overrides the
 derived fp32 size (simulating a larger model over the same toy problem),
-upload bytes scale by the codec's exact compression ratio on the real
-template, keeping the override and the codec composable.
+wire bytes scale by each codec's exact compression ratio on the real
+template, keeping the override and every codec (static, downlink, or
+adaptive rung) composable.
 """
 from __future__ import annotations
 
@@ -34,7 +47,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.fl.comm.codecs import Codec, Payload
+from repro.fl.comm.codecs import Codec, Payload, make_codec
 
 
 def fp32_nbytes(template) -> int:
@@ -47,59 +60,145 @@ class CommState:
 
     def __init__(self, codec: Codec, template, *,
                  model_bytes_override: Optional[float] = None,
-                 lora_cfg=None):
+                 lora_cfg=None, downlink_codec: Optional[Codec] = None):
         codec.validate_template(template, lora_cfg=lora_cfg)
+        if downlink_codec is not None:
+            downlink_codec.validate_template(template, lora_cfg=lora_cfg)
         self.codec = codec
+        self.downlink_codec = downlink_codec
+        self._template = template
+        self._lora_cfg = lora_cfg
+        self._model_bytes_override = model_bytes_override
         self.fp32_nbytes = fp32_nbytes(template)
         self.wire_nbytes = codec.nbytes(template)
         self.compression_ratio = self.wire_nbytes / max(self.fp32_nbytes, 1)
+        self._codec_cache: Dict[str, Codec] = {codec.name: codec}
+        self._nbytes_cache: Dict[str, float] = {}
         # Simulated sizes: exact codec bytes by default; scaled by the
         # codec's measured ratio under an explicit model_bytes override.
-        if model_bytes_override is None:
-            self.download_bytes = float(self.fp32_nbytes)
-            self.upload_bytes = float(self.wire_nbytes)
-        else:
-            self.download_bytes = float(model_bytes_override)
-            self.upload_bytes = float(model_bytes_override *
-                                      self.compression_ratio)
+        # ``ref_bytes`` is the uncompressed fp32 reference everything scales
+        # against (the historical ``model_bytes``).
+        self.ref_bytes = (float(model_bytes_override)
+                          if model_bytes_override is not None
+                          else float(self.fp32_nbytes))
+        self.upload_bytes = self.nbytes_for(codec)
+        self.download_bytes = (self.ref_bytes if downlink_codec is None
+                               else self.nbytes_for(downlink_codec))
         self._residuals: Dict[int, Any] = {}
+        self._dl_ref = None                    # clients' decoded global replica
+        self._dl_residual = None               # server-side EF residual
         self.total_uplink_bytes = 0.0          # cumulative, all clients
+        self.total_downlink_bytes = 0.0        # cumulative broadcast bytes
         self.n_encoded = 0
+
+    # -------------------------------------------------------------- sizing
+    def codec_named(self, name: str) -> Codec:
+        """Resolve (and cache) a codec by spec, validated on the template."""
+        if name not in self._codec_cache:
+            c = make_codec(name)
+            c.validate_template(self._template, lora_cfg=self._lora_cfg)
+            self._codec_cache[name] = c
+        return self._codec_cache[name]
+
+    def nbytes_for(self, codec) -> float:
+        """Simulated wire bytes of one upload under ``codec`` (a ``Codec``
+        or a spec string): exact template bytes, scaled by the codec's
+        measured compression ratio when ``model_bytes`` is overridden.
+        Cached per codec name — the result is constant and this sits on the
+        per-client per-round upload path."""
+        if isinstance(codec, str):
+            codec = self.codec_named(codec)
+        if codec.name not in self._nbytes_cache:
+            exact = codec.nbytes(self._template)
+            self._nbytes_cache[codec.name] = (
+                float(exact) if self._model_bytes_override is None
+                else float(self._model_bytes_override * exact /
+                           max(self.fp32_nbytes, 1)))
+        return self._nbytes_cache[codec.name]
 
     # ---------------------------------------------------------------- wire
     def reset(self) -> None:
         self._residuals.clear()
+        self._dl_ref = None
+        self._dl_residual = None
         self.total_uplink_bytes = 0.0
+        self.total_downlink_bytes = 0.0
         self.n_encoded = 0
 
     def residual(self, client: int):
         return self._residuals.get(client)
 
-    def roundtrip(self, client: int, model, global_params
-                  ) -> Tuple[Any, Payload]:
+    def roundtrip(self, client: int, model, global_params, *,
+                  codec: Optional[Codec] = None) -> Tuple[Any, Payload]:
         """Client-encode then server-decode one upload.
 
         Returns ``(reconstructed_model, payload)`` where the reconstruction
         has ``model``'s dtypes and the payload carries the exact wire bytes.
-        Mutates the client's error-feedback residual (lossy codecs only).
+        Mutates the client's error-feedback residual.  ``codec`` overrides
+        the run's static codec for this one upload (the adaptive
+        controller's per-client rung); the residual carries across rung
+        changes unchanged — EF is codec-agnostic.
         """
+        codec = self.codec if codec is None else codec
         delta = jax.tree.map(
             lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32),
             model, global_params)
-        if self.codec.lossless:
-            payload = self.codec.encode(delta)
-            decoded = self.codec.decode(payload)
+        resid = self._residuals.get(client)
+        if codec.lossless and resid is None:
+            payload = codec.encode(delta)
+            decoded = codec.decode(payload)
         else:
-            resid = self._residuals.get(client)
             carry = (delta if resid is None else
                      jax.tree.map(jnp.add, delta, resid))
-            payload = self.codec.encode(carry)
-            decoded = self.codec.decode(payload)
-            self._residuals[client] = jax.tree.map(jnp.subtract, carry,
-                                                   decoded)
+            payload = codec.encode(carry)
+            decoded = codec.decode(payload)
+            if codec.lossless:
+                # the wire carried the full corrected delta: residual flushed
+                self._residuals.pop(client, None)
+            else:
+                self._residuals[client] = jax.tree.map(jnp.subtract, carry,
+                                                       decoded)
         recon = jax.tree.map(
             lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
             global_params, decoded)
-        self.total_uplink_bytes += payload.nbytes
+        # accumulate *simulated* wire bytes (override-scaled), the same unit
+        # the deadline simulator, traces, and total_downlink_bytes use
+        self.total_uplink_bytes += self.nbytes_for(codec)
         self.n_encoded += 1
         return recon, payload
+
+    # ----------------------------------------------------------- downlink
+    def broadcast(self, global_params) -> Tuple[Any, float]:
+        """Server-encode the round's broadcast; returns ``(params clients
+        start from, simulated broadcast bytes)``.
+
+        With no downlink codec the broadcast is the exact global model at
+        fp32 size.  With one, the server encodes the delta from the clients'
+        decoded replica (plus its error-feedback residual) and the replica
+        advances by the decoded delta — every client then trains from the
+        replica, never from state it could not have received.  The first
+        broadcast initializes the replica to the current global (the model
+        clients hold from enrollment).
+        """
+        if self.downlink_codec is None:
+            self.total_downlink_bytes += self.download_bytes
+            return global_params, self.download_bytes
+        nbytes = self.download_bytes
+        if self._dl_ref is None:
+            self._dl_ref = jax.tree.map(
+                lambda g: g.astype(jnp.float32), global_params)
+        else:
+            delta = jax.tree.map(
+                lambda g, ref: g.astype(jnp.float32) - ref,
+                global_params, self._dl_ref)
+            if self._dl_residual is not None:
+                delta = jax.tree.map(jnp.add, delta, self._dl_residual)
+            payload = self.downlink_codec.encode(delta)
+            decoded = self.downlink_codec.decode(payload)
+            if not self.downlink_codec.lossless:
+                self._dl_residual = jax.tree.map(jnp.subtract, delta, decoded)
+            self._dl_ref = jax.tree.map(jnp.add, self._dl_ref, decoded)
+        self.total_downlink_bytes += nbytes
+        out = jax.tree.map(lambda ref, g: ref.astype(g.dtype),
+                           self._dl_ref, global_params)
+        return out, nbytes

@@ -64,7 +64,12 @@ class FFTConfig:
     buffer_k: int = 4                     # buffered mode: arrivals per agg step
     # --- communication codec (repro.fl.comm) ----------------------------------
     codec: str = "fp32"                   # fp32 | fp16 | int8 | qsgd:<bits> |
-    #                                       topk:<frac> | sign1 | lora_only
+    #                                       topk:<frac> | sign1 | lora_only |
+    #                                       adaptive:<lo>-<hi>
+    downlink_codec: Optional[str] = None  # broadcast codec; None = fp32 for
+    #                                       static runs, the hi rung for
+    #                                       adaptive ones ("fp32" forces the
+    #                                       uncompressed broadcast)
 
 
 class FFTRunner:
@@ -129,12 +134,28 @@ class FFTRunner:
         # The trainable pytree (adapters in LoRA mode, full params otherwise)
         # fixes the wire sizes: model_bytes derives from it unless the config
         # overrides, and the codec's exact compression ratio prices uploads.
-        from repro.fl.comm import CommState, make_codec
-        self.comm = CommState(make_codec(cfg.codec), self.global_params,
+        from repro.fl.comm import (CommState, is_adaptive_spec, make_codec,
+                                   parse_adaptive_spec)
+        self.adaptive_spec = cfg.codec if is_adaptive_spec(cfg.codec) else None
+        if self.adaptive_spec:
+            self._rung_lo, self._rung_hi = parse_adaptive_spec(cfg.codec)
+            # the hi rung is the ceiling: it fixes the static accounting
+            # (upload_bytes, ctx.upload_nbytes) the controller adapts below
+            static_codec = make_codec(self._rung_hi)
+        else:
+            static_codec = make_codec(cfg.codec)
+        dl_spec = cfg.downlink_codec
+        if dl_spec is None and self.adaptive_spec:
+            dl_spec = self._rung_hi
+        self.downlink_codec_resolved = dl_spec or "fp32"
+        dl_codec = (None if self.downlink_codec_resolved == "fp32"
+                    else make_codec(self.downlink_codec_resolved))
+        self.comm = CommState(static_codec, self.global_params,
                               model_bytes_override=cfg.model_bytes,
-                              lora_cfg=lora_cfg)
-        self.model_bytes = self.comm.download_bytes       # fp32 reference size
+                              lora_cfg=lora_cfg, downlink_codec=dl_codec)
+        self.model_bytes = self.comm.ref_bytes            # fp32 reference size
         self.upload_bytes = self.comm.upload_bytes        # codec wire size
+        self.download_bytes = self.comm.download_bytes    # broadcast wire size
 
         # --- network + failures ----------------------------------------------
         self.channels = net_mod.build_network(cfg.n_clients, seed=cfg.seed)
@@ -153,21 +174,31 @@ class FFTRunner:
             compute_s=cfg.compute_s)
         if cfg.server_mode not in ("sync", "async", "buffered"):
             raise ValueError(f"unknown server_mode {cfg.server_mode!r}")
-        if cfg.server_mode != "sync" and not hasattr(self.failures,
-                                                     "draw_events"):
+        if ((cfg.server_mode != "sync" or self.adaptive_spec)
+                and not hasattr(self.failures, "draw_events")):
             # Legacy boolean failure models have no time dimension; the async
-            # server needs per-client arrival instants, so synthesize them
-            # from the physical channels (capacity -> upload time, Eq. 41).
+            # server needs per-client arrival instants — and so does the
+            # adaptive codec controller, whose whole input is arrival times —
+            # so synthesize them from the physical channels (capacity ->
+            # upload time, Eq. 41).
             from repro.fl.server.timeline import TimedFailureAdapter
             self.failures = TimedFailureAdapter(
                 self.failures, self.channels, model_bytes=self.model_bytes,
                 deadline_s=cfg.deadline_s, compute_s=cfg.compute_s,
                 seed=cfg.seed)
         # Wire sizes into the timing model: uploads carry the codec's payload,
-        # downloads the fp32 global broadcast (uplink-only compression).
+        # downloads the (possibly compressed) global broadcast.  Adaptive
+        # runs re-price every round through the controller; this is the
+        # round-1-and-static default.
         self.failures.set_payload_bytes(
             upload_bytes=np.full(cfg.n_clients, self.upload_bytes),
-            download_bytes=np.full(cfg.n_clients, self.model_bytes))
+            download_bytes=np.full(cfg.n_clients, self.download_bytes))
+        self.controller = None
+        if self.adaptive_spec:
+            from repro.fl.comm import AdaptiveCommController
+            self.controller = AdaptiveCommController(
+                cfg.n_clients, self.comm, lo=self._rung_lo, hi=self._rung_hi,
+                deadline_s=cfg.deadline_s, compute_s=cfg.compute_s)
         if cfg.trace_replay:
             # self.failures is the ReplayFailureModel here (replay overrides
             # failure_mode and always has draw_events, so it is never
@@ -179,8 +210,21 @@ class FFTRunner:
                     f"{self.failures.codec!r} but this run uses "
                     f"{cfg.codec!r}; the recorded upload timings would be "
                     "wrong — replay with the matching codec")
-            for field, ours in [("model_bytes", self.model_bytes),
-                                ("upload_bytes", self.upload_bytes)]:
+            rec_dl = self.failures.header.get("downlink_codec") or "fp32"
+            if rec_dl != self.downlink_codec_resolved:
+                raise ValueError(
+                    f"trace {cfg.trace_replay} was recorded under downlink "
+                    f"codec {rec_dl!r} but this run uses "
+                    f"{self.downlink_codec_resolved!r}; the recorded "
+                    "download timings would be wrong — replay with the "
+                    "matching downlink_codec")
+            # adaptive runs have no single upload size; the per-round byte
+            # vectors in the v3 rounds are cross-checked by the round loop
+            checks = [("model_bytes", self.model_bytes),
+                      ("download_bytes", self.download_bytes)]
+            if not self.adaptive_spec:
+                checks.append(("upload_bytes", self.upload_bytes))
+            for field, ours in checks:
                 rec = self.failures.header.get(field)
                 if rec is not None and not np.isclose(float(rec), ours,
                                                       rtol=1e-6):
@@ -343,6 +387,8 @@ class FFTRunner:
         strategy.init_state(self)
         self.failures.reset()
         self.comm.reset()                 # error-feedback residuals per run
+        if self.controller is not None:
+            self.controller.reset()       # capacity estimates per run
         tracer = None
         if self.cfg.trace_record:
             from repro.fl.scenarios.trace import TraceRecorder
@@ -354,7 +400,12 @@ class FFTRunner:
                 "deadline_s": self.cfg.deadline_s,
                 "model_bytes": self.model_bytes,
                 "codec": self.cfg.codec,
-                "upload_bytes": self.upload_bytes,
+                # adaptive runs have no single upload size: the per-round
+                # per-client byte vectors in the round records are the truth
+                "upload_bytes": (None if self.adaptive_spec
+                                 else self.upload_bytes),
+                "downlink_codec": self.downlink_codec_resolved,
+                "download_bytes": self.download_bytes,
                 "seed": self.cfg.seed})
         self.timeline: List[TimePoint] = []
         self.loop = make_round_loop(self.cfg.server_mode, self, strategy,

@@ -2,8 +2,8 @@
 
 Turns per-round link states (capacity, up/down) into a timeline of
 DOWNLOAD_DONE / COMPUTE_DONE / UPLOAD_DONE events per client, processed in
-time order against a server DEADLINE event.  A client participates in the
-round iff its link is up *and* its upload completes before the deadline —
+time order against the server's round deadline.  A client participates in
+the round iff its link is up *and* its upload completes by the deadline —
 this subsumes the seed's transient outage model (capacity ≈ 0 ⇒ upload never
 finishes) and adds the time dimension: slow links and compute stragglers are
 dropped exactly like dead ones, which is what a real synchronous FFT server
@@ -28,7 +28,6 @@ from repro.fl.failures import FailureModel
 DOWNLOAD_DONE = "download_done"
 COMPUTE_DONE = "compute_done"
 UPLOAD_DONE = "upload_done"
-DEADLINE = "deadline"
 
 # Participation causes recorded per client per round.
 CAUSE_OK = "ok"                 # upload finished before the deadline
@@ -93,11 +92,15 @@ class RoundEvents:
         """Wall-clock the server waited on the given cohort: the last
         upload's landing time if every selected client delivered, else the
         full deadline (a missing straggler is indistinguishable from a dead
-        link until the timeout)."""
+        link until the timeout).  An *empty* cohort also waits the full
+        deadline — a real server that selected nobody (or whose selection
+        came up empty) still sits out its round timeout; returning zero here
+        would advance the simulated clock by nothing and flatter the
+        wall-clock comparisons in ``bench_async``."""
         events = self.events if selected is None else [
             e for e, s in zip(self.events, selected) if s]
         if not events:
-            return 0.0
+            return self.deadline_s
         if all(e.connected for e in events):
             return float(max(e.finish_s for e in events))
         return self.deadline_s
@@ -109,8 +112,9 @@ class DeadlineSimulator:
     Per client: download the global model, run E local steps, upload the
     update.  Compute speed is heterogeneous (persistent per-client lognormal
     straggler factor) with per-round jitter.  All phase completions are
-    pushed onto one event heap together with the server deadline; clients
-    whose UPLOAD_DONE pops after DEADLINE are dropped.
+    pushed onto one event heap; clients whose UPLOAD_DONE lands after the
+    deadline are dropped (the boundary is inclusive: ``t <= deadline_s``
+    delivers).
     """
 
     def __init__(self, n_clients: int, *, model_bytes: float,
@@ -153,7 +157,22 @@ class DeadlineSimulator:
         self.download_bytes = as_arr(download_bytes)
 
     # ------------------------------------------------------------------ core
-    def _phase_durations(self, i: int, link: LinkState):
+    def round_jitters(self, rnd: int) -> np.ndarray:
+        """Per-client compute-jitter factors for round ``rnd``, drawn
+        vectorized from an RNG keyed by ``(seed, rnd)`` alone.
+
+        Client *i*'s jitter therefore never depends on other clients' link
+        states, on payload sizes, or on how many times the round has been
+        simulated — realizations are common-random-number comparable across
+        worlds/codecs, and re-pricing a round at new payload bytes replays
+        the identical compute times.  (The old implementation drew one
+        normal per *up* link from a shared stream, so flipping an unrelated
+        client's outage shifted everyone after it.)
+        """
+        rng = np.random.default_rng([self.seed, 0x6A17, rnd])
+        return np.exp(rng.normal(0.0, self.jitter_sigma, self.n_clients))
+
+    def _phase_durations(self, i: int, link: LinkState, jitter: float):
         ul_bytes = (self.model_bytes if self.upload_bytes is None
                     else self.upload_bytes[i])
         dl_bytes = (self.model_bytes if self.download_bytes is None
@@ -164,35 +183,34 @@ class DeadlineSimulator:
         t_ul = 0.0 if math.isinf(cap) else ul_bytes * 8.0 / cap
         dl_cap = cap * max(link.downlink_ratio, 1e-9)
         t_dl = 0.0 if math.isinf(dl_cap) else dl_bytes * 8.0 / dl_cap
-        jitter = math.exp(self.rng.normal(0.0, self.jitter_sigma))
         t_cp = self.compute_s * self.speed[i] * jitter
         return t_dl, t_cp, t_ul
 
     def simulate_round(self, rnd: int, links: List[LinkState],
                        deadline_s: Optional[float] = None) -> RoundEvents:
-        """Run the event loop for one round; returns resolved participation."""
+        """Run the event loop for one round; returns resolved participation.
+
+        Idempotent for a fixed ``(rnd, links, payload bytes)``: jitters come
+        from ``round_jitters`` (no shared RNG stream is consumed), so callers
+        may re-simulate the same link realization at different payload sizes
+        — the per-round repricing the adaptive codec controller relies on.
+        """
         deadline = self.deadline_s if deadline_s is None else deadline_s
+        jitters = self.round_jitters(rnd)
         heap: List[tuple] = []
         seq = 0
-        heapq.heappush(heap, (deadline, seq, -1, DEADLINE))
         finish = np.full(self.n_clients, math.inf)
         durations = {}
         for i, link in enumerate(links):
-            t_dl, t_cp, t_ul = self._phase_durations(i, link)
+            t_dl, t_cp, t_ul = self._phase_durations(i, link, jitters[i])
             durations[i] = (t_dl, t_cp, t_ul)
             if link.up and math.isfinite(t_dl):
                 seq += 1
                 heapq.heappush(heap, (t_dl, seq, i, DOWNLOAD_DONE))
 
-        deadline_hit = False
         met = np.zeros(self.n_clients, dtype=bool)
         while heap:
             t, _, i, kind = heapq.heappop(heap)
-            if kind == DEADLINE:
-                deadline_hit = True
-                # Events after the deadline can only be late uploads; nothing
-                # further changes participation, so the loop may drain fast.
-                continue
             t_dl, t_cp, t_ul = durations[i]
             if kind == DOWNLOAD_DONE:
                 if math.isfinite(t_cp):
@@ -204,8 +222,12 @@ class DeadlineSimulator:
                     heapq.heappush(heap, (t + t_ul, seq, i, UPLOAD_DONE))
             elif kind == UPLOAD_DONE:
                 finish[i] = t
-                if not deadline_hit:
-                    met[i] = True
+                # Inclusive boundary: an upload landing at exactly the
+                # deadline is delivered.  (A DEADLINE sentinel event used to
+                # decide this by heap tie-break — its seq=0 won against any
+                # equal-time UPLOAD_DONE, silently dropping t == deadline
+                # uploads.)
+                met[i] = t <= deadline
 
         events = []
         for i, link in enumerate(links):
@@ -229,43 +251,85 @@ class DeadlineSimulator:
         return out
 
 
-class ScenarioFailureModel(FailureModel):
+class LinkRealizationCache:
+    """Mixin: link realization cached *separately* from timing simulation.
+
+    ``_links`` freezes the stochastic per-round draw (subclasses provide it
+    via ``_sample_links``), while ``_events`` memoizes the deterministic
+    timing simulation on top of it.  ``set_payload_bytes`` may therefore be
+    called between rounds — it prices rounds simulated *after* the call,
+    which is how the round loops apply the adaptive controller's per-round
+    byte vectors (assign → set_payload_bytes → draw_events) — and
+    ``reprice_round`` re-runs an *already-simulated* round's cached link
+    draw at the current sizes without perturbing it (offline what-if
+    analysis; the repricing invariants are property-tested through it).
+
+    Subclasses set ``self.sim`` (a ``DeadlineSimulator``) and call
+    ``_reset_realization()`` from their ``reset``.
+    """
+
+    sim: DeadlineSimulator
+
+    def _reset_realization(self) -> None:
+        self._links: dict = {}
+        self._events: dict = {}
+
+    def _sample_links(self, r: int) -> List[LinkState]:
+        raise NotImplementedError
+
+    def set_payload_bytes(self, upload_bytes=None, download_bytes=None
+                          ) -> None:
+        """Set per-client wire sizes for rounds simulated from now on.
+        Already-simulated rounds keep their cached pricing until
+        ``reprice_round`` is called for them explicitly."""
+        self.sim.set_payload_bytes(upload_bytes, download_bytes)
+
+    def links_for(self, r: int) -> List[LinkState]:
+        # Cache keyed by round: repeated draws of a past round return the
+        # recorded realization instead of re-advancing the underlying
+        # stochastic state.  First-time draws must still arrive in round
+        # order — the processes are stateful, so sampling round 7 before
+        # round 3 would hand round 3 the round-8 state.
+        if r not in self._links:
+            self._links[r] = self._sample_links(r)
+        return self._links[r]
+
+    def reprice_round(self, r: int) -> RoundEvents:
+        """Re-simulate round ``r``'s cached link realization at the current
+        payload sizes.  Only the transfer durations (and what follows from
+        them: ``finish_s``, ``met_deadline``, causes *between* ``ok`` and
+        ``deadline``) may change; ``up`` and the link draw never do."""
+        self._events[r] = self.sim.simulate_round(r, self.links_for(r))
+        return self._events[r]
+
+    def draw_events(self, r: int) -> RoundEvents:
+        if r not in self._events:
+            self._events[r] = self.sim.simulate_round(r, self.links_for(r))
+        return self._events[r]
+
+    def draw(self, r: int) -> np.ndarray:
+        return self.draw_events(r).connected_mask()
+
+
+class ScenarioFailureModel(LinkRealizationCache, FailureModel):
     """Adapter: (Scenario world × DeadlineSimulator) → ``FailureModel``.
 
     ``draw(r)`` keeps the seed contract (True = connected) so every existing
     strategy works unchanged; ``draw_events(r)`` exposes the full timing
     detail for the runtime's ``connected = selected & up & met_deadline``
-    split and for trace recording.
+    split and for trace recording.  Caching/repricing semantics come from
+    ``LinkRealizationCache``.
     """
 
     def __init__(self, scenario, sim: DeadlineSimulator):
         self.scenario = scenario
         self.sim = sim
-        self._cache: dict = {}
+        self._reset_realization()
 
     def reset(self) -> None:
         self.scenario.reset()
         self.sim.reset()
-        self._cache.clear()
+        self._reset_realization()
 
-    def set_payload_bytes(self, upload_bytes=None, download_bytes=None
-                          ) -> None:
-        if self._cache:
-            raise RuntimeError("payload bytes must be set before any round "
-                               "is drawn — cached realizations would be "
-                               "priced at the old sizes")
-        self.sim.set_payload_bytes(upload_bytes, download_bytes)
-
-    def draw_events(self, r: int) -> RoundEvents:
-        # Cache keyed by round: repeated draws of a past round return the
-        # recorded realization instead of re-advancing the scenario's Markov
-        # state.  First-time draws must still arrive in round order — the
-        # worlds are stateful processes, so sampling round 7 before round 3
-        # would hand round 3 the round-8 state.
-        if r not in self._cache:
-            links = self.scenario.sample_round(r)
-            self._cache[r] = self.sim.simulate_round(r, links)
-        return self._cache[r]
-
-    def draw(self, r: int) -> np.ndarray:
-        return self.draw_events(r).connected_mask()
+    def _sample_links(self, r: int) -> List[LinkState]:
+        return self.scenario.sample_round(r)

@@ -32,6 +32,15 @@ upload) to each client row.  Version-1 traces still load — they predate
 codecs, so they are implicitly ``fp32``; the runtime refuses to replay any
 trace under a codec other than the one it was recorded with (the recorded
 upload timings would be priced at the wrong byte count).
+
+Version 3 (adaptive codec assignment + compressed downlink) adds
+``downlink_codec`` / ``download_bytes`` to the header and, per client row,
+``download_bytes`` plus — for adaptive runs — the per-round ``codec`` rung
+that client was assigned.  An adaptive header carries the controller spec
+(``"adaptive:<lo>-<hi>"``) and a null ``upload_bytes`` (there is no single
+upload size; the per-round byte vectors are authoritative and the round
+loop cross-checks the replaying controller against them).  Version-2 traces
+still load as static-codec recordings with the fp32 broadcast.
 """
 from __future__ import annotations
 
@@ -45,8 +54,8 @@ from repro.fl.failures import FailureModel
 from repro.fl.scenarios.engine import (CAUSE_OK, ClientRoundEvent,
                                        RoundEvents)
 
-TRACE_VERSION = 2
-SUPPORTED_TRACE_VERSIONS = (1, 2)
+TRACE_VERSION = 3
+SUPPORTED_TRACE_VERSIONS = (1, 2, 3)
 
 
 def _num(x) -> object:
@@ -83,8 +92,10 @@ class TraceRecorder:
         hdr = {"record": "header", "version": TRACE_VERSION}
         hdr.update(header)
         hdr.setdefault("codec", "fp32")
+        hdr.setdefault("downlink_codec", "fp32")
         hdr["model_bytes"] = _num(hdr.get("model_bytes"))
         hdr["upload_bytes"] = _num(hdr.get("upload_bytes"))
+        hdr["download_bytes"] = _num(hdr.get("download_bytes"))
         hdr["deadline_s"] = _num(hdr.get("deadline_s"))
         self._fh.write(json.dumps(hdr) + "\n")
 
@@ -92,19 +103,27 @@ class TraceRecorder:
                     connected: np.ndarray, events: Optional[RoundEvents],
                     up: Optional[np.ndarray] = None,
                     met_deadline: Optional[np.ndarray] = None,
-                    payload_bytes=None) -> None:
+                    payload_bytes=None, download_bytes=None,
+                    codecs=None) -> None:
         """``up``/``met_deadline`` carry the failure draw for legacy models
         (no ``events``); without them replay would fabricate connectivity
-        for clients that were down but unselected.  ``payload_bytes`` is a
-        scalar or (N,) array of this round's per-client upload sizes on the
-        wire (codec-encoded), recorded per client row."""
+        for clients that were down but unselected.  ``payload_bytes`` /
+        ``download_bytes`` are scalars or (N,) arrays of this round's
+        per-client wire sizes in each direction, recorded per client row;
+        ``codecs`` is the per-client rung list of an adaptive round (None
+        for static runs, whose codec lives in the header)."""
         clients = []
         n = len(selected)
         if payload_bytes is not None:
             payload_bytes = np.broadcast_to(
                 np.asarray(payload_bytes, float), (n,))
+        if download_bytes is not None:
+            download_bytes = np.broadcast_to(
+                np.asarray(download_bytes, float), (n,))
         for i in range(n):
             pb = _num(payload_bytes[i]) if payload_bytes is not None else None
+            db = (_num(download_bytes[i]) if download_bytes is not None
+                  else None)
             if events is not None:
                 e = events.events[i]
                 row = {"id": i, "capacity_bps": _num(e.capacity_bps),
@@ -127,6 +146,10 @@ class TraceRecorder:
                        "met_deadline": met_i,
                        "connected": bool(connected[i]),
                        "cause": CAUSE_OK if up_i and met_i else "outage"}
+            if db is not None:
+                row["download_bytes"] = db
+            if codecs is not None:
+                row["codec"] = str(codecs[i])
             clients.append(row)
         rec = {"record": "round", "round": int(rnd),
                "deadline_s": _num(events.deadline_s if events else None),
@@ -207,8 +230,25 @@ class ReplayFailureModel(FailureModel):
 
     def payload_bytes(self, r: int) -> Optional[np.ndarray]:
         """Recorded per-client upload sizes for round ``r`` (None for v1)."""
+        return self._client_floats(r, "payload_bytes")
+
+    def download_bytes(self, r: int) -> Optional[np.ndarray]:
+        """Recorded per-client broadcast sizes for round ``r`` (None before
+        v3)."""
+        return self._client_floats(r, "download_bytes")
+
+    def codecs(self, r: int) -> Optional[List[str]]:
+        """Recorded per-client codec rungs for round ``r`` (adaptive v3
+        traces only; None means the header codec applied to everyone)."""
         rows = sorted(self._round(r)["clients"], key=lambda c: c["id"])
-        vals = [_unnum(c.get("payload_bytes")) for c in rows]
+        vals = [c.get("codec") for c in rows]
+        if all(v is None for v in vals):
+            return None
+        return [str(v) if v is not None else self.codec for v in vals]
+
+    def _client_floats(self, r: int, field: str) -> Optional[np.ndarray]:
+        rows = sorted(self._round(r)["clients"], key=lambda c: c["id"])
+        vals = [_unnum(c.get(field)) for c in rows]
         if all(v is None for v in vals):
             return None
         return np.array([math.nan if v is None else v for v in vals])

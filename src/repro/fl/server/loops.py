@@ -54,12 +54,83 @@ class RoundLoop:
         self.clock_s = 0.0
         self.participants_per_round: List[int] = []
 
-    def _uplink(self, client: int, model, t_global):
+    def _uplink(self, client: int, model, t_global, codec_name=None):
         """Ship one local update through the communication codec: encode
         client-side (error feedback applied), decode server-side.  Returns
-        the reconstructed model the strategy aggregates."""
-        recon, _payload = self.runner.comm.roundtrip(client, model, t_global)
+        the reconstructed model the strategy aggregates.  ``codec_name``
+        overrides the run's static codec (adaptive per-client rungs)."""
+        comm = self.runner.comm
+        codec = comm.codec_named(codec_name) if codec_name else None
+        recon, _payload = comm.roundtrip(client, model, t_global, codec=codec)
         return recon
+
+    def _begin_round(self, r: int):
+        """Round preamble shared by every server mode: the adaptive
+        controller (when present) assigns this round's per-client rungs and
+        re-prices the timing model *before* the network is drawn, then the
+        server broadcasts the global model through the downlink codec.
+
+        Returns ``(t_global, assignment)`` — the parameters clients actually
+        start local training from (the decoded broadcast; identical to
+        ``runner.global_params`` without a downlink codec) and the round's
+        ``RoundAssignment`` (None for static runs)."""
+        runner = self.runner
+        assignment = None
+        if runner.controller is not None:
+            assignment = runner.controller.assign(r)
+            runner.failures.set_payload_bytes(
+                upload_bytes=assignment.upload_bytes,
+                download_bytes=np.full(runner.n_clients,
+                                       assignment.download_bytes))
+            # Replaying a recorded adaptive run: the controller re-derives
+            # its assignments from the replayed events, so any divergence
+            # from the recorded byte vectors — or from the recorded rungs,
+            # which can differ even at identical bytes (qsgd:8 and int8 are
+            # byte-tied but decode differently) — means the trace and this
+            # configuration disagree: fail loudly, don't mis-price quietly.
+            if hasattr(runner.failures, "payload_bytes"):
+                rec = runner.failures.payload_bytes(r)
+                if rec is not None:
+                    known = ~np.isnan(rec)
+                    if not np.allclose(rec[known],
+                                       assignment.upload_bytes[known],
+                                       rtol=1e-6):
+                        raise ValueError(
+                            f"round {r}: replayed trace recorded per-client "
+                            f"upload bytes {rec} but the adaptive controller "
+                            f"assigns {assignment.upload_bytes}; the trace "
+                            "was recorded under a different adaptive "
+                            "configuration")
+            if hasattr(runner.failures, "codecs"):
+                rec_codecs = runner.failures.codecs(r)
+                if rec_codecs is not None and rec_codecs != assignment.codecs:
+                    raise ValueError(
+                        f"round {r}: replayed trace recorded per-client "
+                        f"codec rungs {rec_codecs} but the adaptive "
+                        f"controller assigns {assignment.codecs}; the trace "
+                        "was recorded under a different adaptive "
+                        "configuration")
+        t_global, _dl_nbytes = runner.comm.broadcast(runner.global_params)
+        return t_global, assignment
+
+    def _trace_round(self, r, selected, connected, events, up, met_deadline,
+                     assignment) -> None:
+        if self.tracer is None:
+            return
+        runner = self.runner
+        self.tracer.write_round(
+            r, selected, connected, events, up=up, met_deadline=met_deadline,
+            payload_bytes=(assignment.upload_bytes if assignment is not None
+                           else runner.comm.upload_bytes),
+            download_bytes=(assignment.download_bytes
+                            if assignment is not None
+                            else runner.comm.download_bytes),
+            codecs=assignment.codecs if assignment is not None else None)
+
+    def _observe(self, r, events, selected) -> None:
+        runner = self.runner
+        if runner.controller is not None and events is not None:
+            runner.controller.observe(r, events, selected)
 
     # ------------------------------------------------------------- shared
     def _select(self) -> np.ndarray:
@@ -111,15 +182,14 @@ class SyncRoundLoop(RoundLoop):
     def run_round(self, r: int) -> float:
         runner, strategy = self.runner, self.strategy
         selected = self._select()
+        t_global, assignment = self._begin_round(r)
         up, met_deadline, events = runner._draw_network(r)
         connected = selected & up & met_deadline
         self.participants_per_round.append(int(connected.sum()))
-        if self.tracer is not None:
-            self.tracer.write_round(r, selected, connected, events,
-                                    up=up, met_deadline=met_deadline,
-                                    payload_bytes=runner.comm.upload_bytes)
+        self._trace_round(r, selected, connected, events, up, met_deadline,
+                          assignment)
+        self._observe(r, events, selected)
 
-        t_global = runner.global_params
         client_models: Dict[int, Any] = {}
         mu = strategy.prox_mu()
         for i in np.where(connected)[0]:
@@ -127,7 +197,9 @@ class SyncRoundLoop(RoundLoop):
             m = runner.run_local(t_global, runner.client_x[i],
                                  runner.client_y[i], r, mu=mu, corr=corr)
             m = strategy.post_local(i, r, m, t_global, runner)
-            client_models[int(i)] = self._uplink(int(i), m, t_global)
+            client_models[int(i)] = self._uplink(
+                int(i), m, t_global,
+                codec_name=(assignment.codecs[int(i)] if assignment else None))
         server_model = runner.run_local(t_global, runner.public_x,
                                         runner.public_y, r)
 
@@ -174,6 +246,7 @@ class AsyncRoundLoop(RoundLoop):
     def run_round(self, r: int) -> float:
         runner, strategy, cfg = self.runner, self.strategy, self.runner.cfg
         selected = self._select()
+        t_global, assignment = self._begin_round(r)
         up, met_deadline, events = runner._draw_network(r)
         if events is None:
             raise RuntimeError(
@@ -181,12 +254,10 @@ class AsyncRoundLoop(RoundLoop):
                 "runner should have wrapped this failure model in "
                 "TimedFailureAdapter")
         fresh_connected = selected & up & met_deadline
-        if self.tracer is not None:
-            self.tracer.write_round(r, selected, fresh_connected, events,
-                                    up=up, met_deadline=met_deadline,
-                                    payload_bytes=runner.comm.upload_bytes)
+        self._trace_round(r, selected, fresh_connected, events, up,
+                          met_deadline, assignment)
+        self._observe(r, events, selected)
 
-        t_global = runner.global_params
         mu = strategy.prox_mu()
         t_start = self.clock_s
         horizon_s = cfg.deadline_s * (cfg.tau_max + 1)
@@ -207,7 +278,9 @@ class AsyncRoundLoop(RoundLoop):
             # The wire sits between dispatch and landing: what the buffer
             # holds is the *decoded* upload, exactly what the server will
             # eventually see (the scenario engine already priced its bytes).
-            m = self._uplink(int(i), m, t_global)
+            m = self._uplink(
+                int(i), m, t_global,
+                codec_name=(assignment.codecs[int(i)] if assignment else None))
             # Only delta-based strategies (FedBuff) need the dispatch-time
             # snapshot; skipping it elsewhere halves the buffer's memory.
             delta = (delta_pytree(m, t_global)

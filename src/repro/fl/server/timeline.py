@@ -11,23 +11,24 @@ uses — capacity → upload time via the Eq. 41 rate relation
 
 The synthesized capacity is an independent realization of the same channel,
 so under ``transient`` an up-flagged client can still draw a slow channel
-and become a straggler — richer than the boolean model, by design.  Rounds
-are cached so repeated draws replay the realization, matching
-``ScenarioFailureModel``'s contract.
+and become a straggler — richer than the boolean model, by design.  The
+link realization is cached separately from its timing simulation
+(``LinkRealizationCache``), so repeated draws replay the realization and
+per-round payload repricing never perturbs the inner model's draw.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 
 from repro.fl.failures import FailureModel
 from repro.fl.network import ClientChannel
-from repro.fl.scenarios.engine import (DeadlineSimulator, LinkState,
-                                       RoundEvents)
+from repro.fl.scenarios.engine import (DeadlineSimulator, LinkRealizationCache,
+                                       LinkState)
 
 
-class TimedFailureAdapter(FailureModel):
+class TimedFailureAdapter(LinkRealizationCache, FailureModel):
     """Wraps a boolean ``FailureModel`` with synthesized arrival timelines."""
 
     def __init__(self, inner: FailureModel, channels: List[ClientChannel], *,
@@ -44,28 +45,22 @@ class TimedFailureAdapter(FailureModel):
     def reset(self) -> None:
         self.inner.reset()
         self.sim.reset()
-        self.rng = np.random.default_rng(self.seed + 29)
-        self._cache: Dict[int, RoundEvents] = {}
+        self._reset_realization()
 
-    def set_payload_bytes(self, upload_bytes=None, download_bytes=None
-                          ) -> None:
-        if self._cache:
-            raise RuntimeError("payload bytes must be set before any round "
-                               "is drawn — cached realizations would be "
-                               "priced at the old sizes")
-        self.sim.set_payload_bytes(upload_bytes, download_bytes)
-
-    def draw_events(self, r: int) -> RoundEvents:
-        if r not in self._cache:
-            up = self.inner.draw(r)
-            links = []
-            for i, chan in enumerate(self.channels):
-                if not up[i]:
-                    links.append(LinkState(0.0, up=False, cause="outage"))
-                else:
-                    links.append(LinkState(float(chan.capacity(self.rng))))
-            self._cache[r] = self.sim.simulate_round(r, links)
-        return self._cache[r]
-
-    def draw(self, r: int) -> np.ndarray:
-        return self.draw_events(r).connected_mask()
+    def _sample_links(self, r: int) -> List[LinkState]:
+        up = self.inner.draw(r)
+        # Capacity draws come from an RNG keyed by (seed, round) and are
+        # made for *every* client, up or down — mirroring the
+        # DeadlineSimulator jitter fix, so one client's outage (or a
+        # different inner failure mode at the same seed) never shifts
+        # another client's synthesized capacity: realizations stay
+        # common-random-number comparable.
+        rng = np.random.default_rng([self.seed + 29, 0x71D3, r])
+        links = []
+        for i, chan in enumerate(self.channels):
+            cap = float(chan.capacity(rng))
+            if not up[i]:
+                links.append(LinkState(0.0, up=False, cause="outage"))
+            else:
+                links.append(LinkState(cap))
+        return links

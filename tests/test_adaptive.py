@@ -1,0 +1,599 @@
+"""ISSUE-4: deadline-simulator timing bugfixes + adaptive codec assignment.
+
+Covers the three timing regressions (outage-independent compute jitter,
+inclusive deadline boundary, empty-cohort server wait), the split of link
+realization from timing (per-round repricing), the adaptive controller
+(ladder policy, capacity estimation, determinism), the downlink codec path
+with server-side error feedback, and trace schema v3 (record/replay of
+adaptive runs bit-exactly, v2 compatibility, loud mismatches).
+"""
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.strategies import STRATEGIES
+from repro.fl.comm import (CommState, RUNG_LADDER, AdaptiveCommController,
+                           is_adaptive_spec, ladder_between, make_codec,
+                           parse_adaptive_spec)
+from repro.fl.runtime import FFTConfig
+from repro.fl.scenarios import make_scenario_model
+from repro.fl.scenarios.engine import (CAUSE_DEADLINE, CAUSE_OK,
+                                       DeadlineSimulator, LinkState)
+from repro.fl.toy import make_toy_runner
+
+N = 8
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: per-round jitters are drawn vectorized up front, so one client's
+# link state can never shift another client's compute time
+# ---------------------------------------------------------------------------
+def _sim(**kw):
+    args = dict(model_bytes=1e6, deadline_s=8.0, compute_s=2.0,
+                hetero_sigma=0.3, jitter_sigma=0.2, seed=7)
+    args.update(kw)
+    n = args.pop("n", N)
+    return DeadlineSimulator(n, **args)
+
+
+def test_jitter_independent_of_other_clients_outages():
+    """Flipping one link's ``up`` must leave every other client's
+    ``t_compute_s`` unchanged — realizations are common-random-number
+    comparable across outage patterns."""
+    links_all_up = [LinkState(10e6) for _ in range(N)]
+    links_one_down = [LinkState(10e6) for _ in range(N)]
+    links_one_down[2] = LinkState(0.0, up=False, cause="outage")
+
+    ev_a = _sim().simulate_round(3, links_all_up)
+    ev_b = _sim().simulate_round(3, links_one_down)
+    for i in range(N):
+        if i == 2:
+            assert math.isinf(ev_b.events[i].t_compute_s)
+        else:
+            assert ev_a.events[i].t_compute_s == ev_b.events[i].t_compute_s
+
+
+def test_jitter_independent_of_payload_and_simulation_count():
+    """Re-simulating the same round (at any payload size) replays identical
+    compute times: the jitter stream is keyed by (seed, round), not by how
+    often the simulator has run."""
+    sim = _sim()
+    links = [LinkState(5e6) for _ in range(N)]
+    first = sim.simulate_round(1, links)
+    again = sim.simulate_round(1, links)
+    for a, b in zip(first.events, again.events):
+        assert a.t_compute_s == b.t_compute_s
+        assert a.finish_s == b.finish_s
+    sim.set_payload_bytes(upload_bytes=0.25e6)
+    repriced = sim.simulate_round(1, links)
+    for a, b in zip(first.events, repriced.events):
+        assert a.t_compute_s == b.t_compute_s          # only transfers moved
+        assert b.t_upload_s == pytest.approx(a.t_upload_s / 4)
+
+
+def test_jitter_differs_across_rounds_and_clients():
+    sim = _sim()
+    links = [LinkState(5e6) for _ in range(N)]
+    r1 = sim.simulate_round(1, links)
+    r2 = sim.simulate_round(2, links)
+    c1 = [e.t_compute_s for e in r1.events]
+    c2 = [e.t_compute_s for e in r2.events]
+    assert c1 != c2                                    # fresh draw per round
+    assert len(set(c1)) > 1                            # and per client
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: an upload landing at exactly t == deadline_s is delivered
+# ---------------------------------------------------------------------------
+def _exact_boundary_sim(deadline):
+    # capacity 8 Mbps, 1e6 B payload, downlink_ratio 8, zero compute:
+    # t_dl = 0.125 s, t_ul = 1.0 s -> finish exactly 1.125 s (binary exact)
+    sim = DeadlineSimulator(1, model_bytes=1e6, deadline_s=deadline,
+                            compute_s=0.0, hetero_sigma=0.0,
+                            jitter_sigma=0.0, seed=0)
+    return sim, [LinkState(8e6)]
+
+
+def test_upload_finishing_exactly_at_deadline_is_delivered():
+    sim, links = _exact_boundary_sim(deadline=1.125)
+    ev = sim.simulate_round(1, links)
+    assert ev.events[0].finish_s == 1.125              # boundary is exact
+    assert ev.events[0].met_deadline
+    assert ev.events[0].cause == CAUSE_OK
+    np.testing.assert_array_equal(ev.connected_mask(), [True])
+    np.testing.assert_array_equal(ev.late_mask(), [False])
+
+
+def test_upload_finishing_after_deadline_is_late():
+    sim, links = _exact_boundary_sim(deadline=1.124)
+    ev = sim.simulate_round(1, links)
+    assert ev.events[0].finish_s == 1.125
+    assert not ev.events[0].met_deadline
+    assert ev.events[0].cause == CAUSE_DEADLINE
+    np.testing.assert_array_equal(ev.connected_mask(), [False])
+    np.testing.assert_array_equal(ev.late_mask(), [True])
+
+
+# ---------------------------------------------------------------------------
+# bugfix 3: an empty selected cohort still waits out the round timeout
+# ---------------------------------------------------------------------------
+def test_server_wait_empty_selection_is_the_deadline():
+    sim = _sim(jitter_sigma=0.0, hetero_sigma=0.0)
+    ev = sim.simulate_round(1, [LinkState(10e6) for _ in range(N)])
+    assert ev.server_wait(np.zeros(N, dtype=bool)) == ev.deadline_s
+    # non-empty cohorts keep their semantics
+    assert 0.0 < ev.server_wait(np.ones(N, dtype=bool)) <= ev.deadline_s
+
+
+# ---------------------------------------------------------------------------
+# link realization split from timing: per-round repricing
+# ---------------------------------------------------------------------------
+def test_reprice_round_changes_only_timing_never_the_link_draw():
+    m = make_scenario_model("correlated_wifi", N, model_bytes=4e6,
+                            deadline_s=5.0, seed=3)
+    base = [m.draw_events(r) for r in range(1, 9)]
+    m.set_payload_bytes(upload_bytes=0.5e6, download_bytes=0.5e6)
+    for r in range(1, 9):
+        rp = m.reprice_round(r)
+        for e0, e1 in zip(base[r - 1].events, rp.events):
+            assert e0.up == e1.up
+            assert e0.capacity_bps == e1.capacity_bps
+            if not e0.up:
+                assert e0.cause == e1.cause            # outage cause frozen
+            else:
+                assert e1.t_upload_s <= e0.t_upload_s  # fewer bytes: faster
+                assert e1.t_download_s <= e0.t_download_s
+                assert e1.finish_s <= e0.finish_s
+                assert e0.t_compute_s == e1.t_compute_s
+        # smaller payloads can only add participants
+        assert (rp.connected_mask() | ~base[r - 1].connected_mask()).all()
+        # the repriced realization is now the cached one
+        np.testing.assert_array_equal(m.draw(r), rp.connected_mask())
+
+
+def test_set_payload_bytes_applies_to_future_rounds_only():
+    m = make_scenario_model("lossy_uplink", N, model_bytes=4e6,
+                            deadline_s=5.0, seed=1)
+    ev1 = m.draw_events(1)
+    m.set_payload_bytes(upload_bytes=0.1e6)
+    assert m.draw_events(1) is ev1                     # cached, unrepriced
+    ev2 = m.draw_events(2)
+    up2 = [e for e in ev2.events if e.up]
+    assert up2 and all(e.t_upload_s <= 5.0 for e in up2)
+
+
+def test_timed_adapter_reprices_without_perturbing_inner_draw():
+    from repro.fl.network import build_network
+    from repro.fl.server.timeline import TimedFailureAdapter
+    from repro.fl.failures import IntermittentFailures
+    adapter = TimedFailureAdapter(
+        IntermittentFailures(N, duration_max=5, seed=2), build_network(N, seed=2),
+        model_bytes=4e6, deadline_s=5.0, seed=2)
+    base = [adapter.draw_events(r) for r in range(1, 6)]
+    adapter.set_payload_bytes(upload_bytes=0.25e6)
+    for r in range(1, 6):
+        rp = adapter.reprice_round(r)
+        for e0, e1 in zip(base[r - 1].events, rp.events):
+            assert e0.up == e1.up
+            assert e0.capacity_bps == e1.capacity_bps
+
+
+def test_timed_adapter_capacities_common_random_numbers():
+    """Synthesized capacities are keyed by (seed, round) and drawn for every
+    client: a different inner failure pattern at the same seed must not
+    shift an up client's capacity (the adapter-level mirror of the
+    compute-jitter CRN fix)."""
+    from repro.fl.network import build_network
+    from repro.fl.server.timeline import TimedFailureAdapter
+    from repro.fl.failures import IntermittentFailures, NoFailures
+    chans = build_network(N, seed=3)
+    a = TimedFailureAdapter(NoFailures(N), chans,
+                            model_bytes=4e6, deadline_s=5.0, seed=3)
+    flaky = IntermittentFailures(N, duration_max=8, seed=9,
+                                 rates=np.full(N, 0.4))
+    b = TimedFailureAdapter(flaky, chans, model_bytes=4e6, deadline_s=5.0,
+                            seed=3)
+    saw_both = False
+    for r in range(1, 9):
+        ea, eb = a.draw_events(r), b.draw_events(r)
+        for x, y in zip(ea.events, eb.events):
+            if x.up and y.up:
+                assert x.capacity_bps == y.capacity_bps
+            else:
+                saw_both = True
+    assert saw_both                        # the outage patterns did differ
+
+
+# ---------------------------------------------------------------------------
+# adaptive spec parsing + ladder policy
+# ---------------------------------------------------------------------------
+def test_parse_adaptive_specs():
+    assert is_adaptive_spec("adaptive:sign1-fp16")
+    assert is_adaptive_spec("adaptive")
+    assert not is_adaptive_spec("int8")
+    assert parse_adaptive_spec("adaptive:sign1-fp16") == ("sign1", "fp16")
+    assert parse_adaptive_spec("adaptive:qsgd:2-int8") == ("qsgd:2", "int8")
+    assert parse_adaptive_spec("adaptive") == ("sign1", "fp32")
+    assert ladder_between("qsgd:8", "fp16") == ("qsgd:8", "int8", "fp16")
+
+
+@pytest.mark.parametrize("bad", ["adaptive:", "adaptive:fp16-sign1",
+                                 "adaptive:sign1", "adaptive:topk:0.1-fp32",
+                                 "adaptive:sign1-fp64"])
+def test_parse_adaptive_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        parse_adaptive_spec(bad)
+
+
+def _controller(lo="sign1", hi="fp16", **kw):
+    tmpl = {"w": jnp.zeros((1000,), jnp.float32)}
+    comm = CommState(make_codec(hi), tmpl, model_bytes_override=4e6)
+    args = dict(deadline_s=5.0, compute_s=2.0)
+    args.update(kw)
+    return AdaptiveCommController(N, comm, lo=lo, hi=hi, **args)
+
+
+def test_ladder_monotone_in_estimated_capacity():
+    ctl = _controller()
+    caps = np.logspace(2, 12, 60)                      # 100 bps .. 1 Tbps
+    idx = [ctl.rung_index_for(c) for c in caps]
+    assert idx == sorted(idx)                          # monotone
+    assert idx[0] == 0                                 # hopeless -> cheapest
+    assert idx[-1] == len(ctl.rungs) - 1               # fast -> richest
+    assert max(idx) < len(RUNG_LADDER)                 # never beyond ladder
+
+
+def test_ladder_never_exceeds_hi_rung():
+    ctl = _controller(lo="qsgd:4", hi="int8")
+    assert ctl.rung_for(1e15) == "int8"
+    assert ctl.rung_for(1.0) == "qsgd:4"
+    full = _controller(lo="sign1", hi="fp32")
+    assert full.rung_for(1e15) == "fp32"               # fp32 is the ceiling
+    # rung bytes are non-decreasing along every ladder slice
+    assert (np.diff(full.rung_bytes) >= 0).all()
+
+
+def test_controller_probes_high_then_backs_off_on_misses():
+    ctl = _controller()
+    a1 = ctl.assign(1)
+    assert all(c == "fp16" for c in a1.codecs)         # optimistic start
+    sim = DeadlineSimulator(N, model_bytes=4e6, deadline_s=5.0,
+                            compute_s=2.0, hetero_sigma=0.0,
+                            jitter_sigma=0.0, seed=0)
+    sim.set_payload_bytes(upload_bytes=a1.upload_bytes,
+                          download_bytes=a1.download_bytes)
+    slow = [LinkState(0.05e6) for _ in range(N)]       # nobody lands at fp16
+    ctl.observe(1, sim.simulate_round(1, slow), np.ones(N, dtype=bool))
+    a2 = ctl.assign(2)
+    idx = [ctl.rungs.index(c) for c in a2.codecs]
+    assert all(k < ctl.rungs.index("fp16") for k in idx)
+    # keep missing: the controller walks to the cheapest rung and stays
+    for r in range(3, 16):
+        sim.set_payload_bytes(upload_bytes=ctl.assignments[r - 1].upload_bytes)
+        ctl.observe(r - 1, sim.simulate_round(r - 1, slow),
+                    np.ones(N, dtype=bool))
+        a2 = ctl.assign(r)
+    assert all(c == "sign1" for c in a2.codecs)
+    assert (ctl.cap_hat >= ctl.cap_min).all()          # floored, can recover
+
+
+def test_controller_recovers_after_successes():
+    ctl = _controller()
+    ctl.cap_hat[:] = ctl.cap_min                       # beaten all the way down
+    a = ctl.assign(1)
+    assert all(c == "sign1" for c in a.codecs)
+    sim = DeadlineSimulator(N, model_bytes=4e6, deadline_s=5.0,
+                            compute_s=2.0, hetero_sigma=0.0,
+                            jitter_sigma=0.0, seed=0)
+    fast = [LinkState(50e6) for _ in range(N)]
+    for r in range(1, 6):
+        sim.set_payload_bytes(upload_bytes=ctl.assignments[r].upload_bytes,
+                              download_bytes=ctl.assignments[r].download_bytes)
+        ctl.observe(r, sim.simulate_round(r, fast), np.ones(N, dtype=bool))
+        a = ctl.assign(r + 1)
+    assert all(c == "fp16" for c in a.codecs)          # climbed back to hi
+
+
+def test_controller_ignores_unselected_clients():
+    ctl = _controller()
+    ctl.assign(1)
+    sim = DeadlineSimulator(N, model_bytes=4e6, deadline_s=5.0, seed=0)
+    ev = sim.simulate_round(1, [LinkState(0.01e6) for _ in range(N)])
+    sel = np.zeros(N, dtype=bool)
+    sel[0] = True
+    before = ctl.cap_hat.copy()
+    ctl.observe(1, ev, sel)
+    assert ctl.cap_hat[0] < before[0]                  # observed miss
+    np.testing.assert_array_equal(ctl.cap_hat[1:], before[1:])
+
+
+def test_controller_is_deterministic():
+    def run():
+        ctl = _controller()
+        sim = DeadlineSimulator(N, model_bytes=4e6, deadline_s=5.0, seed=5)
+        world = make_scenario_model("diurnal", N, model_bytes=4e6,
+                                    deadline_s=5.0, seed=5)
+        out = []
+        for r in range(1, 11):
+            a = ctl.assign(r)
+            world.set_payload_bytes(upload_bytes=a.upload_bytes,
+                                    download_bytes=a.download_bytes)
+            ev = world.draw_events(r)
+            ctl.observe(r, ev, np.ones(N, dtype=bool))
+            out.append(tuple(a.codecs))
+        return out
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# CommState: per-call codec override + downlink broadcast error feedback
+# ---------------------------------------------------------------------------
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+            for i, s in enumerate([(13, 7), (9,)])}
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32) -
+                                     y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_roundtrip_codec_override_and_residual_flush():
+    st = CommState(make_codec("fp16"), _tree())
+    g = jax.tree.map(jnp.zeros_like, _tree())
+    model = _tree(3)
+    # a lossy rung leaves a residual...
+    _, p1 = st.roundtrip(0, model, g, codec=st.codec_named("sign1"))
+    assert p1.codec == "sign1"
+    assert st.residual(0) is not None
+    # ...which a later lossless rung flushes down the wire entirely
+    recon, p2 = st.roundtrip(0, model, g, codec=st.codec_named("fp32"))
+    assert p2.codec == "fp32"
+    assert st.residual(0) is None
+    # cumulative conservation: decoded_1 + decoded_2 == 2 * delta exactly
+    # (sign1's error was re-sent by the fp32 upload)
+    dec = jax.tree.map(lambda a, b: a.astype(jnp.float32) +
+                       b.astype(jnp.float32), recon, _decoded_of(st, p1, g))
+    want = jax.tree.map(lambda d: 2.0 * d, model)
+    assert _maxdiff(dec, want) <= 1e-5
+
+
+def _decoded_of(st, payload, g):
+    dec = st.codec_named(payload.codec).decode(payload)
+    return jax.tree.map(lambda gg, d: gg.astype(jnp.float32) + d, g, dec)
+
+
+def test_nbytes_for_scales_with_model_bytes_override():
+    st = CommState(make_codec("fp32"), _tree(), model_bytes_override=8e6)
+    assert st.nbytes_for("fp32") == pytest.approx(8e6)
+    assert st.nbytes_for("fp16") == pytest.approx(4e6)
+    # tiny test tree: the 4 B per-leaf scale keeps sign1 above 1/32 exactly
+    assert st.nbytes_for("sign1") < 0.06 * 8e6
+    st2 = CommState(make_codec("fp32"), _tree())
+    assert st2.nbytes_for("fp32") == st2.fp32_nbytes
+
+
+def test_broadcast_identity_without_downlink_codec():
+    st = CommState(make_codec("fp32"), _tree())
+    g = _tree(1)
+    out, nbytes = st.broadcast(g)
+    assert out is g
+    assert nbytes == st.download_bytes == st.ref_bytes
+
+
+def test_broadcast_downlink_error_feedback_tracks_global():
+    """The decoded replica must follow the true global with bounded lag:
+    server-side EF re-sends what each broadcast dropped."""
+    st = CommState(make_codec("fp32"), _tree(),
+                   downlink_codec=make_codec("qsgd:4"))
+    rng = np.random.default_rng(0)
+    g = jax.tree.map(jnp.zeros_like, _tree())
+    out, nbytes = st.broadcast(g)                      # replica initialized
+    assert nbytes == st.download_bytes < st.ref_bytes
+    drift = []
+    for t in range(12):
+        g = jax.tree.map(
+            lambda x: x + jnp.asarray(rng.normal(0, 0.1, x.shape),
+                                      jnp.float32), g)
+        out, _ = st.broadcast(g)
+        drift.append(_maxdiff(out, g))
+    # bounded (EF) and small relative to the accumulated motion
+    assert max(drift[3:]) <= max(drift[:3]) * 3 + 1e-3
+    assert drift[-1] < 0.1
+
+
+def test_broadcast_total_downlink_accounting():
+    st = CommState(make_codec("fp32"), _tree(),
+                   downlink_codec=make_codec("fp16"))
+    g = _tree(2)
+    for _ in range(3):
+        st.broadcast(g)
+    assert st.total_downlink_bytes == pytest.approx(3 * st.download_bytes)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: adaptive runs, downlink pricing, trace v3, replay
+# ---------------------------------------------------------------------------
+BASE = dict(n_clients=6, k_selected=6, local_steps=2, batch_size=8, lr=0.05,
+            seed=0, eval_every=2, model_bytes=4e6, deadline_s=5.0)
+TOY = dict(n_samples=600, public_per_class=10, pretrain_steps=9)
+
+
+def test_adaptive_run_recovers_participants_over_fp32():
+    parts = {}
+    for codec in ["fp32", "adaptive:sign1-fp16"]:
+        cfg = FFTConfig(codec=codec, failure_mode="scenario:diurnal", **BASE)
+        r = make_toy_runner(cfg, **TOY)
+        r.run(STRATEGIES["fedavg"](), rounds=4)
+        parts[codec] = float(np.mean(r.loop.participants_per_round))
+    assert parts["adaptive:sign1-fp16"] > parts["fp32"]
+
+
+def test_adaptive_runner_wiring():
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:lossy_uplink", **BASE)
+    r = make_toy_runner(cfg, **TOY)
+    assert r.controller is not None
+    assert r.downlink_codec_resolved == "fp16"         # defaults to hi rung
+    assert r.download_bytes == pytest.approx(2e6)      # fp16 of 4e6 override
+    assert r.upload_bytes == pytest.approx(2e6)        # hi-rung ceiling
+    # static runs keep the uncompressed broadcast
+    r2 = make_toy_runner(FFTConfig(codec="int8",
+                                   failure_mode="scenario:lossy_uplink",
+                                   **BASE), **TOY)
+    assert r2.controller is None
+    assert r2.download_bytes == pytest.approx(4e6)
+
+
+def test_adaptive_needs_timing_wraps_legacy_modes():
+    from repro.fl.server.timeline import TimedFailureAdapter
+    cfg = FFTConfig(codec="adaptive:sign1-fp16", failure_mode="mixed", **BASE)
+    r = make_toy_runner(cfg, **TOY)
+    assert isinstance(r.failures, TimedFailureAdapter)
+    hist = r.run(STRATEGIES["fedavg"](), rounds=3)
+    assert len(hist) == 2
+
+
+def test_downlink_codec_prices_download_bytes():
+    cfg = FFTConfig(codec="int8", downlink_codec="int8",
+                    failure_mode="scenario:lossy_uplink", **BASE)
+    r = make_toy_runner(cfg, **TOY)
+    assert r.download_bytes == pytest.approx(r.upload_bytes)
+    ev = r.failures.draw_events(1)
+    up = [e for e in ev.events if e.up]
+    # downloads priced at the compressed size: 4x faster than fp32 would be
+    cfg_fp = FFTConfig(codec="int8", failure_mode="scenario:lossy_uplink",
+                       **BASE)
+    r_fp = make_toy_runner(cfg_fp, **TOY)
+    ev_fp = r_fp.failures.draw_events(1)
+    for e_c, e_f in zip(up, [e for e in ev_fp.events if e.up]):
+        assert e_c.t_download_s == pytest.approx(
+            e_f.t_download_s * r.download_bytes / r_fp.download_bytes)
+
+
+@pytest.mark.parametrize("mode", ["sync", "buffered"])
+def test_adaptive_record_replay_bit_exact(tmp_path, mode):
+    path = str(tmp_path / "a.ndjson")
+    rec_cfg = FFTConfig(codec="adaptive:sign1-fp16", server_mode=mode,
+                        failure_mode="scenario:diurnal", trace_record=path,
+                        **BASE)
+    live = make_toy_runner(rec_cfg, **TOY).run(STRATEGIES["fedavg"](),
+                                               rounds=4)
+    rep_cfg = FFTConfig(codec="adaptive:sign1-fp16", server_mode=mode,
+                        trace_replay=path, **BASE)
+    rep = make_toy_runner(rep_cfg, **TOY).run(STRATEGIES["fedavg"](),
+                                              rounds=4)
+    assert rep == live
+
+
+def test_v3_trace_schema_records_per_client_codec_and_bytes(tmp_path):
+    path = str(tmp_path / "a.ndjson")
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:diurnal", trace_record=path,
+                    **BASE)
+    runner = make_toy_runner(cfg, **TOY)
+    runner.run(STRATEGIES["fedavg"](), rounds=3)
+    lines = [json.loads(l) for l in open(path)]
+    hdr = lines[0]
+    assert hdr["version"] == 3
+    assert hdr["codec"] == "adaptive:sign1-fp16"
+    assert hdr["upload_bytes"] is None                 # no single size
+    assert hdr["downlink_codec"] == "fp16"
+    assert hdr["download_bytes"] == pytest.approx(2e6)
+    rungs = set()
+    for rec in lines[1:]:
+        for c in rec["clients"]:
+            assert c["codec"] in RUNG_LADDER
+            assert c["download_bytes"] == pytest.approx(2e6)
+            assert c["payload_bytes"] <= 2e6 + 1e-6    # never above hi rung
+            rungs.add(c["codec"])
+    # the recorded assignments match what the controller decided
+    for rnd, a in runner.controller.assignments.items():
+        rec = lines[rnd]
+        assert [c["codec"] for c in rec["clients"]] == a.codecs
+
+
+def test_adaptive_replay_with_different_spec_fails_loudly(tmp_path):
+    path = str(tmp_path / "a.ndjson")
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:diurnal", trace_record=path,
+                    **BASE)
+    make_toy_runner(cfg, **TOY).run(STRATEGIES["fedavg"](), rounds=2)
+    with pytest.raises(ValueError, match="codec"):
+        make_toy_runner(FFTConfig(codec="adaptive:sign1-fp32",
+                                  trace_replay=path, **BASE), **TOY)
+    with pytest.raises(ValueError, match="downlink"):
+        make_toy_runner(FFTConfig(codec="adaptive:sign1-fp16",
+                                  downlink_codec="int8",
+                                  trace_replay=path, **BASE), **TOY)
+
+
+def test_adaptive_replay_detects_rung_drift_at_equal_bytes(tmp_path):
+    """qsgd:8 and int8 are byte-tied (1 B/param + 4 B/leaf) but decode
+    differently — rewriting the recorded rungs must trip the replay check
+    even though every byte vector still matches."""
+    path = str(tmp_path / "a.ndjson")
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:diurnal", trace_record=path,
+                    **BASE)
+    make_toy_runner(cfg, **TOY).run(STRATEGIES["fedavg"](), rounds=3)
+    lines = [json.loads(l) for l in open(path)]
+    drifted = False
+    for rec in lines[1:]:
+        for c in rec["clients"]:
+            if c["codec"] == "int8":
+                c["codec"] = "qsgd:8"
+                drifted = True
+    if not drifted:                                    # force one anyway
+        lines[1]["clients"][0]["codec"] = "qsgd:8"
+    with open(path, "w") as fh:
+        for rec in lines:
+            fh.write(json.dumps(rec) + "\n")
+    rep_cfg = FFTConfig(codec="adaptive:sign1-fp16", trace_replay=path,
+                        **BASE)
+    with pytest.raises(ValueError, match="rungs"):
+        make_toy_runner(rep_cfg, **TOY).run(STRATEGIES["fedavg"](), rounds=3)
+
+
+def test_v2_trace_still_loads_and_replays_as_static(tmp_path):
+    """A hand-written v2 trace (pre-adaptive schema) must load, expose no
+    per-client codecs, and replay bit-exactly under its recorded codec."""
+    from repro.fl.scenarios.trace import ReplayFailureModel
+    path = str(tmp_path / "v2.ndjson")
+    rows = [{"id": i, "capacity_bps": 8e6, "up": True, "duration_s": 1.5,
+             "t_download_s": 0.1, "t_compute_s": 0.4, "t_upload_s": 1.0,
+             "payload_bytes": 1e6, "selected": True, "met_deadline": True,
+             "connected": True, "cause": "ok"} for i in range(2)]
+    with open(path, "w") as fh:
+        fh.write(json.dumps({"record": "header", "version": 2,
+                             "scenario": "x", "n_clients": 2,
+                             "codec": "int8", "model_bytes": 4e6,
+                             "upload_bytes": 1e6, "deadline_s": 5.0}) + "\n")
+        fh.write(json.dumps({"record": "round", "round": 1,
+                             "deadline_s": 5.0, "duration_s": 1.5,
+                             "clients": rows}) + "\n")
+    m = ReplayFailureModel(path)
+    assert m.codec == "int8"
+    assert m.codecs(1) is None                         # static recording
+    assert m.download_bytes(1) is None                 # predates downlink
+    np.testing.assert_array_equal(m.draw(1), [True, True])
+    np.testing.assert_array_equal(m.payload_bytes(1), [1e6, 1e6])
+
+
+def test_adaptive_rejects_replay_of_v2_static_trace(tmp_path):
+    """Adaptive replay of a static recording must fail on the codec guard:
+    the recorded timings were priced at one static size."""
+    path = str(tmp_path / "s.ndjson")
+    cfg = FFTConfig(codec="int8", failure_mode="scenario:diurnal",
+                    trace_record=path, **BASE)
+    make_toy_runner(cfg, **TOY).run(STRATEGIES["fedavg"](), rounds=2)
+    with pytest.raises(ValueError, match="codec"):
+        make_toy_runner(FFTConfig(codec="adaptive:sign1-fp16",
+                                  trace_replay=path, **BASE), **TOY)

@@ -13,8 +13,11 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.weights_qp import (chi2_effective, project_simplex,  # noqa: E402
                                    solve_weights)
-from repro.fl.comm import make_codec  # noqa: E402
+from repro.fl.comm import (AdaptiveCommController, CommState,  # noqa: E402
+                           RUNG_LADDER, make_codec)
 from repro.fl.partition import partition  # noqa: E402
+from repro.fl.scenarios.engine import (DeadlineSimulator,  # noqa: E402
+                                       LinkState)
 from repro.fl.scenarios.trace import _num, _unnum  # noqa: E402
 from repro.kernels.dequant_agg import dequant_fedagg  # noqa: E402
 from repro.kernels.fedagg import fedagg  # noqa: E402
@@ -184,6 +187,66 @@ def test_lossy_codec_contraction_property(seed, spec, n):
     err = float(jnp.sum(jnp.square(dec - x["w"]))) ** 0.5
     norm = float(jnp.sum(jnp.square(x["w"]))) ** 0.5
     assert err < norm * (1.0 - 1e-6) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# per-round repricing (ISSUE 4): re-simulating the same link realization at
+# different payload bytes moves only the transfer timings, monotonically in
+# bytes — never the link draw itself
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000), st.integers(1, 10),
+       st.floats(0.01, 1.0), st.floats(1.0, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_repricing_is_monotone_in_bytes_and_preserves_links(seed, n, frac,
+                                                            scale):
+    rng = np.random.default_rng(seed)
+    sim = DeadlineSimulator(n, model_bytes=4e6, deadline_s=float(
+        rng.uniform(0.5, 20.0)), compute_s=float(rng.uniform(0.0, 3.0)),
+        seed=seed)
+    links = [LinkState(float(rng.uniform(0.05e6, 50e6 * scale)),
+                       up=bool(rng.uniform() > 0.3),
+                       cause="outage" if rng.uniform() > 0.5 else "ok")
+             for _ in range(n)]
+    big = sim.simulate_round(2, links)
+    sim.set_payload_bytes(upload_bytes=4e6 * frac, download_bytes=4e6 * frac)
+    small = sim.simulate_round(2, links)
+    for e_big, e_small in zip(big.events, small.events):
+        assert e_big.up == e_small.up
+        assert e_big.capacity_bps == e_small.capacity_bps
+        if not e_big.up:
+            assert e_big.cause == e_small.cause          # link draw frozen
+            continue
+        assert e_small.t_upload_s <= e_big.t_upload_s
+        assert e_small.t_download_s <= e_big.t_download_s
+        assert e_small.finish_s <= e_big.finish_s
+        assert e_small.t_compute_s == e_big.t_compute_s  # jitter keyed (seed, rnd)
+        # met_deadline monotone: fewer bytes can only add participants
+        assert e_small.met_deadline or not e_big.met_deadline
+
+
+# ---------------------------------------------------------------------------
+# adaptive controller (ISSUE 4): the rung policy is monotone in estimated
+# capacity and never assigns beyond the ladder ceiling (fp32)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000), st.integers(0, len(RUNG_LADDER) - 1),
+       st.integers(0, len(RUNG_LADDER) - 1))
+@settings(max_examples=30, deadline=None)
+def test_adaptive_ladder_monotone_property(seed, a, b):
+    lo, hi = RUNG_LADDER[min(a, b)], RUNG_LADDER[max(a, b)]
+    rng = np.random.default_rng(seed)
+    tmpl = {"w": jnp.zeros((int(rng.integers(10, 5000)),), jnp.float32)}
+    comm = CommState(make_codec("fp32"), tmpl,
+                     model_bytes_override=float(rng.uniform(1e5, 1e8)))
+    ctl = AdaptiveCommController(
+        4, comm, lo=lo, hi=hi, deadline_s=float(rng.uniform(0.5, 60.0)),
+        compute_s=float(rng.uniform(0.0, 3.0)))
+    caps = np.sort(rng.uniform(1e2, 1e13, 25))
+    idx = [ctl.rung_index_for(c) for c in caps]
+    assert idx == sorted(idx)                            # monotone in capacity
+    assert all(0 <= k < len(ctl.rungs) for k in idx)
+    assert ctl.rungs[-1] == hi                           # ceiling respected
+    assert (np.diff(ctl.rung_bytes) >= 0).all()          # ladder byte order
+    assert ctl.rung_bytes[-1] <= comm.nbytes_for("fp32") + 1e-9
 
 
 # ---------------------------------------------------------------------------

@@ -59,7 +59,9 @@ def test_engine_server_wait_respects_selection():
     assert ev.duration_s == 30.0                 # full cohort: straggler
     sel = np.array([True, False])
     assert ev.server_wait(sel) == ev.events[0].finish_s
-    assert ev.server_wait(np.array([False, False])) == 0.0
+    # an empty cohort still waits out the round timeout — a server whose
+    # selection came up empty does not advance its clock for free
+    assert ev.server_wait(np.array([False, False])) == 30.0
 
 
 def test_engine_round_duration_bounded_by_deadline():
@@ -166,7 +168,7 @@ def test_trace_ndjson_schema(tmp_path):
             rec.write_round(r, sel, sel & ev.connected_mask(), ev)
 
     lines = [json.loads(l) for l in open(path)]
-    assert lines[0]["record"] == "header" and lines[0]["version"] == 2
+    assert lines[0]["record"] == "header" and lines[0]["version"] == 3
     assert lines[0]["n_clients"] == 6
     assert len(lines) == 6
     for rec_ in lines[1:]:
