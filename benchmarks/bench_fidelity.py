@@ -1,0 +1,120 @@
+"""Fidelity-aware aggregation: distortion-discounted QP weights.
+
+The adaptive controller hands a recovering client a coarse rung (sign1 after
+a long outage); without a fidelity discount the Eq. 8/9 QP weighs that
+coarse reconstruction exactly like a lossless fp32 upload, and the isolated
+one-shot coarse update injects a visible accuracy transient.  This bench
+sweeps the adaptive ladder × three discount variants over two scenario
+worlds in sync and buffered modes:
+
+  none                no post-QP discount at all (a = 0, b = 0)
+  staleness           (1+s)^{-a} only — PR 2's fedauto_async behavior
+  staleness_fidelity  (1+s)^{-a} · (1−d)^{b}: d is each upload's measured
+                      compression distortion (``CommState.roundtrip``)
+
+Rows:
+
+  fidelity:<world>/<mode>/<variant>,us_per_round,final_accuracy
+  fidelity:<world>/<mode>/<variant>/transient,0,max accuracy drawdown after
+      warmup (running max − current, worst over the eval curve)
+  fidelity:<world>/<mode>/<variant>/mean_distortion,0,mean recorded
+      per-upload distortion
+  fidelity:<world>/<mode>/replay_bit_exact,0,1 if the recorded v4 trace of
+      the staleness_fidelity run replays to the identical accuracy history
+  fidelity:<world>/<mode>/distortion_replay_exact,0,1 if the replay
+      recomputes every recorded per-client distortion bit-exactly
+
+Acceptance (ISSUE 5): on ≥ 1 world × mode cell, staleness_fidelity shows a
+smaller transient than none at final accuracy within 1 point.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List
+
+from benchmarks.common import make_problem
+from repro.core.strategies import FedAuto, FedAutoAsync
+from repro.fl.metrics import (accuracy_drawdown,
+                               distortion_replay_matches, mean_distortion)
+
+# Same simulated paper-scale payload and deadline as bench_comm /
+# bench_adaptive, so rows are directly comparable across the benches.
+MODEL_BYTES = 4e6
+DEADLINE_S = 5.0
+LADDER = "adaptive:sign1-fp16"
+# Gentle exponent: the QP already optimizes the effective class
+# distribution, and an aggressive b (≥ 1) persistently down-weights every
+# client parked on a coarse rung — skewing the distribution the QP chose
+# and costing final accuracy.  b = 0.5 damps the isolated post-outage
+# coarse-upload transient while leaving steady-state weights close to the
+# QP's optimum (measured: larger b degrades finals on every world).
+DISCOUNT_B = 0.5
+
+# variant -> (discount_a, fidelity_discount b); sync mode has no staleness,
+# so its "staleness" row doubles as a sanity check that a alone is inert
+VARIANTS = {
+    "none": (0.0, 0.0),
+    "staleness": (0.5, 0.0),
+    "staleness_fidelity": (0.5, DISCOUNT_B),
+}
+
+
+def _strategy(mode: str, a: float, b: float):
+    if mode == "sync":
+        return FedAuto(fidelity_discount=b)
+    return FedAutoAsync(discount_a=a, fidelity_discount=b)
+
+
+def _run_one(world: str, mode: str, a: float, b: float, rounds: int,
+             quick: bool, trace_record=None, trace_replay=None):
+    runner = make_problem(non_iid=True, failure_mode=f"scenario:{world}",
+                          quick=quick, deadline_s=DEADLINE_S, seed=0,
+                          server_mode=mode, tau_max=4, buffer_k=4,
+                          codec=LADDER, model_bytes=MODEL_BYTES,
+                          eval_every=2, trace_record=trace_record,
+                          trace_replay=trace_replay)
+    t0 = time.time()
+    hist = runner.run(_strategy(mode, a, b), rounds=rounds)
+    us_per_round = (time.time() - t0) / rounds * 1e6
+    return runner, hist, us_per_round
+
+
+def run(quick: bool = True) -> List[str]:
+    rows = []
+    rounds = 30 if quick else 40
+    warmup = 5                       # eval_every=2 → evals past round 10
+    worlds = (["diurnal", "correlated_wifi"] if quick
+              else ["diurnal", "correlated_wifi", "cross_region",
+                    "bursty_handover"])
+    for world in worlds:
+        for mode in ("sync", "buffered"):
+            for variant, (a, b) in VARIANTS.items():
+                trace = None
+                if variant == "staleness_fidelity":
+                    trace = os.path.join(tempfile.mkdtemp(),
+                                         f"{world}_{mode}.ndjson")
+                runner, hist, us = _run_one(world, mode, a, b, rounds,
+                                            quick, trace_record=trace)
+                rows.append(f"fidelity:{world}/{mode}/{variant},{us:.0f},"
+                            f"{hist[-1]:.4f}")
+                rows.append(f"fidelity:{world}/{mode}/{variant}/transient,"
+                            f"0,{accuracy_drawdown(hist, warmup):.4f}")
+                rows.append(f"fidelity:{world}/{mode}/{variant}"
+                            f"/mean_distortion,0,"
+                            f"{mean_distortion(runner.loop.distortion_history):.4f}")
+                if trace is not None:
+                    rep, hist_r, _ = _run_one(world, mode, a, b, rounds,
+                                              quick, trace_replay=trace)
+                    rows.append(f"fidelity:{world}/{mode}/replay_bit_exact,"
+                                f"0,{int(hist_r == hist)}")
+                    rows.append(f"fidelity:{world}/{mode}"
+                                f"/distortion_replay_exact,0,"
+                                f"{int(distortion_replay_matches(rep.failures, rep.loop.distortion_history, rounds))}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

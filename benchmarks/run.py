@@ -15,10 +15,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_adaptive, bench_aggregation, bench_async,
-                            bench_comm, bench_convergence, bench_kernels,
-                            bench_resourceopt, bench_scenarios, bench_table1,
-                            bench_table2, bench_table3, bench_table4,
-                            bench_table5, roofline)
+                            bench_comm, bench_convergence, bench_fidelity,
+                            bench_kernels, bench_resourceopt,
+                            bench_scenarios, bench_table1, bench_table2,
+                            bench_table3, bench_table4, bench_table5,
+                            roofline)
     benches = {
         "kernels": bench_kernels,
         "aggregation": bench_aggregation,
@@ -33,6 +34,7 @@ def main() -> None:
         "async": bench_async,
         "comm": bench_comm,
         "adaptive": bench_adaptive,
+        "fidelity": bench_fidelity,
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else None

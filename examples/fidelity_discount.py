@@ -1,0 +1,71 @@
+"""Fidelity-aware aggregation: distortion-discounted QP weights.
+
+Every upload that travels through a lossy codec arrives distorted —
+``CommState.roundtrip`` measures exactly how much (‖carry − decoded‖ /
+‖carry‖, essentially free since both pytrees are in hand) — yet the plain
+Eq. 8/9 QP weighs a sign1-coarse reconstruction like a lossless fp32 one.
+``fidelity_discount_b`` (or the strategies' ``fidelity_discount`` knob)
+multiplies each post-QP β by ``(1 − d)^b`` and redistributes the free mass
+on the simplex with the Eq. 9 server pin intact, so a recovering client's
+isolated coarse upload counts for what it actually carries.
+
+    PYTHONPATH=src python examples/fidelity_discount.py
+    PYTHONPATH=src python examples/fidelity_discount.py --world correlated_wifi
+    PYTHONPATH=src python examples/fidelity_discount.py --b 4.0 --codec sign1
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.core.strategies import STRATEGIES
+from repro.fl.metrics import accuracy_drawdown, mean_distortion
+from repro.fl.runtime import FFTConfig
+from repro.fl.toy import make_toy_runner
+
+
+def run_once(cfg: FFTConfig, rounds: int):
+    runner = make_toy_runner(cfg, n_samples=900, public_per_class=10,
+                             pretrain_steps=15)
+    hist = runner.run(STRATEGIES["fedauto"](), rounds=rounds)
+    return {"acc": hist[-1], "hist": hist,
+            "drawdown": accuracy_drawdown(hist),
+            "mean_distortion": mean_distortion(
+                runner.loop.distortion_history)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--codec", default="adaptive:sign1-fp16",
+                    help="upload codec (a lossy or adaptive spec distorts)")
+    ap.add_argument("--b", type=float, default=0.5,
+                    help="fidelity discount exponent (0 disables; keep it "
+                         "gentle — large b skews the effective class "
+                         "distribution the QP optimized)")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--world", default="diurnal")
+    args = ap.parse_args()
+
+    base = FFTConfig(n_clients=8, k_selected=8, local_steps=3, batch_size=16,
+                     lr=0.05, seed=0, eval_every=2,
+                     failure_mode=f"scenario:{args.world}",
+                     deadline_s=5.0, model_bytes=4e6, codec=args.codec)
+
+    print(f"world={args.world} codec={args.codec} rounds={args.rounds}\n")
+    results = {}
+    for b in (0.0, args.b):
+        results[b] = run_once(
+            dataclasses.replace(base, fidelity_discount_b=b), args.rounds)
+        r = results[b]
+        print(f"  fidelity_discount_b={b:>4}: final acc {r['acc']:.4f}  "
+              f"max drawdown {r['drawdown']:.4f}  "
+              f"mean upload distortion {r['mean_distortion']:.3f}")
+
+    off, on = results[0.0], results[args.b]
+    print(f"\n(1-d)^{args.b:g} discounting moved the worst transient "
+          f"{off['drawdown']:.4f} -> {on['drawdown']:.4f} at final acc "
+          f"{off['acc']:.4f} -> {on['acc']:.4f}.")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,8 @@ from repro.core.aggregation import (  # noqa: F401
     aggregate_pytrees,
     chi2,
     effective_distribution,
+    fedauto_async_weights,
+    fedauto_discounted_weights,
     fedauto_weights,
     missing_classes,
 )

@@ -68,25 +68,38 @@ def fedauto_weights(alpha_rows: np.ndarray, alpha_g: np.ndarray,
     return np.asarray(beta)
 
 
-def fedauto_async_weights(alpha_rows: np.ndarray, alpha_g: np.ndarray,
-                          staleness: np.ndarray, server_row: int,
-                          discount_a: float = 0.5) -> np.ndarray:
-    """FedAuto-Async (staleness-aware Eq. 8 + Eq. 9 pin).
+def fedauto_discounted_weights(alpha_rows: np.ndarray, alpha_g: np.ndarray,
+                               staleness: np.ndarray,
+                               distortion: np.ndarray, server_row: int,
+                               discount_a: float = 0.5,
+                               discount_b: float = 0.0) -> np.ndarray:
+    """One post-QP discount pipeline: staleness × compression fidelity.
 
     ``staleness[j]`` is the age in rounds of participant j's update (0 =
     computed from the current global model; the server row is always 0).
+    ``distortion[j]`` is the upload's normalized compression distortion
+    ``‖carry − decoded‖ / ‖carry‖`` measured by ``CommState.roundtrip``
+    (0 = lossless; clipped into [0, 1]; the server row is always 0).
+
     The QP is solved exactly as in the synchronous case — Eq. 9 pin
     ``β_s = 1/(1+m)`` included — then each non-server weight is discounted
-    by ``(1 + s_j)^{-discount_a}`` and the free mass ``1 − β_s`` is
-    redistributed, so the result stays on the simplex with the pin intact
-    and reduces to ``fedauto_weights`` when every update is fresh.
+    by ``(1 + s_j)^{-discount_a} · (1 − d_j)^{discount_b}`` and the free
+    mass ``1 − β_s`` is redistributed, so the result stays on the simplex
+    with the pin intact.  Reductions are bit-exact: with every update fresh
+    and every discount inactive this *is* ``fedauto_weights``; with zero
+    distortion (or ``discount_b = 0``) it *is* ``fedauto_async_weights``.
     """
     staleness = np.asarray(staleness, dtype=float)
+    distortion = np.clip(np.asarray(distortion, dtype=float), 0.0, 1.0)
     active = np.ones(len(alpha_rows), dtype=bool)
     beta = fedauto_weights(alpha_rows, alpha_g, active, server_row)
-    if not np.any(staleness > 0):
-        return beta                  # fresh cohort: exactly the sync solution
+    stale_on = bool(np.any(staleness > 0))
+    fid_on = discount_b > 0 and bool(np.any(distortion > 0))
+    if not stale_on and not fid_on:
+        return beta          # fresh + lossless: exactly the sync solution
     disc = np.power(1.0 + np.maximum(staleness, 0.0), -discount_a)
+    if fid_on:
+        disc = disc * np.power(1.0 - distortion, discount_b)
     disc[server_row] = 1.0
     free = beta * disc
     free[server_row] = 0.0
@@ -97,10 +110,21 @@ def fedauto_async_weights(alpha_rows: np.ndarray, alpha_g: np.ndarray,
     if tot > 1e-12:
         out += free * (mass / tot)
     else:
-        # every client weight vanished (all maximally stale): the server
-        # keeps the whole budget, as with an empty round
+        # every client weight vanished (all maximally stale/distorted): the
+        # server keeps the whole budget, as with an empty round
         out[server_row] = 1.0
     return out
+
+
+def fedauto_async_weights(alpha_rows: np.ndarray, alpha_g: np.ndarray,
+                          staleness: np.ndarray, server_row: int,
+                          discount_a: float = 0.5) -> np.ndarray:
+    """FedAuto-Async (staleness-aware Eq. 8 + Eq. 9 pin): the lossless
+    special case of ``fedauto_discounted_weights``."""
+    return fedauto_discounted_weights(
+        alpha_rows, alpha_g, staleness,
+        np.zeros(len(alpha_rows)), server_row,
+        discount_a=discount_a, discount_b=0.0)
 
 
 def fedauto_simple_average_weights(active: np.ndarray, server_row: int,

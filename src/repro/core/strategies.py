@@ -20,9 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import (aggregate_pytrees, delta_pytree,
-                                    fedauto_async_weights,
+                                    fedauto_discounted_weights,
                                     fedauto_simple_average_weights,
-                                    fedauto_weights, missing_classes)
+                                    missing_classes)
 from repro.core.weights_qp import heuristic_weights
 
 
@@ -41,8 +41,16 @@ class RoundContext:
     full_participation: bool
     eps_estimates: Optional[np.ndarray] = None   # TF-Aggregation inputs
     runner: Any = None                    # back-reference (compensatory training)
-    codec: Optional[str] = None           # wire codec of the client uploads
+    codec: Optional[str] = None           # decodable wire codec shared by all
+    #                                       uploads (None for adaptive runs,
+    #                                       whose rungs live in ``codecs``)
     upload_nbytes: Optional[float] = None  # bytes-on-wire per client upload
+    #                                       (None for adaptive runs)
+    # per-client wire metadata of this round's *actual* uploads, keyed by
+    # client id (participants only):
+    codecs: Optional[Dict[int, str]] = None        # rung each upload used
+    upload_bytes: Optional[Dict[int, float]] = None  # bytes each upload cost
+    distortions: Optional[Dict[int, float]] = None   # ‖carry−dec‖/‖carry‖
 
 
 class Strategy:
@@ -205,6 +213,12 @@ class TFAggregation(Strategy):
         self.eps_threshold = eps_threshold
         self.s: Optional[np.ndarray] = None
 
+    def init_state(self, runner) -> None:
+        # ``s`` is cached lazily from the first round's eps_estimates; a
+        # reused strategy instance must not carry the previous run's (or the
+        # previous world's) selection probabilities into the next run.
+        self.s = None
+
     def selection_probs(self, ctx: RoundContext) -> np.ndarray:
         eps = np.clip(ctx.eps_estimates, 0.0, 0.999)
         p = ctx.p[1:]
@@ -279,15 +293,32 @@ class FedExLoRA(Strategy):
         return avg
 
 
+def _resolve_fidelity_discount(explicit: Optional[float], ctx) -> float:
+    """Strategy knob wins; else ``FFTConfig.fidelity_discount_b``; else 0."""
+    if explicit is not None:
+        return float(explicit)
+    cfg = getattr(getattr(ctx, "runner", None), "cfg", None)
+    if cfg is None:
+        return 0.0
+    return float(getattr(cfg, "fidelity_discount_b", 0.0))
+
+
 class FedAuto(Strategy):
     """The paper's method (Algorithm 2): Module 1 compensatory training
     (Eq. 6–7) + Module 2 weight optimization (Eq. 8) with the server pin
-    (Eq. 9). ``use_module1``/``use_module2`` expose the Table-5 ablations."""
+    (Eq. 9). ``use_module1``/``use_module2`` expose the Table-5 ablations.
+    ``fidelity_discount`` (exponent b; None defers to
+    ``FFTConfig.fidelity_discount_b``) discounts each upload's post-QP β by
+    ``(1 − d)^b`` where d is its measured compression distortion, so a
+    sign1-coarse reconstruction no longer weighs like a lossless fp32 one;
+    at b = 0 (the default) this is bit-exact with the undiscounted QP."""
     name = "fedauto"
 
-    def __init__(self, use_module1: bool = True, use_module2: bool = True):
+    def __init__(self, use_module1: bool = True, use_module2: bool = True,
+                 fidelity_discount: Optional[float] = None):
         self.use_module1 = use_module1
         self.use_module2 = use_module2
+        self.fidelity_discount = fidelity_discount
 
     def aggregate(self, ctx: RoundContext):
         runner = ctx.runner
@@ -303,18 +334,26 @@ class FedAuto(Strategy):
 
         rows = [dist(ctx.server_hist.astype(float))]
         models = [ctx.server_model]
+        distortion = [0.0]                    # server row: no wire, no loss
         if comp_model is not None:
             rows.append(dist(comp_hist.astype(float)))
             models.append(comp_model)
+            distortion.append(0.0)
         ids = [i for i in range(N) if ctx.connected[i]]
+        dmap = ctx.distortions or {}
         for i in ids:
             rows.append(dist(ctx.client_hists[i].astype(float)))
             models.append(ctx.client_models[i])
+            distortion.append(float(dmap.get(i, 0.0)))
         alpha_rows = np.stack(rows)
         alpha_g = dist(ctx.global_hist.astype(float))
         active = np.ones(len(rows), dtype=bool)
         if self.use_module2:
-            beta = fedauto_weights(alpha_rows, alpha_g, active, server_row=0)
+            beta = fedauto_discounted_weights(
+                alpha_rows, alpha_g, np.zeros(len(rows)),
+                np.asarray(distortion), server_row=0,
+                discount_b=_resolve_fidelity_discount(self.fidelity_discount,
+                                                      ctx))
         else:
             beta = fedauto_simple_average_weights(active, 0, comp_model is not None)
         return aggregate_pytrees(models, beta)
@@ -332,6 +371,9 @@ class Arrival:
     arrival_s: float                      # absolute simulated landing time
     model: Any                            # w_i^{origin,E}
     delta: Any = None                     # w_i^{origin,E} − w̄^{origin}
+    codec: Optional[str] = None           # rung this upload traveled under
+    upload_nbytes: Optional[float] = None  # bytes this upload cost on-wire
+    distortion: float = 0.0               # ‖carry−decoded‖/‖carry‖ at encode
 
 
 @dataclasses.dataclass
@@ -347,8 +389,15 @@ class AsyncRoundContext:
     server_hist: np.ndarray
     global_hist: np.ndarray
     runner: Any = None
-    codec: Optional[str] = None           # wire codec of the client uploads
+    codec: Optional[str] = None           # decodable wire codec shared by all
+    #                                       uploads (None for adaptive runs)
     upload_nbytes: Optional[float] = None  # bytes-on-wire per client upload
+    #                                       (None for adaptive runs)
+    # per-client wire metadata of the aggregated arrivals, keyed by client id
+    # (latest arrival per client; per-arrival values live on each Arrival):
+    codecs: Optional[Dict[int, str]] = None
+    upload_bytes: Optional[Dict[int, float]] = None
+    distortions: Optional[Dict[int, float]] = None
 
 
 class AsyncStrategy(Strategy):
@@ -365,9 +414,14 @@ class AsyncStrategy(Strategy):
         raise NotImplementedError
 
     def aggregate(self, ctx: RoundContext):
+        codecs = ctx.codecs or {}
+        nbytes = ctx.upload_bytes or {}
+        dists = ctx.distortions or {}
         arrivals = [Arrival(client=i, origin_round=ctx.rnd, staleness=0,
                             arrival_s=float(ctx.rnd), model=m,
-                            delta=delta_pytree(m, ctx.global_params))
+                            delta=delta_pytree(m, ctx.global_params),
+                            codec=codecs.get(i), upload_nbytes=nbytes.get(i),
+                            distortion=float(dists.get(i, 0.0)))
                     for i, m in sorted(ctx.client_models.items())]
         actx = AsyncRoundContext(
             rnd=ctx.rnd, now_s=float(ctx.rnd),
@@ -375,7 +429,8 @@ class AsyncStrategy(Strategy):
             arrivals=arrivals, p=ctx.p, client_hists=ctx.client_hists,
             server_hist=ctx.server_hist, global_hist=ctx.global_hist,
             runner=ctx.runner, codec=ctx.codec,
-            upload_nbytes=ctx.upload_nbytes)
+            upload_nbytes=ctx.upload_nbytes, codecs=ctx.codecs,
+            upload_bytes=ctx.upload_bytes, distortions=ctx.distortions)
         return self.aggregate_async(actx)
 
 
@@ -456,13 +511,17 @@ class FedAutoAsync(AsyncStrategy):
     """FedAuto under staleness: Module 1 compensatory training over the
     classes the *arrived* cohort misses, then Module 2's QP (Eq. 8 with the
     Eq. 9 server pin) on the arrivals' α-rows with each β discounted by
-    (1+s)^{-a} (``fedauto_async_weights``).  With every arrival fresh this
-    is exactly FedAuto."""
+    (1+s)^{-a} · (1−d)^{b} (``fedauto_discounted_weights``): staleness ×
+    the upload's measured compression distortion.  With every arrival fresh
+    and ``fidelity_discount`` at 0 (or every upload lossless) this is
+    exactly FedAuto."""
     name = "fedauto_async"
 
-    def __init__(self, use_module1: bool = True, discount_a: float = 0.5):
+    def __init__(self, use_module1: bool = True, discount_a: float = 0.5,
+                 fidelity_discount: Optional[float] = None):
         self.use_module1 = use_module1
         self.discount_a = discount_a
+        self.fidelity_discount = fidelity_discount
 
     def aggregate_async(self, ctx: AsyncRoundContext):
         runner = ctx.runner
@@ -482,10 +541,12 @@ class FedAutoAsync(AsyncStrategy):
         rows = [dist(ctx.server_hist.astype(float))]
         models = [ctx.server_model]
         staleness = [0]
+        distortion = [0.0]
         if comp_model is not None:
             rows.append(dist(comp_hist.astype(float)))
             models.append(comp_model)
             staleness.append(0)
+            distortion.append(0.0)
         # client-index order (not landing order): the QP is a batch solve, and
         # this makes the fresh-cohort case bit-identical to synchronous FedAuto
         for arr in sorted(ctx.arrivals, key=lambda a: (a.client,
@@ -493,11 +554,15 @@ class FedAutoAsync(AsyncStrategy):
             rows.append(dist(ctx.client_hists[arr.client].astype(float)))
             models.append(arr.model)
             staleness.append(arr.staleness)
+            distortion.append(float(arr.distortion))
         alpha_rows = np.stack(rows)
         alpha_g = dist(ctx.global_hist.astype(float))
-        beta = fedauto_async_weights(alpha_rows, alpha_g,
-                                     np.asarray(staleness), server_row=0,
-                                     discount_a=self.discount_a)
+        beta = fedauto_discounted_weights(
+            alpha_rows, alpha_g, np.asarray(staleness),
+            np.asarray(distortion), server_row=0,
+            discount_a=self.discount_a,
+            discount_b=_resolve_fidelity_discount(self.fidelity_discount,
+                                                  ctx))
         return aggregate_pytrees(models, beta)
 
 

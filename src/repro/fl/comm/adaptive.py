@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -90,11 +90,18 @@ def ladder_between(lo: str, hi: str) -> Tuple[str, ...]:
 
 @dataclasses.dataclass
 class RoundAssignment:
-    """One round's per-client codec decision (what the v3 trace records)."""
+    """One round's per-client codec decision (what the v3+ trace records).
+
+    ``codecs``/``upload_bytes`` cover all N clients (the policy is a
+    deterministic function of the estimates, and the simulator prices every
+    link), but only the entries where ``selected`` is True describe rungs
+    the server actually handed out — histograms and trace rows mask by it.
+    """
     rnd: int
     codecs: List[str]            # per-client rung name
     upload_bytes: np.ndarray     # (N,) simulated uplink wire bytes
     download_bytes: float        # broadcast bytes each client receives
+    selected: Optional[np.ndarray] = None  # (N,) bool; None = all selected
 
 
 class AdaptiveCommController:
@@ -160,13 +167,26 @@ class AdaptiveCommController:
     def rung_for(self, cap_bps: float) -> str:
         return self.rungs[self.rung_index_for(cap_bps)]
 
-    def assign(self, rnd: int) -> RoundAssignment:
+    def assign(self, rnd: int, selected: Optional[np.ndarray] = None,
+               download_bytes: Optional[float] = None) -> RoundAssignment:
+        """Assign this round's rungs.  ``selected`` masks the clients the
+        server actually contacts this round: assignments are still computed
+        for everyone (the policy is deterministic and the simulator prices
+        every link), but stats and trace rows only count selected clients —
+        a rung the server never handed out is not an assignment.
+        ``download_bytes`` overrides the steady-state broadcast size for
+        this round (the round-1 full-model enrollment transfer) so
+        ``observe`` later divides the wire bits that actually traveled by
+        the observed time."""
         idx = [self.rung_index_for(c) for c in self.cap_hat]
         a = RoundAssignment(
             rnd=rnd,
             codecs=[self.rungs[k] for k in idx],
             upload_bytes=self.rung_bytes[idx].copy(),
-            download_bytes=self.download_bytes)
+            download_bytes=(self.download_bytes if download_bytes is None
+                            else float(download_bytes)),
+            selected=(None if selected is None
+                      else np.asarray(selected, dtype=bool).copy()))
         self.assignments[rnd] = a
         return a
 
@@ -201,9 +221,12 @@ class AdaptiveCommController:
 
     # ------------------------------------------------------------- stats
     def rung_histogram(self) -> Dict[str, int]:
-        """Total per-rung assignment counts across all rounds so far."""
+        """Total per-rung assignment counts across all rounds so far —
+        *selected* clients only: a rung computed for a client the server
+        never contacted that round is policy state, not an assignment."""
         hist = {name: 0 for name in self.rungs}
         for a in self.assignments.values():
-            for name in a.codecs:
-                hist[name] += 1
+            for i, name in enumerate(a.codecs):
+                if a.selected is None or a.selected[i]:
+                    hist[name] += 1
         return hist

@@ -55,6 +55,12 @@ def fp32_nbytes(template) -> int:
     return sum(4 * l.size for l in jax.tree.leaves(template))
 
 
+def _l2(tree) -> float:
+    """Global L2 norm across all leaves of a pytree (fp32 accumulate)."""
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                              for l in jax.tree.leaves(tree))))
+
+
 class CommState:
     """Codec + per-client error-feedback residuals for one runner."""
 
@@ -90,6 +96,10 @@ class CommState:
         self.total_uplink_bytes = 0.0          # cumulative, all clients
         self.total_downlink_bytes = 0.0        # cumulative broadcast bytes
         self.n_encoded = 0
+        # last measured normalized compression distortion per client
+        # (‖carry − decoded‖/‖carry‖ of the most recent roundtrip; exactly
+        # 0.0 for lossless uploads)
+        self.last_distortions: Dict[int, float] = {}
 
     # -------------------------------------------------------------- sizing
     def codec_named(self, name: str) -> Codec:
@@ -124,18 +134,23 @@ class CommState:
         self.total_uplink_bytes = 0.0
         self.total_downlink_bytes = 0.0
         self.n_encoded = 0
+        self.last_distortions.clear()
 
     def residual(self, client: int):
         return self._residuals.get(client)
 
     def roundtrip(self, client: int, model, global_params, *,
-                  codec: Optional[Codec] = None) -> Tuple[Any, Payload]:
+                  codec: Optional[Codec] = None) -> Tuple[Any, Payload, float]:
         """Client-encode then server-decode one upload.
 
-        Returns ``(reconstructed_model, payload)`` where the reconstruction
-        has ``model``'s dtypes and the payload carries the exact wire bytes.
-        Mutates the client's error-feedback residual.  ``codec`` overrides
-        the run's static codec for this one upload (the adaptive
+        Returns ``(reconstructed_model, payload, distortion)`` where the
+        reconstruction has ``model``'s dtypes, the payload carries the exact
+        wire bytes, and ``distortion`` is the upload's normalized
+        compression distortion ``‖carry − decoded‖/‖carry‖`` (essentially
+        free to measure — both pytrees are already in hand; exactly 0.0 for
+        lossless uploads).  Mutates the client's error-feedback residual and
+        records the distortion in ``last_distortions[client]``.  ``codec``
+        overrides the run's static codec for this one upload (the adaptive
         controller's per-client rung); the residual carries across rung
         changes unchanged — EF is codec-agnostic.
         """
@@ -144,6 +159,7 @@ class CommState:
             lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32),
             model, global_params)
         resid = self._residuals.get(client)
+        distortion = 0.0
         if codec.lossless and resid is None:
             payload = codec.encode(delta)
             decoded = codec.decode(payload)
@@ -156,8 +172,11 @@ class CommState:
                 # the wire carried the full corrected delta: residual flushed
                 self._residuals.pop(client, None)
             else:
-                self._residuals[client] = jax.tree.map(jnp.subtract, carry,
-                                                       decoded)
+                new_resid = jax.tree.map(jnp.subtract, carry, decoded)
+                self._residuals[client] = new_resid
+                carry_norm = _l2(carry)
+                if carry_norm > 0.0:
+                    distortion = _l2(new_resid) / carry_norm
         recon = jax.tree.map(
             lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
             global_params, decoded)
@@ -165,9 +184,21 @@ class CommState:
         # the deadline simulator, traces, and total_downlink_bytes use
         self.total_uplink_bytes += self.nbytes_for(codec)
         self.n_encoded += 1
-        return recon, payload
+        self.last_distortions[client] = distortion
+        return recon, payload, distortion
 
     # ----------------------------------------------------------- downlink
+    def next_broadcast_nbytes(self) -> float:
+        """Wire bytes the *next* ``broadcast`` call will charge: the full
+        ``ref_bytes`` enrollment transfer for a downlink codec's first
+        broadcast, the steady-state ``download_bytes`` otherwise.  The round
+        loops query this before the network draw so the deadline simulator,
+        the trace, and ``total_downlink_bytes`` all price the same round in
+        the same unit."""
+        if self.downlink_codec is not None and self._dl_ref is None:
+            return float(self.ref_bytes)
+        return float(self.download_bytes)
+
     def broadcast(self, global_params) -> Tuple[Any, float]:
         """Server-encode the round's broadcast; returns ``(params clients
         start from, simulated broadcast bytes)``.
@@ -177,8 +208,11 @@ class CommState:
         decoded replica (plus its error-feedback residual) and the replica
         advances by the decoded delta — every client then trains from the
         replica, never from state it could not have received.  The first
-        broadcast initializes the replica to the current global (the model
-        clients hold from enrollment).
+        broadcast initializes the replica to the current global — that
+        enrollment transfer ships the *full* model, so it is charged at
+        ``ref_bytes`` (the uncompressed fp32 reference), not the compressed
+        per-round rate: a 100×-compressed downlink run must still account
+        for how clients got the model in the first place.
         """
         if self.downlink_codec is None:
             self.total_downlink_bytes += self.download_bytes
@@ -187,6 +221,7 @@ class CommState:
         if self._dl_ref is None:
             self._dl_ref = jax.tree.map(
                 lambda g: g.astype(jnp.float32), global_params)
+            nbytes = self.ref_bytes          # enrollment: full-model transfer
         else:
             delta = jax.tree.map(
                 lambda g, ref: g.astype(jnp.float32) - ref,

@@ -70,6 +70,14 @@ class FFTConfig:
     #                                       static runs, the hi rung for
     #                                       adaptive ones ("fp32" forces the
     #                                       uncompressed broadcast)
+    fidelity_discount_b: float = 0.0      # exponent b of the (1−d)^b post-QP
+    #                                       fidelity discount applied by the
+    #                                       fedauto/fedauto_async strategies
+    #                                       to each upload's measured
+    #                                       compression distortion d (0 = no
+    #                                       discount, today's behavior; a
+    #                                       strategy's own fidelity_discount
+    #                                       knob overrides this)
 
 
 class FFTRunner:
@@ -394,7 +402,17 @@ class FFTRunner:
             from repro.fl.scenarios.trace import TraceRecorder
             # resolved mode: a replayed run's re-recording must name the
             # replay source, not the scenario the config nominally asked for
+            version_override = {}
+            if self.cfg.trace_replay and self.adaptive_spec:
+                src_v = int(self.failures.header.get("version", 0) or 0)
+                if 0 < src_v < 4:
+                    # a legacy replay re-derives its controller trajectory
+                    # under the pre-v4 enrollment pricing; stamp the
+                    # re-recording with the source version so future replays
+                    # apply the same shim instead of tripping the drift check
+                    version_override = {"version": src_v}
             tracer = TraceRecorder(self.cfg.trace_record, {
+                **version_override,
                 "scenario": self.failure_mode_resolved,
                 "n_clients": self.n_clients,
                 "deadline_s": self.cfg.deadline_s,

@@ -41,6 +41,19 @@ that client was assigned.  An adaptive header carries the controller spec
 upload size; the per-round byte vectors are authoritative and the round
 loop cross-checks the replaying controller against them).  Version-2 traces
 still load as static-codec recordings with the fp32 broadcast.
+
+Version 4 (fidelity-aware aggregation) adds per-client ``distortion`` — the
+upload's measured normalized compression distortion (``‖carry −
+decoded‖/‖carry‖`` from ``CommState.roundtrip``; null for clients that
+uploaded nothing that round) — and restricts the per-round ``codec`` rung
+to *selected* clients (a rung the server never handed out is policy state,
+not an assignment; unselected rows carry no codec).  Distortion depends on
+the model trajectory, not just the network realization, so replaying a
+trace under a *different strategy* legitimately reproduces different
+distortions — the replay machinery therefore exposes the recorded values
+(``ReplayFailureModel.distortions``) for cross-checks instead of failing
+loudly in the loop; same-configuration replays can (and the fidelity bench
+does) assert they match bit-exactly.  Version-3 traces still load.
 """
 from __future__ import annotations
 
@@ -54,8 +67,8 @@ from repro.fl.failures import FailureModel
 from repro.fl.scenarios.engine import (CAUSE_OK, ClientRoundEvent,
                                        RoundEvents)
 
-TRACE_VERSION = 3
-SUPPORTED_TRACE_VERSIONS = (1, 2, 3)
+TRACE_VERSION = 4
+SUPPORTED_TRACE_VERSIONS = (1, 2, 3, 4)
 
 
 def _num(x) -> object:
@@ -104,16 +117,20 @@ class TraceRecorder:
                     up: Optional[np.ndarray] = None,
                     met_deadline: Optional[np.ndarray] = None,
                     payload_bytes=None, download_bytes=None,
-                    codecs=None) -> None:
+                    codecs=None, distortions=None) -> None:
         """``up``/``met_deadline`` carry the failure draw for legacy models
         (no ``events``); without them replay would fabricate connectivity
         for clients that were down but unselected.  ``payload_bytes`` /
         ``download_bytes`` are scalars or (N,) arrays of this round's
         per-client wire sizes in each direction, recorded per client row;
         ``codecs`` is the per-client rung list of an adaptive round (None
-        for static runs, whose codec lives in the header)."""
+        for static runs, whose codec lives in the header; per-entry None
+        for clients the server did not select that round); ``distortions``
+        maps client id → measured compression distortion of that round's
+        upload (clients that uploaded nothing carry null)."""
         clients = []
         n = len(selected)
+        distortions = distortions or {}
         if payload_bytes is not None:
             payload_bytes = np.broadcast_to(
                 np.asarray(payload_bytes, float), (n,))
@@ -148,8 +165,10 @@ class TraceRecorder:
                        "cause": CAUSE_OK if up_i and met_i else "outage"}
             if db is not None:
                 row["download_bytes"] = db
-            if codecs is not None:
+            if codecs is not None and codecs[i] is not None:
                 row["codec"] = str(codecs[i])
+            if i in distortions:
+                row["distortion"] = _num(distortions[i])
             clients.append(row)
         rec = {"record": "round", "round": int(rnd),
                "deadline_s": _num(events.deadline_s if events else None),
@@ -237,14 +256,25 @@ class ReplayFailureModel(FailureModel):
         v3)."""
         return self._client_floats(r, "download_bytes")
 
-    def codecs(self, r: int) -> Optional[List[str]]:
-        """Recorded per-client codec rungs for round ``r`` (adaptive v3
-        traces only; None means the header codec applied to everyone)."""
+    def codecs(self, r: int) -> Optional[List[Optional[str]]]:
+        """Recorded per-client codec rungs for round ``r`` (adaptive v3+
+        traces only; None means the header codec applied to everyone).
+        Per-entry None marks a client the server did not select that round
+        (v4 records rungs for selected clients only) — consumers must skip
+        those entries, not substitute the header spec."""
         rows = sorted(self._round(r)["clients"], key=lambda c: c["id"])
         vals = [c.get("codec") for c in rows]
         if all(v is None for v in vals):
             return None
-        return [str(v) if v is not None else self.codec for v in vals]
+        return [str(v) if v is not None else None for v in vals]
+
+    def distortions(self, r: int) -> Optional[np.ndarray]:
+        """Recorded per-client upload distortions for round ``r`` (v4
+        traces; NaN for clients that uploaded nothing; None before v4).
+        Distortion depends on the model trajectory, so this is only
+        comparable against a replay under the *same* strategy and config —
+        the fidelity bench uses it as a bit-exactness cross-check."""
+        return self._client_floats(r, "distortion")
 
     def _client_floats(self, r: int, field: str) -> Optional[np.ndarray]:
         rows = sorted(self._round(r)["clients"], key=lambda c: c["id"])

@@ -17,7 +17,7 @@ Invariants (tested in ``tests/test_async_server.py``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Set, Tuple
+from typing import Any, List, Optional, Set, Tuple
 
 
 @dataclasses.dataclass
@@ -32,6 +32,9 @@ class PendingUpdate:
     #                              lag (not round lag) is the staleness that
     #                              discounts the update — a buffered server's
     #                              deferred rounds don't age anything
+    codec: Optional[str] = None  # rung the upload traveled under
+    upload_nbytes: Optional[float] = None  # bytes it cost on the wire
+    distortion: float = 0.0      # compression distortion measured at encode
 
     def staleness(self, current_round: int) -> int:
         """Round lag — bounds buffer lifetime (eviction horizon)."""

@@ -53,35 +53,61 @@ class RoundLoop:
         self.log = log
         self.clock_s = 0.0
         self.participants_per_round: List[int] = []
+        # per-round {client: normalized compression distortion} of the
+        # uploads encoded that round (what the trace records and
+        # fidelity-aware aggregation discounts by)
+        self.distortion_history: List[Dict[int, float]] = []
 
     def _uplink(self, client: int, model, t_global, codec_name=None):
         """Ship one local update through the communication codec: encode
         client-side (error feedback applied), decode server-side.  Returns
-        the reconstructed model the strategy aggregates.  ``codec_name``
-        overrides the run's static codec (adaptive per-client rungs)."""
+        ``(reconstructed_model, codec_name, wire_bytes, distortion)`` — the
+        model the strategy aggregates plus the upload's actual wire
+        metadata.  ``codec_name`` overrides the run's static codec (adaptive
+        per-client rungs)."""
         comm = self.runner.comm
-        codec = comm.codec_named(codec_name) if codec_name else None
-        recon, _payload = comm.roundtrip(client, model, t_global, codec=codec)
-        return recon
+        codec = comm.codec_named(codec_name) if codec_name else comm.codec
+        recon, _payload, distortion = comm.roundtrip(client, model, t_global,
+                                                     codec=codec)
+        return recon, codec.name, comm.nbytes_for(codec), float(distortion)
 
-    def _begin_round(self, r: int):
+    def _begin_round(self, r: int, selected: np.ndarray):
         """Round preamble shared by every server mode: the adaptive
         controller (when present) assigns this round's per-client rungs and
         re-prices the timing model *before* the network is drawn, then the
         server broadcasts the global model through the downlink codec.
 
-        Returns ``(t_global, assignment)`` — the parameters clients actually
-        start local training from (the decoded broadcast; identical to
-        ``runner.global_params`` without a downlink codec) and the round's
-        ``RoundAssignment`` (None for static runs)."""
+        Returns ``(t_global, assignment, dl_bytes)`` — the parameters
+        clients actually start local training from (the decoded broadcast;
+        identical to ``runner.global_params`` without a downlink codec), the
+        round's ``RoundAssignment`` (None for static runs), and the
+        broadcast bytes this round actually moved (the full-model
+        ``ref_bytes`` enrollment on a downlink codec's first round, the
+        compressed rate afterwards — the simulator, the trace, and
+        ``CommState``'s accounting all use this same number)."""
         runner = self.runner
         assignment = None
+        dl_bytes = runner.comm.next_broadcast_nbytes()
         if runner.controller is not None:
-            assignment = runner.controller.assign(r)
+            # v3 adaptive traces were recorded with the controller observing
+            # the steady-state compressed broadcast in round 1 (the
+            # enrollment repricing postdates them): feed the replaying
+            # controller the same number, or its capacity estimates — and
+            # therefore its re-derived rungs — would diverge from the
+            # recording and the drift check below would blame the user's
+            # configuration for a schema change.
+            hdr = getattr(runner.failures, "header", None)
+            legacy_enroll = hdr is not None and hdr.get("version", 0) < 4
+            assignment = runner.controller.assign(
+                r, selected,
+                download_bytes=(None if legacy_enroll else dl_bytes))
+            if legacy_enroll:
+                # keep any re-recorded trace consistent with the legacy
+                # observation the replaying controller is fed
+                dl_bytes = assignment.download_bytes
             runner.failures.set_payload_bytes(
                 upload_bytes=assignment.upload_bytes,
-                download_bytes=np.full(runner.n_clients,
-                                       assignment.download_bytes))
+                download_bytes=np.full(runner.n_clients, dl_bytes))
             # Replaying a recorded adaptive run: the controller re-derives
             # its assignments from the replayed events, so any divergence
             # from the recorded byte vectors — or from the recorded rungs,
@@ -103,29 +129,51 @@ class RoundLoop:
                             "configuration")
             if hasattr(runner.failures, "codecs"):
                 rec_codecs = runner.failures.codecs(r)
-                if rec_codecs is not None and rec_codecs != assignment.codecs:
-                    raise ValueError(
-                        f"round {r}: replayed trace recorded per-client "
-                        f"codec rungs {rec_codecs} but the adaptive "
-                        f"controller assigns {assignment.codecs}; the trace "
-                        "was recorded under a different adaptive "
-                        "configuration")
+                if rec_codecs is not None:
+                    # rows without a recorded rung (unselected that round)
+                    # carry None — only the rungs the server actually handed
+                    # out are cross-checked
+                    drift = {i: (rc, ac) for i, (rc, ac) in
+                             enumerate(zip(rec_codecs, assignment.codecs))
+                             if rc is not None and rc != ac}
+                    if drift:
+                        raise ValueError(
+                            f"round {r}: replayed trace recorded per-client "
+                            f"codec rungs {rec_codecs} but the adaptive "
+                            f"controller assigns {assignment.codecs} "
+                            f"(drift at {drift}); the trace was recorded "
+                            "under a different adaptive configuration")
+        elif runner.comm.downlink_codec is not None:
+            # static run with a downlink codec: reprice the timing model
+            # each round so the enrollment broadcast (round 1) travels at
+            # full size there too — not just in the byte accounting — and
+            # later rounds drop back to the compressed rate.  The upload
+            # size must be restated: set_payload_bytes resets any direction
+            # passed as None back to the symmetric model_bytes default.
+            runner.failures.set_payload_bytes(
+                upload_bytes=np.full(runner.n_clients,
+                                     runner.comm.upload_bytes),
+                download_bytes=np.full(runner.n_clients, dl_bytes))
         t_global, _dl_nbytes = runner.comm.broadcast(runner.global_params)
-        return t_global, assignment
+        return t_global, assignment, dl_bytes
 
     def _trace_round(self, r, selected, connected, events, up, met_deadline,
-                     assignment) -> None:
+                     assignment, dl_bytes, distortions=None) -> None:
         if self.tracer is None:
             return
         runner = self.runner
+        codecs = None
+        if assignment is not None:
+            # only rungs the server actually handed out this round are
+            # assignments; unselected clients' rows carry no codec
+            codecs = [c if selected[i] else None
+                      for i, c in enumerate(assignment.codecs)]
         self.tracer.write_round(
             r, selected, connected, events, up=up, met_deadline=met_deadline,
             payload_bytes=(assignment.upload_bytes if assignment is not None
                            else runner.comm.upload_bytes),
-            download_bytes=(assignment.download_bytes
-                            if assignment is not None
-                            else runner.comm.download_bytes),
-            codecs=assignment.codecs if assignment is not None else None)
+            download_bytes=dl_bytes,
+            codecs=codecs, distortions=distortions)
 
     def _observe(self, r, events, selected) -> None:
         runner = self.runner
@@ -182,24 +230,34 @@ class SyncRoundLoop(RoundLoop):
     def run_round(self, r: int) -> float:
         runner, strategy = self.runner, self.strategy
         selected = self._select()
-        t_global, assignment = self._begin_round(r)
+        t_global, assignment, dl_bytes = self._begin_round(r, selected)
         up, met_deadline, events = runner._draw_network(r)
         connected = selected & up & met_deadline
         self.participants_per_round.append(int(connected.sum()))
-        self._trace_round(r, selected, connected, events, up, met_deadline,
-                          assignment)
         self._observe(r, events, selected)
 
         client_models: Dict[int, Any] = {}
+        codecs_used: Dict[int, str] = {}
+        nbytes_used: Dict[int, float] = {}
+        distortions: Dict[int, float] = {}
         mu = strategy.prox_mu()
         for i in np.where(connected)[0]:
             corr = strategy.correction(i, runner)
             m = runner.run_local(t_global, runner.client_x[i],
                                  runner.client_y[i], r, mu=mu, corr=corr)
             m = strategy.post_local(i, r, m, t_global, runner)
-            client_models[int(i)] = self._uplink(
+            recon, cname, nbytes, dist = self._uplink(
                 int(i), m, t_global,
                 codec_name=(assignment.codecs[int(i)] if assignment else None))
+            client_models[int(i)] = recon
+            codecs_used[int(i)] = cname
+            nbytes_used[int(i)] = nbytes
+            distortions[int(i)] = dist
+        self.distortion_history.append(dict(distortions))
+        # trace written after the uploads, so each client row carries the
+        # upload's measured distortion alongside its rung and byte count
+        self._trace_round(r, selected, connected, events, up, met_deadline,
+                          assignment, dl_bytes, distortions=distortions)
         server_model = runner.run_local(t_global, runner.public_x,
                                         runner.public_y, r)
 
@@ -211,7 +269,12 @@ class SyncRoundLoop(RoundLoop):
             global_hist=runner.global_hist,
             full_participation=runner.k_selected >= runner.n_clients,
             eps_estimates=runner.eps_estimates, runner=runner,
-            codec=runner.cfg.codec, upload_nbytes=runner.comm.upload_bytes)
+            # a decodable codec name and a scalar size only exist for static
+            # runs; adaptive rounds carry the per-client truth instead
+            codec=(None if assignment else runner.comm.codec.name),
+            upload_nbytes=(None if assignment else runner.comm.upload_bytes),
+            codecs=codecs_used, upload_bytes=nbytes_used,
+            distortions=distortions)
         runner.global_params = strategy.aggregate(ctx)
         return self._round_duration(selected, connected, events)
 
@@ -246,7 +309,7 @@ class AsyncRoundLoop(RoundLoop):
     def run_round(self, r: int) -> float:
         runner, strategy, cfg = self.runner, self.strategy, self.runner.cfg
         selected = self._select()
-        t_global, assignment = self._begin_round(r)
+        t_global, assignment, dl_bytes = self._begin_round(r, selected)
         up, met_deadline, events = runner._draw_network(r)
         if events is None:
             raise RuntimeError(
@@ -254,13 +317,12 @@ class AsyncRoundLoop(RoundLoop):
                 "runner should have wrapped this failure model in "
                 "TimedFailureAdapter")
         fresh_connected = selected & up & met_deadline
-        self._trace_round(r, selected, fresh_connected, events, up,
-                          met_deadline, assignment)
         self._observe(r, events, selected)
 
         mu = strategy.prox_mu()
         t_start = self.clock_s
         horizon_s = cfg.deadline_s * (cfg.tau_max + 1)
+        distortions: Dict[int, float] = {}
         for i in np.where(selected & up)[0]:
             e = events.events[int(i)]
             if not math.isfinite(e.finish_s):
@@ -277,10 +339,13 @@ class AsyncRoundLoop(RoundLoop):
             m = strategy.post_local(int(i), r, m, t_global, runner)
             # The wire sits between dispatch and landing: what the buffer
             # holds is the *decoded* upload, exactly what the server will
-            # eventually see (the scenario engine already priced its bytes).
-            m = self._uplink(
+            # eventually see (the scenario engine already priced its bytes),
+            # tagged with the rung, byte count, and distortion it traveled
+            # under — measured now, at encode time, not at landing.
+            m, cname, nbytes, dist = self._uplink(
                 int(i), m, t_global,
                 codec_name=(assignment.codecs[int(i)] if assignment else None))
+            distortions[int(i)] = dist
             # Only delta-based strategies (FedBuff) need the dispatch-time
             # snapshot; skipping it elsewhere halves the buffer's memory.
             delta = (delta_pytree(m, t_global)
@@ -288,7 +353,14 @@ class AsyncRoundLoop(RoundLoop):
             self.buffer.push(PendingUpdate(
                 client=int(i), origin_round=r,
                 arrival_s=t_start + float(e.finish_s), model=m, delta=delta,
-                origin_version=self.version))
+                origin_version=self.version, codec=cname,
+                upload_nbytes=nbytes, distortion=dist))
+        self.distortion_history.append(dict(distortions))
+        # trace written after the uploads, so each client row carries the
+        # upload's measured distortion alongside its rung and byte count
+        self._trace_round(r, selected, fresh_connected, events, up,
+                          met_deadline, assignment, dl_bytes,
+                          distortions=distortions)
 
         duration = self._round_duration(selected, fresh_connected, events)
         if not math.isfinite(duration):
@@ -307,7 +379,9 @@ class AsyncRoundLoop(RoundLoop):
         arrivals = [Arrival(client=p.client, origin_round=p.origin_round,
                             staleness=self.version - p.origin_version,
                             arrival_s=p.arrival_s,
-                            model=p.model, delta=p.delta)
+                            model=p.model, delta=p.delta, codec=p.codec,
+                            upload_nbytes=p.upload_nbytes,
+                            distortion=p.distortion)
                     for p in self.buffer.collect(now, r)]
         self.staleness_applied.extend(a.staleness for a in arrivals)
         self.participants_per_round.append(len(arrivals))
@@ -320,6 +394,16 @@ class AsyncRoundLoop(RoundLoop):
 
     def _aggregate(self, r, now, t_global, server_model, selected, arrivals):
         runner, strategy = self.runner, self.strategy
+        # actual wire metadata of the aggregated cohort (latest arrival per
+        # client — arrivals are in landing-time order); a decodable scalar
+        # codec/size only exists for static runs
+        adaptive = runner.controller is not None
+        static_codec = None if adaptive else runner.comm.codec.name
+        static_nbytes = None if adaptive else runner.comm.upload_bytes
+        codecs = {a.client: a.codec for a in arrivals if a.codec is not None}
+        upload_bytes = {a.client: a.upload_nbytes for a in arrivals
+                        if a.upload_nbytes is not None}
+        distortions = {a.client: float(a.distortion) for a in arrivals}
         if isinstance(strategy, AsyncStrategy):
             ctx = AsyncRoundContext(
                 rnd=r, now_s=now, global_params=t_global,
@@ -327,8 +411,9 @@ class AsyncRoundLoop(RoundLoop):
                 client_hists=runner.client_hists,
                 server_hist=runner.server_hist,
                 global_hist=runner.global_hist, runner=runner,
-                codec=runner.cfg.codec,
-                upload_nbytes=runner.comm.upload_bytes)
+                codec=static_codec, upload_nbytes=static_nbytes,
+                codecs=codecs, upload_bytes=upload_bytes,
+                distortions=distortions)
             return strategy.aggregate_async(ctx)
         # Synchronous strategy under the async server: present the freshest
         # landed update per client as this round's cohort (staleness is
@@ -349,7 +434,13 @@ class AsyncRoundLoop(RoundLoop):
             global_hist=runner.global_hist,
             full_participation=runner.k_selected >= runner.n_clients,
             eps_estimates=runner.eps_estimates, runner=runner,
-            codec=runner.cfg.codec, upload_nbytes=runner.comm.upload_bytes)
+            codec=static_codec, upload_nbytes=static_nbytes,
+            codecs={c: a.codec for c, a in freshest.items()
+                    if a.codec is not None},
+            upload_bytes={c: a.upload_nbytes for c, a in freshest.items()
+                          if a.upload_nbytes is not None},
+            distortions={c: float(a.distortion)
+                         for c, a in freshest.items()})
         return strategy.aggregate(ctx)
 
 

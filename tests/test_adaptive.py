@@ -350,11 +350,13 @@ def test_roundtrip_codec_override_and_residual_flush():
     g = jax.tree.map(jnp.zeros_like, _tree())
     model = _tree(3)
     # a lossy rung leaves a residual...
-    _, p1 = st.roundtrip(0, model, g, codec=st.codec_named("sign1"))
+    _, p1, d1 = st.roundtrip(0, model, g, codec=st.codec_named("sign1"))
+    assert 0.0 < d1 <= 1.0                             # lossy rung: measured
     assert p1.codec == "sign1"
     assert st.residual(0) is not None
     # ...which a later lossless rung flushes down the wire entirely
-    recon, p2 = st.roundtrip(0, model, g, codec=st.codec_named("fp32"))
+    recon, p2, d2 = st.roundtrip(0, model, g, codec=st.codec_named("fp32"))
+    assert d2 == 0.0                                   # lossless: exactly 0
     assert p2.codec == "fp32"
     assert st.residual(0) is None
     # cumulative conservation: decoded_1 + decoded_2 == 2 * delta exactly
@@ -396,7 +398,9 @@ def test_broadcast_downlink_error_feedback_tracks_global():
     rng = np.random.default_rng(0)
     g = jax.tree.map(jnp.zeros_like, _tree())
     out, nbytes = st.broadcast(g)                      # replica initialized
-    assert nbytes == st.download_bytes < st.ref_bytes
+    # enrollment ships the full model: charged at ref_bytes, not the
+    # compressed per-round rate
+    assert nbytes == st.ref_bytes > st.download_bytes
     drift = []
     for t in range(12):
         g = jax.tree.map(
@@ -415,7 +419,10 @@ def test_broadcast_total_downlink_accounting():
     g = _tree(2)
     for _ in range(3):
         st.broadcast(g)
-    assert st.total_downlink_bytes == pytest.approx(3 * st.download_bytes)
+    # round 1 is the enrollment transfer (full model at ref_bytes); only
+    # the subsequent broadcasts travel at the compressed rate
+    assert st.total_downlink_bytes == pytest.approx(
+        st.ref_bytes + 2 * st.download_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -502,16 +509,19 @@ def test_v3_trace_schema_records_per_client_codec_and_bytes(tmp_path):
     runner.run(STRATEGIES["fedavg"](), rounds=3)
     lines = [json.loads(l) for l in open(path)]
     hdr = lines[0]
-    assert hdr["version"] == 3
+    assert hdr["version"] == 4
     assert hdr["codec"] == "adaptive:sign1-fp16"
     assert hdr["upload_bytes"] is None                 # no single size
     assert hdr["downlink_codec"] == "fp16"
     assert hdr["download_bytes"] == pytest.approx(2e6)
     rungs = set()
     for rec in lines[1:]:
+        # round 1's broadcast is the full-model enrollment transfer
+        # (ref_bytes); later rounds travel at the compressed fp16 rate
+        want_dl = 4e6 if rec["round"] == 1 else 2e6
         for c in rec["clients"]:
             assert c["codec"] in RUNG_LADDER
-            assert c["download_bytes"] == pytest.approx(2e6)
+            assert c["download_bytes"] == pytest.approx(want_dl)
             assert c["payload_bytes"] <= 2e6 + 1e-6    # never above hi rung
             rungs.add(c["codec"])
     # the recorded assignments match what the controller decided

@@ -193,7 +193,7 @@ def test_error_feedback_residual_contraction(spec):
     for _ in range(T):
         prev = st.residual(0)
         carry = delta if prev is None else jax.tree.map(jnp.add, delta, prev)
-        recon, _ = st.roundtrip(0, model, g)
+        recon, _, _ = st.roundtrip(0, model, g)
         acc = jax.tree.map(lambda a, r: a + r, acc, recon)
         gamma = max(gamma, _l2(st.residual(0)) / max(_l2(carry), 1e-12))
     assert gamma < 1.0 - 1e-4                      # contraction every step
@@ -217,9 +217,10 @@ def test_lossless_codecs_keep_no_residual():
         st = CommState(codec, tmpl, lora_cfg=_L() if spec == "lora_only"
                        else None)
         model = jax.tree.map(lambda l: l + 1.0, tmpl)
-        recon, payload = st.roundtrip(0, model, tmpl)
+        recon, payload, dist = st.roundtrip(0, model, tmpl)
         assert _maxdiff(recon, model) == 0.0
         assert st.residual(0) is None
+        assert dist == 0.0                         # lossless: exactly zero
         assert payload.nbytes == codec.nbytes(tmpl)
 
 
@@ -342,7 +343,7 @@ def test_trace_records_codec_and_payload_bytes(tmp_path):
     runner.run(STRATEGIES["fedavg"](), rounds=2)
     lines = [json.loads(l) for l in open(path)]
     hdr = lines[0]
-    assert hdr["version"] == 3
+    assert hdr["version"] == 4
     assert hdr["codec"] == "int8"
     assert hdr["downlink_codec"] == "fp32"
     assert hdr["upload_bytes"] == pytest.approx(runner.upload_bytes)

@@ -1,0 +1,479 @@
+"""ISSUE-5: fidelity-aware aggregation + strategy-state/wire-metadata fixes.
+
+Covers the discount pipeline ``fedauto_discounted_weights`` (simplex, Eq. 9
+pin, bit-exact reductions to the sync and async solutions, monotonicity in
+distortion), the measured-distortion plumbing (``CommState.roundtrip`` →
+round loops → ``RoundContext``/``AsyncRoundContext``/``Arrival`` → the
+fedauto strategies), trace schema v4 (per-client distortions, replay
+cross-check), and the satellite bugfixes: TF-Aggregation cross-run state,
+adaptive-run wire metadata in the strategy context, selection-masked rung
+histograms, and round-1 compressed-downlink enrollment accounting.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (fedauto_async_weights,
+                                    fedauto_discounted_weights,
+                                    fedauto_weights)
+from repro.core.strategies import (STRATEGIES, Arrival, AsyncRoundContext,
+                                   FedAuto, FedAutoAsync, TFAggregation)
+from repro.fl.comm import RUNG_LADDER, CommState, make_codec
+from repro.fl.metrics import distortion_replay_matches
+from repro.fl.runtime import FFTConfig
+from repro.fl.toy import make_toy_runner
+
+BASE = dict(n_clients=6, k_selected=6, local_steps=2, batch_size=8, lr=0.05,
+            seed=0, eval_every=2, model_bytes=4e6, deadline_s=5.0)
+TOY = dict(n_samples=600, public_per_class=10, pretrain_steps=9)
+
+
+def _rows(rng, J, C):
+    alpha = rng.dirichlet(np.ones(C) * 0.5, size=J)
+    p = rng.dirichlet(np.ones(J))
+    return alpha, p @ alpha
+
+
+# ---------------------------------------------------------------------------
+# fedauto_discounted_weights: the one post-QP discount pipeline
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_discounted_weights_feasibility_and_pin(seed):
+    rng = np.random.default_rng(seed)
+    J, C = 4 + seed, 5 + seed
+    alpha, alpha_g = _rows(rng, J, C)
+    staleness = rng.integers(0, 4, J)
+    staleness[0] = 0
+    distortion = rng.uniform(0.0, 0.9, J)
+    distortion[0] = 0.0
+    beta = fedauto_discounted_weights(alpha, alpha_g, staleness, distortion,
+                                      server_row=0, discount_b=1.5)
+    assert np.all(beta >= -1e-6)
+    assert abs(beta.sum() - 1.0) < 1e-4
+    # Eq. 9 pin survives both discounts: beta_s = 1/(1+m)
+    assert abs(beta[0] - 1.0 / J) < 1e-4
+
+
+def test_discounted_weights_fresh_lossless_is_sync_bit_exact():
+    rng = np.random.default_rng(5)
+    alpha, alpha_g = _rows(rng, 6, 8)
+    sync = fedauto_weights(alpha, alpha_g, np.ones(6, bool), server_row=0)
+    got = fedauto_discounted_weights(alpha, alpha_g, np.zeros(6, int),
+                                     np.zeros(6), server_row=0,
+                                     discount_b=2.0)
+    np.testing.assert_array_equal(sync, got)                 # bit-identical
+
+
+def test_discounted_weights_stale_lossless_is_async_bit_exact():
+    rng = np.random.default_rng(6)
+    alpha, alpha_g = _rows(rng, 7, 9)
+    staleness = np.array([0, 0, 1, 3, 0, 2, 5])
+    want = fedauto_async_weights(alpha, alpha_g, staleness, server_row=0,
+                                 discount_a=0.7)
+    got = fedauto_discounted_weights(alpha, alpha_g, staleness, np.zeros(7),
+                                     server_row=0, discount_a=0.7,
+                                     discount_b=2.0)
+    np.testing.assert_array_equal(want, got)                 # bit-identical
+
+
+def test_discounted_weights_b_zero_ignores_distortion():
+    rng = np.random.default_rng(7)
+    alpha, alpha_g = _rows(rng, 5, 6)
+    staleness = np.array([0, 1, 0, 2, 0])
+    d = rng.uniform(0.1, 0.9, 5)
+    want = fedauto_async_weights(alpha, alpha_g, staleness, server_row=0)
+    got = fedauto_discounted_weights(alpha, alpha_g, staleness, d,
+                                     server_row=0, discount_b=0.0)
+    np.testing.assert_array_equal(want, got)
+
+
+def test_discounted_weights_monotone_in_distortion():
+    """Two participants with the *same* alpha row: the more distorted
+    upload must never get more weight, and raising one participant's
+    distortion must not raise its own weight."""
+    rng = np.random.default_rng(8)
+    C = 6
+    row = rng.dirichlet(np.ones(C))
+    alpha = np.stack([rng.dirichlet(np.ones(C)), row, row])
+    alpha_g = np.array([0.3, 0.3, 0.4]) @ alpha
+    beta = fedauto_discounted_weights(alpha, alpha_g, np.zeros(3),
+                                      np.array([0.0, 0.0, 0.8]),
+                                      server_row=0, discount_b=1.0)
+    assert beta[2] < beta[1]
+    prev = None
+    for d in np.linspace(0.0, 1.0, 6):
+        b = fedauto_discounted_weights(alpha, alpha_g, np.zeros(3),
+                                       np.array([0.0, 0.0, d]),
+                                       server_row=0, discount_b=1.0)
+        if prev is not None:
+            assert b[2] <= prev + 1e-9
+        prev = b[2]
+    even = fedauto_discounted_weights(alpha, alpha_g, np.zeros(3),
+                                      np.array([0.0, 0.5, 0.5]),
+                                      server_row=0, discount_b=1.0)
+    assert abs(even[1] - even[2]) < 1e-5                     # equal discount
+
+
+def test_discounted_weights_full_distortion_drops_to_server():
+    rng = np.random.default_rng(9)
+    alpha, alpha_g = _rows(rng, 4, 5)
+    beta = fedauto_discounted_weights(alpha, alpha_g, np.zeros(4),
+                                      np.array([0.0, 1.0, 1.0, 1.0]),
+                                      server_row=0, discount_b=1.0)
+    # every client annihilated: the server keeps the whole budget
+    assert beta[0] == pytest.approx(1.0)
+    assert np.all(beta[1:] == 0.0)
+    # out-of-range distortions are clipped, not amplified
+    clipped = fedauto_discounted_weights(alpha, alpha_g, np.zeros(4),
+                                         np.array([0.0, 2.5, 1.0, 7.0]),
+                                         server_row=0, discount_b=1.0)
+    np.testing.assert_array_equal(beta, clipped)
+
+
+# ---------------------------------------------------------------------------
+# distortion plumbing: roundtrip → loops → strategy contexts
+# ---------------------------------------------------------------------------
+def test_roundtrip_distortion_matches_residual_over_carry():
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.normal(size=(17, 5)), jnp.float32)}
+    st = CommState(make_codec("sign1"), tree)
+    g = jax.tree.map(jnp.zeros_like, tree)
+    model = tree                       # random delta: sign1 genuinely lossy
+    _, _, d = st.roundtrip(0, model, g)
+    carry = jax.tree.map(
+        lambda w, gg: w.astype(jnp.float32) - gg.astype(jnp.float32),
+        model, g)                                  # first upload: no residual
+    resid = st.residual(0)
+    l2 = lambda t: float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                                      for x in jax.tree.leaves(t))))
+    assert d == pytest.approx(l2(resid) / l2(carry))
+    assert 0.0 < d < 1.0
+    assert st.last_distortions[0] == d
+
+
+@pytest.mark.parametrize("mode", ["sync", "buffered"])
+def test_context_carries_distortions_and_wire_metadata(mode):
+    cfg = FFTConfig(codec="sign1", server_mode=mode,
+                    failure_mode="scenario:lossy_uplink", **BASE)
+    runner = make_toy_runner(cfg, **TOY)
+    seen = []
+    name = "fedauto" if mode == "sync" else "fedauto_async"
+
+    class Probe(STRATEGIES[name]):
+        def aggregate(self, ctx):
+            seen.append(ctx)
+            return super().aggregate(ctx)
+
+        def aggregate_async(self, ctx):
+            seen.append(ctx)
+            return super().aggregate_async(ctx)
+
+    runner.run(Probe(), rounds=3)
+    with_parts = [c for c in seen if c.distortions]
+    assert with_parts, "no round delivered any upload"
+    for ctx in with_parts:
+        assert ctx.codec == "sign1"                # decodable static codec
+        for i, d in ctx.distortions.items():
+            assert 0.0 < d <= 1.0                  # sign1 is lossy: measured
+            assert ctx.codecs[i] == "sign1"
+            assert ctx.upload_bytes[i] == pytest.approx(
+                runner.comm.upload_bytes)
+
+
+def test_adaptive_context_metadata_is_per_round_truth():
+    """Satellite: adaptive runs must not report the ``adaptive:…`` spec
+    string as ``ctx.codec`` nor the static hi-rung bytes as
+    ``ctx.upload_nbytes`` — the per-client assignment is the truth."""
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:diurnal", **BASE)
+    runner = make_toy_runner(cfg, **TOY)
+    seen = []
+
+    class Probe(STRATEGIES["fedavg"]):
+        def aggregate(self, ctx):
+            seen.append(ctx)
+            return super().aggregate(ctx)
+
+    runner.run(Probe(), rounds=3)
+    assert any(c.codecs for c in seen)
+    for ctx in seen:
+        assert ctx.codec is None                   # no single decodable codec
+        assert ctx.upload_nbytes is None           # no single wire size
+        for i, cname in ctx.codecs.items():
+            assert cname in RUNG_LADDER
+            assert ctx.upload_bytes[i] == pytest.approx(
+                runner.comm.nbytes_for(cname))
+            assert i in ctx.distortions
+
+
+def test_fidelity_discount_downweights_distorted_upload():
+    """End to end through FedAutoAsync: a maximally distorted arrival loses
+    weight to its lossless twin once the fidelity discount is on."""
+    rng = np.random.default_rng(3)
+    tree = lambda s: {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+    hists = np.array([[5, 5, 0], [5, 5, 0]])
+    mk = lambda b: FedAutoAsync(use_module1=False, fidelity_discount=b)
+    arrivals = [
+        Arrival(client=0, origin_round=1, staleness=0, arrival_s=0.0,
+                model=tree(0), distortion=0.0),
+        Arrival(client=1, origin_round=1, staleness=0, arrival_s=0.0,
+                model=tree(1), distortion=0.9),
+    ]
+    captured = {}
+    orig = fedauto_discounted_weights
+
+    def capture(*a, **kw):
+        beta = orig(*a, **kw)
+        captured.setdefault("betas", []).append(beta)
+        return beta
+
+    import repro.core.strategies as smod
+    smod.fedauto_discounted_weights = capture
+    try:
+        for b in (0.0, 2.0):
+            ctx = AsyncRoundContext(
+                rnd=1, now_s=0.0, global_params=tree(2),
+                server_model=tree(3), arrivals=list(arrivals),
+                p=np.full(3, 1 / 3), client_hists=hists,
+                server_hist=np.array([3, 3, 3]),
+                global_hist=np.array([13, 13, 3]))
+            mk(b).aggregate_async(ctx)
+    finally:
+        smod.fedauto_discounted_weights = orig
+    b0, b2 = captured["betas"]
+    # same alpha rows: without the discount the twins weigh equally; with it
+    # the distorted one is strictly down-weighted
+    assert b0[1] == pytest.approx(b0[2])
+    assert b2[2] < b2[1]
+    assert abs(b2.sum() - 1.0) < 1e-4
+
+
+def test_config_fidelity_discount_b_reaches_strategy():
+    """``FFTConfig.fidelity_discount_b`` changes training under a lossy
+    codec and is bit-exactly inert under a lossless one."""
+    hists = {}
+    for codec in ("sign1", "fp32"):
+        for b in (0.0, 4.0):
+            cfg = FFTConfig(codec=codec, fidelity_discount_b=b,
+                            failure_mode="scenario:lossy_uplink", **BASE)
+            runner = make_toy_runner(cfg, **TOY)
+            hists[codec, b] = runner.run(FedAuto(use_module1=False),
+                                         rounds=3)
+    assert hists["fp32", 0.0] == hists["fp32", 4.0]    # lossless: inert
+    assert hists["sign1", 0.0] != hists["sign1", 4.0]  # lossy: discounts
+
+
+# ---------------------------------------------------------------------------
+# trace schema v4: per-client distortions, same-config replay cross-check
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["sync", "buffered"])
+def test_trace_v4_records_and_replays_distortions(tmp_path, mode):
+    path = str(tmp_path / "t.ndjson")
+    cfg = FFTConfig(codec="adaptive:sign1-fp16", server_mode=mode,
+                    failure_mode="scenario:diurnal", trace_record=path,
+                    **BASE)
+    runner = make_toy_runner(cfg, **TOY)
+    live = runner.run(STRATEGIES["fedauto" if mode == "sync"
+                                 else "fedauto_async"](), rounds=4)
+    live_dist = runner.loop.distortion_history
+    lines = [json.loads(l) for l in open(path)]
+    assert lines[0]["version"] == 4
+    recorded_any = False
+    for rec in lines[1:]:
+        d = {c["id"]: c["distortion"] for c in rec["clients"]
+             if "distortion" in c}
+        assert d == pytest.approx(live_dist[rec["round"] - 1])
+        recorded_any |= bool(d)
+    assert recorded_any
+
+    # same-config replay recomputes the identical distortions bit-exactly
+    rep_cfg = FFTConfig(codec="adaptive:sign1-fp16", server_mode=mode,
+                        trace_replay=path, **BASE)
+    rep_runner = make_toy_runner(rep_cfg, **TOY)
+    rep = rep_runner.run(STRATEGIES["fedauto" if mode == "sync"
+                                    else "fedauto_async"](), rounds=4)
+    assert rep == live
+    # bit-exact recomputation of every recorded per-client distortion
+    assert distortion_replay_matches(rep_runner.failures,
+                                     rep_runner.loop.distortion_history, 4)
+    # and the cross-check is not vacuous: perturb one value and it trips
+    rep_runner.loop.distortion_history[-1][
+        next(iter(rep_runner.loop.distortion_history[-1]), 0)] = 0.123
+    assert not distortion_replay_matches(
+        rep_runner.failures, rep_runner.loop.distortion_history, 4)
+
+
+def test_legacy_v3_adaptive_trace_still_replays(tmp_path, monkeypatch):
+    """Pre-v4 adaptive traces were recorded with the round-1 broadcast
+    priced at the steady-state compressed rate; replaying one must feed the
+    controller that same number (not the v4 enrollment ref_bytes), or its
+    re-derived rungs would drift from the recording and the loud
+    cross-check would wrongly blame the user's configuration."""
+    path = str(tmp_path / "t3.ndjson")
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:diurnal", trace_record=path,
+                    **BASE)
+    runner = make_toy_runner(cfg, **TOY)
+    # replicate the pre-v4 recorder: no enrollment repricing anywhere
+    monkeypatch.setattr(type(runner.comm), "next_broadcast_nbytes",
+                        lambda self: float(self.download_bytes))
+    live = runner.run(STRATEGIES["fedavg"](), rounds=3)
+    lines = [json.loads(l) for l in open(path)]
+    assert lines[1]["clients"][0]["download_bytes"] == pytest.approx(
+        runner.comm.download_bytes)              # compressed round 1, as v3
+    lines[0]["version"] = 3
+    for rec in lines[1:]:
+        for c in rec["clients"]:
+            c.pop("distortion", None)
+    with open(path, "w") as fh:
+        for rec in lines:
+            fh.write(json.dumps(rec) + "\n")
+    monkeypatch.undo()                           # replay runs unpatched
+    rerec = str(tmp_path / "rerec.ndjson")
+    rep_cfg = FFTConfig(codec="adaptive:sign1-fp16", trace_replay=path,
+                        trace_record=rerec, **BASE)
+    rep = make_toy_runner(rep_cfg, **TOY).run(STRATEGIES["fedavg"](),
+                                              rounds=3)
+    assert rep == live
+    # a re-recording made during a legacy replay keeps the source's version
+    # stamp (its controller trajectory used the legacy enrollment pricing),
+    # so replaying the re-recording applies the same shim and stays exact
+    assert json.loads(open(rerec).readline())["version"] == 3
+    rep2_cfg = FFTConfig(codec="adaptive:sign1-fp16", trace_replay=rerec,
+                         **BASE)
+    rep2 = make_toy_runner(rep2_cfg, **TOY).run(STRATEGIES["fedavg"](),
+                                               rounds=3)
+    assert rep2 == live
+
+
+def test_fidelity_discounted_run_replays_bit_exact(tmp_path):
+    path = str(tmp_path / "t.ndjson")
+    cfg = FFTConfig(codec="adaptive:sign1-fp16", fidelity_discount_b=1.0,
+                    failure_mode="scenario:diurnal", trace_record=path,
+                    **BASE)
+    live = make_toy_runner(cfg, **TOY).run(STRATEGIES["fedauto"](), rounds=4)
+    rep_cfg = FFTConfig(codec="adaptive:sign1-fp16", fidelity_discount_b=1.0,
+                        trace_replay=path, **BASE)
+    rep = make_toy_runner(rep_cfg, **TOY).run(STRATEGIES["fedauto"](),
+                                              rounds=4)
+    assert rep == live
+
+
+# ---------------------------------------------------------------------------
+# satellite: stale cross-run strategy state
+# ---------------------------------------------------------------------------
+def test_tf_aggregation_resets_selection_probs_between_runs():
+    strat = TFAggregation()
+    strat.s = np.array([1.0, 0.0, 0.0])            # poisoned by a prior run
+    strat.init_state(None)
+    assert strat.s is None
+
+
+def test_reused_strategy_instances_reproduce_fresh_runs():
+    """One instance run twice must match two fresh instances — no state
+    (selection probs, control variates, buffers, extrapolation clocks)
+    may leak across runs."""
+    for name in ("tf_aggregation", "scaffold", "fedawe", "fedbuff"):
+        cfg = FFTConfig(codec="fp32", failure_mode="scenario:lossy_uplink",
+                        server_mode=("buffered" if name == "fedbuff"
+                                     else "sync"), **BASE)
+
+        def fresh_run(strat):
+            runner = make_toy_runner(cfg, **TOY)
+            return runner.run(strat, rounds=3)
+
+        reused = STRATEGIES[name]()
+        first = fresh_run(reused)
+        again = fresh_run(reused)
+        control = fresh_run(STRATEGIES[name]())
+        assert first == control, name
+        assert again == control, name
+
+
+# ---------------------------------------------------------------------------
+# satellite: selection-masked rung histogram + trace rows
+# ---------------------------------------------------------------------------
+def test_rung_histogram_counts_only_selected_clients(tmp_path):
+    path = str(tmp_path / "t.ndjson")
+    cfg = dict(BASE)
+    cfg["k_selected"] = 3                          # partial participation
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:diurnal", trace_record=path,
+                    **cfg)
+    runner = make_toy_runner(cfg, **TOY)
+    rounds = 4
+    runner.run(STRATEGIES["fedavg"](), rounds=rounds)
+    hist = runner.controller.rung_histogram()
+    assert sum(hist.values()) == rounds * 3        # not rounds * n_clients
+    # trace rows carry a rung only for clients the server contacted
+    for rec in [json.loads(l) for l in open(path)][1:]:
+        for c in rec["clients"]:
+            assert ("codec" in c) == c["selected"]
+
+
+def test_partial_selection_adaptive_replay_bit_exact(tmp_path):
+    path = str(tmp_path / "t.ndjson")
+    kw = dict(BASE, k_selected=3)
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:diurnal", trace_record=path, **kw)
+    live = make_toy_runner(cfg, **TOY).run(STRATEGIES["fedavg"](), rounds=4)
+    rep_cfg = FFTConfig(codec="adaptive:sign1-fp16", trace_replay=path, **kw)
+    rep = make_toy_runner(rep_cfg, **TOY).run(STRATEGIES["fedavg"](),
+                                              rounds=4)
+    assert rep == live
+
+
+# ---------------------------------------------------------------------------
+# satellite: round-1 compressed-downlink enrollment accounting
+# ---------------------------------------------------------------------------
+def test_enrollment_broadcast_charged_at_ref_bytes_end_to_end():
+    cfg = FFTConfig(codec="fp32", downlink_codec="int8",
+                    failure_mode="scenario:lossy_uplink", **BASE)
+    runner = make_toy_runner(cfg, **TOY)
+    rounds = 3
+    runner.run(STRATEGIES["fedavg"](), rounds=rounds)
+    comm = runner.comm
+    assert comm.total_downlink_bytes == pytest.approx(
+        comm.ref_bytes + (rounds - 1) * comm.download_bytes)
+    assert comm.download_bytes < comm.ref_bytes
+
+
+def test_downlink_repricing_keeps_compressed_upload_pricing():
+    """Regression: the per-round downlink repricing of a static run with a
+    downlink codec must restate the upload size — ``set_payload_bytes``
+    resets any direction passed as None to the full model_bytes default,
+    which would silently erase the upload codec's deadline benefit."""
+    cfg = FFTConfig(codec="int8", downlink_codec="int8",
+                    failure_mode="scenario:lossy_uplink", **BASE)
+    runner = make_toy_runner(cfg, **TOY)
+    runner.run(STRATEGIES["fedavg"](), rounds=2)
+    sim = runner.failures.sim
+    assert sim.upload_bytes is not None
+    np.testing.assert_allclose(sim.upload_bytes, runner.comm.upload_bytes)
+    np.testing.assert_allclose(sim.download_bytes, runner.comm.download_bytes)
+
+
+def test_round1_assignment_and_trace_record_enrollment_bytes(tmp_path):
+    """The controller's round-1 assignment (what ``observe`` divides by)
+    and the trace both carry the enrollment transfer's actual ref_bytes,
+    matching how the simulator priced that round's downlink."""
+    path = str(tmp_path / "t.ndjson")
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:lossy_uplink", trace_record=path,
+                    **BASE)
+    runner = make_toy_runner(cfg, **TOY)
+    runner.run(STRATEGIES["fedavg"](), rounds=2)
+    comm = runner.comm
+    assert runner.controller.assignments[1].download_bytes == pytest.approx(
+        comm.ref_bytes)
+    assert runner.controller.assignments[2].download_bytes == pytest.approx(
+        comm.download_bytes)
+    lines = [json.loads(l) for l in open(path)]
+    for rec in lines[1:]:
+        want = comm.ref_bytes if rec["round"] == 1 else comm.download_bytes
+        for c in rec["clients"]:
+            assert c["download_bytes"] == pytest.approx(want)

@@ -11,6 +11,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.aggregation import (fedauto_async_weights,  # noqa: E402
+                                    fedauto_discounted_weights,
+                                    fedauto_weights)
 from repro.core.weights_qp import (chi2_effective, project_simplex,  # noqa: E402
                                    solve_weights)
 from repro.fl.comm import (AdaptiveCommController, CommState,  # noqa: E402
@@ -96,6 +99,71 @@ def test_solver_no_worse_than_uniform(problem):
     f_uni = float(chi2_effective(jnp.asarray(uni), jnp.asarray(alpha),
                                  jnp.asarray(alpha_g)))
     assert f_beta <= f_uni + 1e-5
+
+
+@st.composite
+def discount_problems(draw):
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    J = draw(st.integers(2, 10))
+    C = draw(st.integers(2, 12))
+    b = draw(st.floats(0.0, 4.0))
+    rng = np.random.default_rng(seed)
+    alpha, alpha_g = _random_problem(rng, J, C)
+    staleness = rng.integers(0, 5, J).astype(float)
+    staleness[0] = 0.0
+    distortion = rng.uniform(0.0, 1.0, J)
+    distortion[0] = 0.0
+    return alpha, alpha_g, staleness, distortion, b
+
+
+@given(discount_problems())
+@settings(max_examples=25, deadline=None)
+def test_discounted_weights_simplex_and_pin_property(problem):
+    """Eq. 8/9 invariants survive the staleness × fidelity discount: β on
+    the simplex, server pin β_s = 1/(1+m) intact."""
+    alpha, alpha_g, staleness, distortion, b = problem
+    beta = fedauto_discounted_weights(alpha, alpha_g, staleness, distortion,
+                                      server_row=0, discount_b=b)
+    assert np.all(beta >= -1e-6)
+    assert abs(beta.sum() - 1.0) < 1e-4
+    assert abs(beta[0] - 1.0 / len(alpha)) < 1e-4
+
+
+@given(discount_problems())
+@settings(max_examples=25, deadline=None)
+def test_discounted_weights_zero_distortion_reductions(problem):
+    """At zero distortion the pipeline is bit-exact with the staleness-only
+    solution, and additionally with the sync QP when everything is fresh."""
+    alpha, alpha_g, staleness, _, b = problem
+    zeros = np.zeros(len(alpha))
+    got = fedauto_discounted_weights(alpha, alpha_g, staleness, zeros,
+                                     server_row=0, discount_b=b)
+    want = fedauto_async_weights(alpha, alpha_g, staleness, server_row=0)
+    np.testing.assert_array_equal(got, want)
+    fresh = fedauto_discounted_weights(alpha, alpha_g, zeros, zeros,
+                                       server_row=0, discount_b=b)
+    sync = fedauto_weights(alpha, alpha_g, np.ones(len(alpha), bool),
+                           server_row=0)
+    np.testing.assert_array_equal(fresh, sync)
+
+
+@given(discount_problems(), st.integers(1, 9), st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_discounted_weights_monotone_in_distortion_property(problem, j, bump):
+    """Raising one participant's distortion (all else equal) must never
+    raise its own weight."""
+    alpha, alpha_g, staleness, distortion, b = problem
+    j = j % len(alpha)
+    if j == 0:
+        j = len(alpha) - 1
+    lo = fedauto_discounted_weights(alpha, alpha_g, staleness, distortion,
+                                    server_row=0, discount_b=b)
+    worse = distortion.copy()
+    worse[j] = min(worse[j] + bump * (1.0 - worse[j]), 1.0)
+    hi = fedauto_discounted_weights(alpha, alpha_g, staleness, worse,
+                                    server_row=0, discount_b=b)
+    assert hi[j] <= lo[j] + 1e-9
+    assert abs(hi[0] - lo[0]) < 1e-9               # pin untouched
 
 
 @given(st.integers(0, 10_000), st.integers(2, 16))
