@@ -17,6 +17,12 @@ compressing the downlink broadcast too).  Rows:
 Acceptance (ISSUE 4): on ≥ 2 worlds, in sync AND buffered modes,
 ``adaptive:sign1-fp16`` achieves strictly higher mean participants than
 static fp32 at final accuracy within 1 point of the best static codec.
+
+Every run is telemetry-instrumented (``repro.obs``): headline numbers come
+from the run's ``RunReport`` and are cross-checked against the comm/loop
+accounting via ``reconcile``.  For the full per-round picture (drop-cause
+breakdown, β-mass tables) run with ``telemetry_log=`` and render the log
+with ``python -m benchmarks.report run-report <log.ndjson>``.
 """
 from __future__ import annotations
 
@@ -25,10 +31,9 @@ import tempfile
 import time
 from typing import List
 
-import numpy as np
-
 from benchmarks.common import make_problem
 from repro.core.strategies import STRATEGIES
+from repro.obs import reconcile
 
 # Same simulated paper-scale payload and deadline as bench_comm, so the
 # static rows are directly comparable across the two benchmarks.
@@ -46,12 +51,14 @@ def _run_one(world: str, mode: str, codec: str, rounds: int, quick: bool,
                           server_mode=mode, tau_max=4, buffer_k=4,
                           codec=codec, model_bytes=MODEL_BYTES,
                           trace_record=trace_record,
-                          trace_replay=trace_replay)
+                          trace_replay=trace_replay, telemetry=True)
     t0 = time.time()
     hist = runner.run(STRATEGIES[MODES[mode]](), rounds=rounds)
     us_per_round = (time.time() - t0) / rounds * 1e6
-    parts = runner.loop.participants_per_round
-    return runner, hist, float(np.mean(parts)) if parts else 0.0, us_per_round
+    # headline numbers from the telemetry flight record, cross-checked
+    # against the run's own accounting
+    reconcile(runner.report, runner)
+    return runner, hist, runner.report.mean_participants(), us_per_round
 
 
 def run(quick: bool = True) -> List[str]:
@@ -78,7 +85,7 @@ def run(quick: bool = True) -> List[str]:
                 rows.append(f"adaptive:{world}/{mode}/{codec}/participants,"
                             f"0,{parts:.3f}")
                 rows.append(f"adaptive:{world}/{mode}/{codec}/uplink_MB,0,"
-                            f"{runner.comm.total_uplink_bytes / 1e6:.2f}")
+                            f"{runner.report.total_upload_bytes() / 1e6:.2f}")
                 if codec == ADAPTIVE:
                     hist_r = _run_one(world, mode, codec, rounds, quick,
                                       trace_replay=trace)[1]

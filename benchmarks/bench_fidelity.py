@@ -26,6 +26,12 @@ Rows:
 
 Acceptance (ISSUE 5): on ≥ 1 world × mode cell, staleness_fidelity shows a
 smaller transient than none at final accuracy within 1 point.
+
+Every run is telemetry-instrumented (``repro.obs``): ``mean_distortion``
+is read from the run's ``RunReport`` and cross-checked against the
+comm/loop accounting via ``reconcile``.  Render a full run report from a
+telemetry log with ``python -m benchmarks.report run-report
+<log.ndjson>``.
 """
 from __future__ import annotations
 
@@ -36,8 +42,8 @@ from typing import List
 
 from benchmarks.common import make_problem
 from repro.core.strategies import FedAuto, FedAutoAsync
-from repro.fl.metrics import (accuracy_drawdown,
-                               distortion_replay_matches, mean_distortion)
+from repro.fl.metrics import accuracy_drawdown, distortion_replay_matches
+from repro.obs import reconcile
 
 # Same simulated paper-scale payload and deadline as bench_comm /
 # bench_adaptive, so rows are directly comparable across the benches.
@@ -74,10 +80,13 @@ def _run_one(world: str, mode: str, a: float, b: float, rounds: int,
                           server_mode=mode, tau_max=4, buffer_k=4,
                           codec=LADDER, model_bytes=MODEL_BYTES,
                           eval_every=2, trace_record=trace_record,
-                          trace_replay=trace_replay)
+                          trace_replay=trace_replay, telemetry=True)
     t0 = time.time()
     hist = runner.run(_strategy(mode, a, b), rounds=rounds)
     us_per_round = (time.time() - t0) / rounds * 1e6
+    # headline numbers from the telemetry flight record, cross-checked
+    # against the run's own accounting
+    reconcile(runner.report, runner)
     return runner, hist, us_per_round
 
 
@@ -103,7 +112,7 @@ def run(quick: bool = True) -> List[str]:
                             f"0,{accuracy_drawdown(hist, warmup):.4f}")
                 rows.append(f"fidelity:{world}/{mode}/{variant}"
                             f"/mean_distortion,0,"
-                            f"{mean_distortion(runner.loop.distortion_history):.4f}")
+                            f"{runner.report.mean_distortion():.4f}")
                 if trace is not None:
                     rep, hist_r, _ = _run_one(world, mode, a, b, rounds,
                                               quick, trace_replay=trace)

@@ -30,7 +30,9 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
                  server_mode: str = "sync", tau_max: int = 5,
                  buffer_k: int = 4, eval_every: Optional[int] = None,
                  codec: str = "fp32", downlink_codec: Optional[str] = None,
-                 model_bytes: Optional[float] = -1.0):
+                 model_bytes: Optional[float] = -1.0,
+                 telemetry: bool = False,
+                 telemetry_log: Optional[str] = None):
     n_clients = 8 if quick else 20
     n_classes = 4 if quick else 10
     img = 8 if quick else 16
@@ -70,6 +72,8 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
         buffer_k=buffer_k,
         codec=codec,
         downlink_codec=downlink_codec,
+        telemetry=telemetry,
+        telemetry_log=telemetry_log,
     )
     if deadline_s is not None:
         cfg.deadline_s = deadline_s
@@ -91,6 +95,14 @@ def run_strategies(runner, names: List[str], rounds: int,
         hist = runner.run(strat, rounds=rounds)
         dt = time.time() - t0
         us_per_round = dt / rounds * 1e6
-        rows.append(f"{label}/{name},{us_per_round:.0f},{hist[-1]:.4f}")
+        # telemetry-instrumented runs read the headline number from the
+        # flight record (identical to hist[-1] by construction — the
+        # eval_acc gauge is the same evaluate() call)
+        final = hist[-1]
+        if getattr(runner, "report", None) is not None:
+            acc = runner.report.final_accuracy()
+            if acc is not None:
+                final = acc
+        rows.append(f"{label}/{name},{us_per_round:.0f},{final:.4f}")
     runner.global_params = g0
     return rows

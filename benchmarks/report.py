@@ -1,9 +1,23 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSON.
+"""Render benchmark tables.
 
-    PYTHONPATH=src python -m benchmarks.report benchmarks/dryrun_results.json
+Two modes:
+
+* dry-run roofline (the default, EXPERIMENTS.md §Dry-run / §Roofline):
+
+      PYTHONPATH=src python -m benchmarks.report benchmarks/dryrun_results.json
+
+* run-report — Markdown tables over one or more telemetry NDJSON logs
+  (``FFTConfig.telemetry_log``; see ``repro.obs``): per-run summary,
+  drop-cause breakdown, bytes-vs-participation, β-mass by staleness/rung:
+
+      PYTHONPATH=src python -m benchmarks.report run-report run1.ndjson ...
 """
 import json
 import sys
+
+USAGE = (
+    "usage: python -m benchmarks.report <dryrun_results.json>\n"
+    "       python -m benchmarks.report run-report <telemetry.ndjson> [...]")
 
 
 def fmt_bytes(b):
@@ -13,31 +27,59 @@ def fmt_bytes(b):
 
 
 def render(path: str) -> str:
-    rows = json.load(open(path))
+    with open(path) as fh:
+        rows = json.load(fh)
     out = []
     out.append("| arch | shape | mesh | status | compile_s | HLO GF/dev | "
                "HLO GB/dev | coll GB/dev | args GiB/dev | tc_ms | tm_ms | "
                "tx_ms | dominant | a_dom | a_bound_ms | a_mfu |")
     out.append("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
     for r in rows:
-        if r["status"] != "ok":
-            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
-                       f"{r['status']}: {r.get('reason', r.get('error', ''))[:60]} |"
+        status = r.get("status", "?")
+        if status != "ok":
+            out.append(f"| {r.get('arch', '?')} | {r.get('shape', '?')} | "
+                       f"{r.get('mesh', '?')} | "
+                       f"{status}: {r.get('reason', r.get('error', ''))[:60]} |"
                        + " - |" * 12)
             continue
         out.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
-            f"{r['compile_s']:.0f} | {r['flops_per_device'] / 1e9:.0f} | "
-            f"{r['bytes_per_device'] / 1e9:.0f} | "
-            f"{r['collective_bytes_per_device'] / 1e9:.2f} | "
-            f"{fmt_bytes(r['mem']['argument_bytes'])} | "
-            f"{r['compute_s'] * 1e3:.2f} | {r['memory_s'] * 1e3:.2f} | "
-            f"{r['collective_s'] * 1e3:.2f} | {r['dominant']} | "
+            f"| {r.get('arch', '?')} | {r.get('shape', '?')} | "
+            f"{r.get('mesh', '?')} | ok | "
+            f"{r.get('compile_s', 0):.0f} | "
+            f"{r.get('flops_per_device', 0) / 1e9:.0f} | "
+            f"{r.get('bytes_per_device', 0) / 1e9:.0f} | "
+            f"{r.get('collective_bytes_per_device', 0) / 1e9:.2f} | "
+            f"{fmt_bytes(r.get('mem', {}).get('argument_bytes'))} | "
+            f"{r.get('compute_s', 0) * 1e3:.2f} | "
+            f"{r.get('memory_s', 0) * 1e3:.2f} | "
+            f"{r.get('collective_s', 0) * 1e3:.2f} | "
+            f"{r.get('dominant', '-')} | "
             f"{r.get('a_dominant', '-')} | "
             f"{r.get('a_step_s', 0) * 1e3:.2f} | "
             f"{r.get('a_mfu_bound', 0):.2f} |")
     return "\n".join(out)
 
 
+def render_run_report(paths) -> str:
+    """Markdown run report over telemetry NDJSON logs (``repro.obs``)."""
+    from repro.obs import RunReport, render_markdown
+    reports = [RunReport.from_ndjson(p) for p in paths]
+    return render_markdown(reports)
+
+
+def main(argv) -> int:
+    if len(argv) < 2:
+        print(USAGE, file=sys.stderr)
+        return 2
+    if argv[1] == "run-report":
+        if len(argv) < 3:
+            print(USAGE, file=sys.stderr)
+            return 2
+        print(render_run_report(argv[2:]))
+        return 0
+    print(render(argv[1]))
+    return 0
+
+
 if __name__ == "__main__":
-    print(render(sys.argv[1]))
+    sys.exit(main(sys.argv))

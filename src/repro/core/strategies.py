@@ -24,6 +24,7 @@ from repro.core.aggregation import (aggregate_pytrees, delta_pytree,
                                     fedauto_simple_average_weights,
                                     missing_classes)
 from repro.core.weights_qp import heuristic_weights
+from repro.obs.telemetry import beta_row
 
 
 @dataclasses.dataclass
@@ -51,6 +52,16 @@ class RoundContext:
     codecs: Optional[Dict[int, str]] = None        # rung each upload used
     upload_bytes: Optional[Dict[int, float]] = None  # bytes each upload cost
     distortions: Optional[Dict[int, float]] = None   # ‖carry−dec‖/‖carry‖
+    telemetry: Any = None                 # run telemetry hub (repro.obs);
+    #                                       None/falsy = not recording
+
+
+def _record_betas(ctx, rows) -> None:
+    """Forward the weights a strategy *actually applied* to the telemetry
+    hub (``beta_row`` dicts); a no-op when telemetry is off."""
+    tel = getattr(ctx, "telemetry", None)
+    if tel:
+        tel.betas(ctx.rnd, rows)
 
 
 class Strategy:
@@ -92,6 +103,13 @@ class FedAvg(Strategy):
                                        if ctx.connected[i]]
         weights = [beta[0]] + [beta[i + 1] for i in range(len(ctx.connected))
                                if ctx.connected[i]]
+        if getattr(ctx, "telemetry", None):
+            codecs = ctx.codecs or {}
+            dists = ctx.distortions or {}
+            _record_betas(ctx, [beta_row(beta[0], role="server")] + [
+                beta_row(beta[i + 1], client=i, rung=codecs.get(i),
+                         distortion=dists.get(i))
+                for i in range(len(ctx.connected)) if ctx.connected[i]])
         return aggregate_pytrees(models, np.array(weights))
 
 
@@ -138,6 +156,14 @@ class Scaffold(Strategy):
     def aggregate(self, ctx: RoundContext):
         ids = [i for i in range(len(ctx.connected)) if ctx.connected[i]]
         n_conn = max(len(ids), 1)
+        if getattr(ctx, "telemetry", None):
+            codecs = ctx.codecs or {}
+            dists = ctx.distortions or {}
+            # each connected delta enters the global step at global_lr/n
+            _record_betas(ctx, [
+                beta_row(self.global_lr / n_conn, client=i,
+                         rung=codecs.get(i), distortion=dists.get(i))
+                for i in ids])
         if ids:
             deltas = [jax.tree.map(lambda w, g: w.astype(jnp.float32) -
                                    g.astype(jnp.float32),
@@ -198,6 +224,14 @@ class FedLAW(Strategy):
             opt_vars = jax.tree.map(lambda v, gr: v - self.opt_lr * gr, opt_vars, g)
         rho = float(jax.nn.softplus(opt_vars["rho"]))
         beta = np.asarray(jax.nn.softmax(opt_vars["logits"]))
+        if getattr(ctx, "telemetry", None):
+            codecs = ctx.codecs or {}
+            dists = ctx.distortions or {}
+            # the model each client contributes is scaled by rho·β_k
+            _record_betas(ctx, [
+                beta_row(rho * float(beta[k]), client=i, rung=codecs.get(i),
+                         distortion=dists.get(i))
+                for k, i in enumerate(ids)])
         merged = aggregate_pytrees(models, beta)
         return jax.tree.map(lambda w: (rho * w.astype(jnp.float32)).astype(w.dtype),
                             merged)
@@ -232,12 +266,20 @@ class TFAggregation(Strategy):
             self.s = self.selection_probs(ctx)
         eps = np.clip(ctx.eps_estimates, 0.0, 0.999)
         K = ctx.selected.sum()
-        models, weights = [], []
+        models, weights, ids = [], [], []
         for i in range(len(ctx.connected)):
             if ctx.connected[i] and self.s[i] > 0:
                 w = ctx.p[i + 1] / (self.s[i] * (1.0 - eps[i])) / max(K, 1)
                 models.append(ctx.client_models[i])
                 weights.append(w)
+                ids.append(i)
+        if getattr(ctx, "telemetry", None):
+            codecs = ctx.codecs or {}
+            dists = ctx.distortions or {}
+            _record_betas(ctx, [
+                beta_row(w, client=i, rung=codecs.get(i),
+                         distortion=dists.get(i))
+                for w, i in zip(weights, ids)])
         if not models:
             return ctx.global_params
         return aggregate_pytrees(models, np.array(weights))
@@ -282,6 +324,12 @@ class FedExLoRA(Strategy):
             return ctx.global_params
         adapters = [ctx.client_models[i] for i in ids]
         n = len(ids)
+        if getattr(ctx, "telemetry", None):
+            codecs = ctx.codecs or {}
+            dists = ctx.distortions or {}
+            _record_betas(ctx, [
+                beta_row(1.0 / n, client=i, rung=codecs.get(i),
+                         distortion=dists.get(i)) for i in ids])
         avg = aggregate_pytrees(adapters, np.full(n, 1.0 / n))
         # residual per adapted layer: mean(A_i B_i) − Ā B̄
         scaling = runner.lora_cfg.scaling
@@ -356,6 +404,18 @@ class FedAuto(Strategy):
                                                       ctx))
         else:
             beta = fedauto_simple_average_weights(active, 0, comp_model is not None)
+        if getattr(ctx, "telemetry", None):
+            out = [beta_row(beta[0], role="server")]
+            k = 1
+            if comp_model is not None:
+                out.append(beta_row(beta[1], role="comp"))
+                k = 2
+            codecs = ctx.codecs or {}
+            for j, i in enumerate(ids):
+                out.append(beta_row(beta[k + j], client=i, staleness=0,
+                                    rung=codecs.get(i),
+                                    distortion=float(dmap.get(i, 0.0))))
+            _record_betas(ctx, out)
         return aggregate_pytrees(models, beta)
 
 
@@ -398,6 +458,8 @@ class AsyncRoundContext:
     codecs: Optional[Dict[int, str]] = None
     upload_bytes: Optional[Dict[int, float]] = None
     distortions: Optional[Dict[int, float]] = None
+    telemetry: Any = None                 # run telemetry hub (repro.obs);
+    #                                       None/falsy = not recording
 
 
 class AsyncStrategy(Strategy):
@@ -430,7 +492,8 @@ class AsyncStrategy(Strategy):
             server_hist=ctx.server_hist, global_hist=ctx.global_hist,
             runner=ctx.runner, codec=ctx.codec,
             upload_nbytes=ctx.upload_nbytes, codecs=ctx.codecs,
-            upload_bytes=ctx.upload_bytes, distortions=ctx.distortions)
+            upload_bytes=ctx.upload_bytes, distortions=ctx.distortions,
+            telemetry=ctx.telemetry)
         return self.aggregate_async(actx)
 
 
@@ -460,10 +523,19 @@ class FedAsync(AsyncStrategy):
 
     def aggregate_async(self, ctx: AsyncRoundContext):
         w = ctx.global_params
+        rows = [] if getattr(ctx, "telemetry", None) else None
         for arr in ctx.arrivals:
             gamma = self.gamma0 * _staleness_discount(arr.staleness,
                                                       self.discount_a)
             w = self._mix(w, arr.model, gamma)
+            if rows is not None:
+                rows.append(beta_row(gamma, client=arr.client,
+                                     origin_round=arr.origin_round,
+                                     staleness=arr.staleness, rung=arr.codec,
+                                     distortion=arr.distortion))
+        if rows is not None:
+            rows.append(beta_row(self.gamma_server, role="server"))
+            _record_betas(ctx, rows)
         return self._mix(w, ctx.server_model, self.gamma_server)
 
 
@@ -490,15 +562,28 @@ class FedBuff(AsyncStrategy):
             # current global only for fresh arrivals (origin == now)
             delta = (arr.delta if arr.delta is not None
                      else delta_pytree(arr.model, ctx.global_params))
-            self._held.append(
-                (delta, _staleness_discount(arr.staleness, self.discount_a)))
+            self._held.append((
+                delta, _staleness_discount(arr.staleness, self.discount_a),
+                dict(client=arr.client, origin_round=arr.origin_round,
+                     staleness=arr.staleness, rung=arr.codec,
+                     distortion=arr.distortion)))
         server_delta = delta_pytree(ctx.server_model, ctx.global_params)
         deltas = [server_delta]
         discs = [1.0]
-        if len(self._held) >= self.buffer_k:
-            for d, disc in self._held:
+        flush = len(self._held) >= self.buffer_k
+        if flush:
+            for d, disc, _meta in self._held:
                 deltas.append(d)
                 discs.append(disc)
+        if getattr(ctx, "telemetry", None):
+            # each delta's applied step weight: η · disc / |deltas|
+            denom = len(deltas)
+            rows = [beta_row(self.eta / denom, role="server")]
+            if flush:
+                rows.extend(beta_row(self.eta * disc / denom, **meta)
+                            for _d, disc, meta in self._held)
+            _record_betas(ctx, rows)
+        if flush:
             self._held = []
         step = aggregate_pytrees(deltas, np.asarray(discs) / len(deltas))
         return jax.tree.map(
@@ -563,6 +648,19 @@ class FedAutoAsync(AsyncStrategy):
             discount_a=self.discount_a,
             discount_b=_resolve_fidelity_discount(self.fidelity_discount,
                                                   ctx))
+        if getattr(ctx, "telemetry", None):
+            out = [beta_row(beta[0], role="server")]
+            k = 1
+            if comp_model is not None:
+                out.append(beta_row(beta[1], role="comp"))
+                k = 2
+            for j, arr in enumerate(sorted(
+                    ctx.arrivals, key=lambda a: (a.client, a.origin_round))):
+                out.append(beta_row(beta[k + j], client=arr.client,
+                                    origin_round=arr.origin_round,
+                                    staleness=arr.staleness, rung=arr.codec,
+                                    distortion=arr.distortion))
+            _record_betas(ctx, out)
         return aggregate_pytrees(models, beta)
 
 
@@ -571,6 +669,7 @@ class CentralizedPublic(Strategy):
     name = "centralized_public"
 
     def aggregate(self, ctx: RoundContext):
+        _record_betas(ctx, [beta_row(1.0, role="server")])
         return ctx.server_model
 
 

@@ -144,6 +144,10 @@ class AdaptiveCommController:
         self.cap_init = float(self.wire_bits[-1] / self.transfer_budget_s)
         self.cap_min = float(self.wire_bits[0] / self.transfer_budget_s) * 1e-3
         self.cap_max = 1e18
+        # telemetry hub (repro.obs); the runner swaps in a live one per
+        # instrumented run
+        from repro.obs.telemetry import NULL_TELEMETRY
+        self.telemetry = NULL_TELEMETRY
         self.reset()
 
     def reset(self) -> None:
@@ -218,6 +222,16 @@ class AdaptiveCommController:
                 self.n_miss += 1
             self.cap_hat[i] = min(max(self.cap_hat[i], self.cap_min),
                                   self.cap_max)
+        tel = self.telemetry
+        if tel:
+            n_sel = int(np.asarray(selected, dtype=bool).sum())
+            n_landed = sum(
+                1 for i in range(self.n_clients) if bool(selected[i])
+                and events.events[i].met_deadline
+                and math.isfinite(events.events[i].finish_s))
+            tel.counter("adaptive.landed", n_landed)
+            tel.counter("adaptive.missed", n_sel - n_landed)
+            tel.gauge(rnd, "cap_hat_mean_bps", float(self.cap_hat.mean()))
 
     # ------------------------------------------------------------- stats
     def rung_histogram(self) -> Dict[str, int]:

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.fl.comm.codecs import Codec, Payload, make_codec
+from repro.obs.telemetry import NULL_TELEMETRY
 
 
 def fp32_nbytes(template) -> int:
@@ -100,6 +101,10 @@ class CommState:
         # (‖carry − decoded‖/‖carry‖ of the most recent roundtrip; exactly
         # 0.0 for lossless uploads)
         self.last_distortions: Dict[int, float] = {}
+        # telemetry hub (repro.obs); the runner swaps in a live one per
+        # instrumented run — the comm counters are a third, independent
+        # accounting the reconcile cross-check compares against
+        self.telemetry = NULL_TELEMETRY
 
     # -------------------------------------------------------------- sizing
     def codec_named(self, name: str) -> Codec:
@@ -182,9 +187,14 @@ class CommState:
             global_params, decoded)
         # accumulate *simulated* wire bytes (override-scaled), the same unit
         # the deadline simulator, traces, and total_downlink_bytes use
-        self.total_uplink_bytes += self.nbytes_for(codec)
+        nbytes = self.nbytes_for(codec)
+        self.total_uplink_bytes += nbytes
         self.n_encoded += 1
         self.last_distortions[client] = distortion
+        tel = self.telemetry
+        if tel:
+            tel.counter("comm.uploads")
+            tel.counter("comm.upload_bytes", nbytes)
         return recon, payload, distortion
 
     # ----------------------------------------------------------- downlink
@@ -216,6 +226,10 @@ class CommState:
         """
         if self.downlink_codec is None:
             self.total_downlink_bytes += self.download_bytes
+            tel = self.telemetry
+            if tel:
+                tel.counter("comm.broadcasts")
+                tel.counter("comm.download_bytes", self.download_bytes)
             return global_params, self.download_bytes
         nbytes = self.download_bytes
         if self._dl_ref is None:
@@ -234,6 +248,10 @@ class CommState:
                 self._dl_residual = jax.tree.map(jnp.subtract, delta, decoded)
             self._dl_ref = jax.tree.map(jnp.add, self._dl_ref, decoded)
         self.total_downlink_bytes += nbytes
+        tel = self.telemetry
+        if tel:
+            tel.counter("comm.broadcasts")
+            tel.counter("comm.download_bytes", nbytes)
         out = jax.tree.map(lambda ref, g: ref.astype(g.dtype),
                            self._dl_ref, global_params)
         return out, nbytes

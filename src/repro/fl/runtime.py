@@ -78,6 +78,15 @@ class FFTConfig:
     #                                       discount, today's behavior; a
     #                                       strategy's own fidelity_discount
     #                                       knob overrides this)
+    # --- run telemetry (repro.obs) --------------------------------------------
+    telemetry: bool = False               # per-round flight recorder; off =
+    #                                       shared no-op hub, bit-identical
+    #                                       to an uninstrumented run
+    telemetry_log: Optional[str] = None   # NDJSON event-log path (implies
+    #                                       telemetry; observational only —
+    #                                       replay never reads it)
+    telemetry_console: bool = False       # per-round terminal summary line
+    #                                       (implies telemetry)
 
 
 class FFTRunner:
@@ -245,6 +254,11 @@ class FFTRunner:
         self.eps_estimates = np.array([
             c.outage_probability(rate, mc, 200) for c in self.channels])
 
+        # --- run telemetry (repro.obs; per-run hub built by run()) ------------
+        from repro.obs import NULL_TELEMETRY
+        self.telemetry = NULL_TELEMETRY
+        self.report = None                # RunReport of the last telemetry run
+
         # --- jitted kernels ---------------------------------------------------
         self._build_jits()
         self._key = jax.random.fold_in(key, 2)
@@ -397,6 +411,8 @@ class FFTRunner:
         self.comm.reset()                 # error-feedback residuals per run
         if self.controller is not None:
             self.controller.reset()       # capacity estimates per run
+        self.report = None
+        self.telemetry = self._make_telemetry(strategy, rounds)
         tracer = None
         if self.cfg.trace_record:
             from repro.fl.scenarios.trace import TraceRecorder
@@ -431,5 +447,47 @@ class FFTRunner:
         try:
             return self.loop.run(rounds)
         finally:
+            self.telemetry.end_run()
             if tracer is not None:
                 tracer.close()
+
+    def _make_telemetry(self, strategy: Strategy, rounds: int):
+        """Build this run's telemetry hub (a fresh one per run, like the
+        error-feedback residuals) and attach it to every collaborator that
+        emits into it.  Disabled (the default) this is the shared falsy
+        no-op hub — zero per-round work, bit-identical histories."""
+        from repro.obs import (ConsoleSink, NdjsonSink, NULL_TELEMETRY,
+                               RunReport, Telemetry)
+        cfg = self.cfg
+        enabled = bool(cfg.telemetry or cfg.telemetry_log
+                       or cfg.telemetry_console)
+        if enabled:
+            self.report = RunReport()
+            sinks = [self.report]
+            if cfg.telemetry_log:
+                sinks.append(NdjsonSink(cfg.telemetry_log))
+            if cfg.telemetry_console:
+                sinks.append(ConsoleSink())
+            tel = Telemetry(sinks=sinks)
+            tel.start_run({
+                "scenario": self.failure_mode_resolved,
+                "server_mode": cfg.server_mode,
+                "strategy": strategy.name,
+                "codec": cfg.codec,
+                "downlink_codec": self.downlink_codec_resolved,
+                "n_clients": self.n_clients,
+                "k_selected": self.k_selected,
+                "rounds": rounds,
+                "deadline_s": cfg.deadline_s,
+                "tau_max": cfg.tau_max,
+                "seed": cfg.seed})
+        else:
+            tel = NULL_TELEMETRY
+        # observational fan-in points; each holds NULL_TELEMETRY otherwise
+        self.comm.telemetry = tel
+        if self.controller is not None:
+            self.controller.telemetry = tel
+        sim = getattr(self.failures, "sim", None)
+        if sim is not None:
+            sim.telemetry = tel
+        return tel

@@ -128,6 +128,10 @@ class DeadlineSimulator:
         self.hetero_sigma = hetero_sigma
         self.jitter_sigma = jitter_sigma
         self.seed = seed
+        # telemetry hub (repro.obs): counts simulated rounds/heap events;
+        # the runner swaps in a live hub per instrumented run
+        from repro.obs.telemetry import NULL_TELEMETRY
+        self.telemetry = NULL_TELEMETRY
         # Per-client, per-direction payload sizes.  ``model_bytes`` is the
         # symmetric default; a codec-aware runner overrides them via
         # ``set_payload_bytes`` (compressed uploads finish earlier, so
@@ -243,6 +247,10 @@ class DeadlineSimulator:
                 t_download_s=t_dl, t_compute_s=t_cp, t_upload_s=t_ul,
                 finish_s=float(finish[i]), met_deadline=bool(met[i]),
                 cause=cause))
+        tel = self.telemetry
+        if tel:
+            tel.counter("sim.rounds")
+            tel.counter("sim.heap_events", seq)
         # Full-cohort wait (all clients treated as selected); callers that
         # know the actual selection use RoundEvents.server_wait(selected).
         out = RoundEvents(rnd=rnd, deadline_s=deadline, events=events,

@@ -52,6 +52,12 @@ class StalenessBuffer:
         self._seen: Set[Tuple[int, int]] = set()
         self.n_applied = 0
         self.n_evicted = 0
+        # telemetry hub (repro.obs); when live, evictions are additionally
+        # logged as (client, origin_round) pairs for the loop to drain into
+        # resolution events — a ``buffered`` outcome's terminal fate
+        from repro.obs.telemetry import NULL_TELEMETRY
+        self.telemetry = NULL_TELEMETRY
+        self.evictions: List[Tuple[int, int]] = []
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -65,6 +71,8 @@ class StalenessBuffer:
             raise ValueError(f"update {key} pushed twice")
         self._seen.add(key)
         self._entries.append(upd)
+        if self.telemetry:
+            self.telemetry.counter("buffer.pushed")
 
     def collect(self, now_s: float, current_round: int
                 ) -> List[PendingUpdate]:
@@ -76,6 +84,9 @@ class StalenessBuffer:
         for e in self._entries:
             if e.staleness(current_round) > self.tau_max:
                 self.n_evicted += 1
+                if self.telemetry:
+                    self.telemetry.counter("buffer.evicted")
+                    self.evictions.append((e.client, e.origin_round))
             elif e.arrival_s <= now_s:
                 ready.append(e)
             else:
@@ -83,6 +94,8 @@ class StalenessBuffer:
         self._entries = kept
         ready.sort(key=lambda e: (e.arrival_s, e.client))
         self.n_applied += len(ready)
+        if self.telemetry and ready:
+            self.telemetry.counter("buffer.applied", len(ready))
         return ready
 
     def ready_count(self, now_s: float, current_round: int) -> int:
@@ -97,6 +110,11 @@ class StalenessBuffer:
         the number evicted.  ``collect`` does this implicitly — this is for
         rounds where the server defers aggregation."""
         n0 = len(self._entries)
+        if self.telemetry:
+            for e in self._entries:
+                if e.staleness(current_round) > self.tau_max:
+                    self.telemetry.counter("buffer.evicted")
+                    self.evictions.append((e.client, e.origin_round))
         self._entries = [e for e in self._entries
                          if e.staleness(current_round) <= self.tau_max]
         self.n_evicted += n0 - len(self._entries)
@@ -106,6 +124,11 @@ class StalenessBuffer:
         """Discard every pending upload from ``client`` (e.g. permanent
         churn observed before its stragglers landed). Returns #dropped."""
         n0 = len(self._entries)
+        if self.telemetry:
+            for e in self._entries:
+                if e.client == client:
+                    self.telemetry.counter("buffer.evicted")
+                    self.evictions.append((e.client, e.origin_round))
         self._entries = [e for e in self._entries if e.client != client]
         dropped = n0 - len(self._entries)
         self.n_evicted += dropped
@@ -116,3 +139,4 @@ class StalenessBuffer:
         self._seen.clear()
         self.n_applied = 0
         self.n_evicted = 0
+        self.evictions.clear()

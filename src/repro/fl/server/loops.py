@@ -33,6 +33,9 @@ from repro.core.aggregation import delta_pytree
 from repro.core.strategies import (Arrival, AsyncRoundContext, AsyncStrategy,
                                    RoundContext, Strategy)
 from repro.fl.server.buffer import PendingUpdate, StalenessBuffer
+from repro.obs.telemetry import (AGGREGATED, BUFFERED, EVICTED, LINK_DOWN,
+                                 MISSED_DEADLINE, NOT_SELECTED,
+                                 NULL_TELEMETRY)
 
 
 @dataclasses.dataclass
@@ -52,6 +55,9 @@ class RoundLoop:
         self.tracer = tracer
         self.log = log
         self.clock_s = 0.0
+        # telemetry hub: the runner builds its per-run hub (or the shared
+        # no-op) in run() before constructing the loop
+        self.obs = getattr(runner, "telemetry", NULL_TELEMETRY)
         self.participants_per_round: List[int] = []
         # per-round {client: normalized compression distortion} of the
         # uploads encoded that round (what the trace records and
@@ -154,7 +160,12 @@ class RoundLoop:
                 upload_bytes=np.full(runner.n_clients,
                                      runner.comm.upload_bytes),
                 download_bytes=np.full(runner.n_clients, dl_bytes))
-        t_global, _dl_nbytes = runner.comm.broadcast(runner.global_params)
+        t_global, dl_charged = runner.comm.broadcast(runner.global_params)
+        if self.obs:
+            # the bytes CommState actually charged (which is what
+            # total_downlink_bytes accumulates), not the repriced dl_bytes a
+            # legacy-trace shim may have substituted for the timing model
+            self.obs.gauge(r, "downlink_bytes", float(dl_charged))
         return t_global, assignment, dl_bytes
 
     def _trace_round(self, r, selected, connected, events, up, met_deadline,
@@ -210,14 +221,30 @@ class RoundLoop:
             history.append(acc)
             runner.timeline.append(TimePoint(rnd=r, t_s=self.clock_s,
                                              acc=acc))
+            if self.obs:
+                self.obs.gauge(r, "eval_acc", float(acc))
             if self.log:
                 self.log(r, acc)
 
     def run(self, rounds: int) -> List[float]:
         history: List[float] = []
+        tel = self.obs
         for r in range(1, rounds + 1):
-            self.clock_s += self.run_round(r)
+            tel.begin_round(r)
+            duration = self.run_round(r)
+            self.clock_s += duration
+            if tel:
+                comm = self.runner.comm
+                tel.gauge(r, "server_wait_s", float(duration))
+                tel.gauge(r, "clock_s", float(self.clock_s))
+                tel.gauge(r, "participants",
+                          float(self.participants_per_round[-1]))
+                tel.gauge(r, "cum_uplink_bytes",
+                          float(comm.total_uplink_bytes))
+                tel.gauge(r, "cum_downlink_bytes",
+                          float(comm.total_downlink_bytes))
             self._maybe_eval(r, rounds, history)
+            tel.end_round(r)
         return history
 
     def run_round(self, r: int) -> float:
@@ -254,6 +281,27 @@ class SyncRoundLoop(RoundLoop):
             nbytes_used[int(i)] = nbytes
             distortions[int(i)] = dist
         self.distortion_history.append(dict(distortions))
+        tel = self.obs
+        if tel:
+            tel.gauge(r, "selected", float(selected.sum()))
+            for i in range(runner.n_clients):
+                if not selected[i]:
+                    tel.client_outcome(r, i, NOT_SELECTED)
+                elif not up[i]:
+                    tel.client_outcome(
+                        r, i, LINK_DOWN,
+                        detail=(events.events[i].cause
+                                if events is not None else None))
+                elif not met_deadline[i]:
+                    never = (events is not None and
+                             not math.isfinite(events.events[i].finish_s))
+                    tel.client_outcome(r, i, MISSED_DEADLINE,
+                                       detail="never_lands" if never else None)
+                else:
+                    tel.client_outcome(r, i, AGGREGATED,
+                                       rung=codecs_used.get(int(i)),
+                                       upload_bytes=nbytes_used.get(int(i)),
+                                       distortion=distortions.get(int(i)))
         # trace written after the uploads, so each client row carries the
         # upload's measured distortion alongside its rung and byte count
         self._trace_round(r, selected, connected, events, up, met_deadline,
@@ -274,7 +322,7 @@ class SyncRoundLoop(RoundLoop):
             codec=(None if assignment else runner.comm.codec.name),
             upload_nbytes=(None if assignment else runner.comm.upload_bytes),
             codecs=codecs_used, upload_bytes=nbytes_used,
-            distortions=distortions)
+            distortions=distortions, telemetry=self.obs)
         runner.global_params = strategy.aggregate(ctx)
         return self._round_duration(selected, connected, events)
 
@@ -297,6 +345,7 @@ class AsyncRoundLoop(RoundLoop):
                  buffered: bool = False):
         super().__init__(runner, strategy, tracer=tracer, log=log)
         self.buffer = StalenessBuffer(runner.cfg.tau_max)
+        self.buffer.telemetry = self.obs
         self.buffered = buffered
         self.n_unreachable = 0
         self.staleness_applied: List[int] = []
@@ -323,6 +372,8 @@ class AsyncRoundLoop(RoundLoop):
         t_start = self.clock_s
         horizon_s = cfg.deadline_s * (cfg.tau_max + 1)
         distortions: Dict[int, float] = {}
+        tel = self.obs
+        pushed: Dict[int, PendingUpdate] = {}   # this round's buffer pushes
         for i in np.where(selected & up)[0]:
             e = events.events[int(i)]
             if not math.isfinite(e.finish_s):
@@ -350,11 +401,14 @@ class AsyncRoundLoop(RoundLoop):
             # snapshot; skipping it elsewhere halves the buffer's memory.
             delta = (delta_pytree(m, t_global)
                      if getattr(strategy, "wants_delta", False) else None)
-            self.buffer.push(PendingUpdate(
+            upd = PendingUpdate(
                 client=int(i), origin_round=r,
                 arrival_s=t_start + float(e.finish_s), model=m, delta=delta,
                 origin_version=self.version, codec=cname,
-                upload_nbytes=nbytes, distortion=dist))
+                upload_nbytes=nbytes, distortion=dist)
+            self.buffer.push(upd)
+            if tel:
+                pushed[int(i)] = upd
         self.distortion_history.append(dict(distortions))
         # trace written after the uploads, so each client row carries the
         # upload's measured distortion alongside its rung and byte count
@@ -374,6 +428,8 @@ class AsyncRoundLoop(RoundLoop):
             # advance the clock, age the buffer, keep the global model
             self.buffer.evict(r)
             self.participants_per_round.append(0)
+            if tel:
+                self._emit_async_outcomes(r, selected, up, events, pushed, {})
             return duration
 
         arrivals = [Arrival(client=p.client, origin_round=p.origin_round,
@@ -385,12 +441,62 @@ class AsyncRoundLoop(RoundLoop):
                     for p in self.buffer.collect(now, r)]
         self.staleness_applied.extend(a.staleness for a in arrivals)
         self.participants_per_round.append(len(arrivals))
+        if tel:
+            self._emit_async_outcomes(
+                r, selected, up, events, pushed,
+                {(a.client, a.origin_round): a for a in arrivals})
         server_model = runner.run_local(t_global, runner.public_x,
                                         runner.public_y, r)
         runner.global_params = self._aggregate(r, now, t_global, server_model,
                                                selected, arrivals)
         self.version += 1
         return duration
+
+    def _emit_async_outcomes(self, r, selected, up, events, pushed,
+                             collected) -> None:
+        """One terminal outcome per (round, client), async semantics: this
+        round's buffer pushes are ``aggregated`` when collected within the
+        same round, else provisionally ``buffered`` (upgraded later by a
+        resolution event); selected-and-up clients that never pushed either
+        never land at all (``missed_deadline``/never_lands) or could not
+        land inside the staleness horizon (``evicted``/unreachable).  Past
+        rounds' collected arrivals and the buffer's horizon evictions are
+        forwarded as resolution events against their origin round."""
+        tel = self.obs
+        tel.gauge(r, "selected", float(selected.sum()))
+        for a in collected.values():
+            if a.origin_round != r:
+                tel.resolve(a.origin_round, a.client, AGGREGATED,
+                            staleness=int(a.staleness), applied_round=r)
+        for client, origin in self.buffer.evictions:
+            tel.resolve(origin, client, EVICTED, applied_round=r)
+        self.buffer.evictions.clear()
+        for i in range(self.runner.n_clients):
+            if not selected[i]:
+                tel.client_outcome(r, i, NOT_SELECTED)
+            elif not up[i]:
+                tel.client_outcome(r, i, LINK_DOWN,
+                                   detail=events.events[i].cause)
+            elif i in pushed:
+                upd = pushed[i]
+                a = collected.get((i, r))
+                if a is not None:
+                    tel.client_outcome(r, i, AGGREGATED,
+                                       staleness=int(a.staleness),
+                                       rung=upd.codec,
+                                       upload_bytes=upd.upload_nbytes,
+                                       distortion=upd.distortion)
+                else:
+                    tel.client_outcome(r, i, BUFFERED, rung=upd.codec,
+                                       upload_bytes=upd.upload_nbytes,
+                                       distortion=upd.distortion)
+            else:
+                e = events.events[i]
+                if not math.isfinite(e.finish_s):
+                    tel.client_outcome(r, i, MISSED_DEADLINE,
+                                       detail="never_lands")
+                else:
+                    tel.client_outcome(r, i, EVICTED, detail="unreachable")
 
     def _aggregate(self, r, now, t_global, server_model, selected, arrivals):
         runner, strategy = self.runner, self.strategy
@@ -413,7 +519,7 @@ class AsyncRoundLoop(RoundLoop):
                 global_hist=runner.global_hist, runner=runner,
                 codec=static_codec, upload_nbytes=static_nbytes,
                 codecs=codecs, upload_bytes=upload_bytes,
-                distortions=distortions)
+                distortions=distortions, telemetry=self.obs)
             return strategy.aggregate_async(ctx)
         # Synchronous strategy under the async server: present the freshest
         # landed update per client as this round's cohort (staleness is
@@ -440,7 +546,8 @@ class AsyncRoundLoop(RoundLoop):
             upload_bytes={c: a.upload_nbytes for c, a in freshest.items()
                           if a.upload_nbytes is not None},
             distortions={c: float(a.distortion)
-                         for c, a in freshest.items()})
+                         for c, a in freshest.items()},
+            telemetry=self.obs)
         return strategy.aggregate(ctx)
 
 

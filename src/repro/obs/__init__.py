@@ -1,0 +1,20 @@
+"""Run telemetry subsystem: per-round flight recorder with drop-cause
+attribution, counters/timers, pluggable sinks, and a report renderer.
+
+Enable with ``FFTConfig.telemetry=True`` (off by default — the disabled
+path is a falsy no-op hub and changes nothing about a run); add
+``telemetry_log=<path>`` for a schema-versioned NDJSON event log and
+``telemetry_console=True`` for a per-round terminal summary line.  After
+``runner.run(...)`` the in-memory flight record is ``runner.report``
+(a ``RunReport``); ``reconcile(runner.report, runner)`` cross-checks its
+aggregates against the run's own accounting and ``render_markdown`` turns
+reports into the ``benchmarks.report run-report`` tables.
+"""
+from repro.obs.report import (ReconcileError, reconcile,  # noqa: F401
+                              render_markdown)
+from repro.obs.sinks import (ConsoleSink, NdjsonSink, RunReport,  # noqa: F401
+                             Sink, TELEMETRY_SCHEMA, TELEMETRY_VERSION)
+from repro.obs.telemetry import (AGGREGATED, BUFFERED,  # noqa: F401
+                                 EVICTED, LINK_DOWN, MISSED_DEADLINE,
+                                 NOT_SELECTED, NULL_TELEMETRY, OUTCOMES,
+                                 NullTelemetry, Telemetry, beta_row)

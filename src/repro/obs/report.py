@@ -1,0 +1,173 @@
+"""Run-report rendering and telemetry↔accounting reconciliation.
+
+``render_markdown`` turns one or more ``RunReport``s (in-memory or loaded
+from NDJSON logs) into the Markdown tables the ``benchmarks.report
+run-report`` mode prints: per-run summary, drop-cause breakdown,
+bytes-vs-participation, and β-mass by staleness and by rung.
+
+``reconcile`` is the cross-check that makes the instrumented numbers
+provably the real ones: telemetry totals must agree with the accounting
+that already existed — ``CommState.total_uplink_bytes`` /
+``total_downlink_bytes``, the loop's ``participants_per_round``, and the
+per-round per-client outcome closure (every client, every round, exactly
+one terminal outcome).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.obs.sinks import RunReport
+from repro.obs.telemetry import AGGREGATED, OUTCOMES
+
+
+class ReconcileError(AssertionError):
+    """Telemetry disagrees with the run's own accounting."""
+
+
+def _close(a: float, b: float, *, rtol: float = 1e-9, atol: float = 1e-6
+           ) -> bool:
+    return abs(a - b) <= atol + rtol * max(abs(a), abs(b))
+
+
+def reconcile(report: RunReport, runner) -> Dict[str, float]:
+    """Assert ``report``'s aggregates match ``runner``'s accounting.
+
+    Returns the reconciled numbers; raises ``ReconcileError`` naming the
+    first disagreement.  Checks:
+
+    * outcome closure — per-cause counts sum to ``n_clients × rounds`` and
+      every outcome is from the known vocabulary;
+    * telemetry byte totals equal ``CommState.total_uplink_bytes`` /
+      ``total_downlink_bytes`` (and the hub's own ``comm.*`` counters);
+    * the per-round participants gauge equals the loop's
+      ``participants_per_round``.
+    """
+    counts = report.drop_cause_counts()
+    unknown = set(counts) - set(OUTCOMES)
+    if unknown:
+        raise ReconcileError(f"unknown outcomes recorded: {sorted(unknown)}")
+    total = sum(counts.values())
+    want = report.n_clients * report.n_rounds
+    if total != want:
+        raise ReconcileError(
+            f"outcome counts sum to {total}, expected n_clients × rounds = "
+            f"{report.n_clients} × {report.n_rounds} = {want} ({counts})")
+
+    comm = runner.comm
+    up = report.total_upload_bytes()
+    if not _close(up, comm.total_uplink_bytes):
+        raise ReconcileError(
+            f"telemetry uplink bytes {up} != CommState.total_uplink_bytes "
+            f"{comm.total_uplink_bytes}")
+    down = report.total_download_bytes()
+    if not _close(down, comm.total_downlink_bytes):
+        raise ReconcileError(
+            f"telemetry downlink bytes {down} != "
+            f"CommState.total_downlink_bytes {comm.total_downlink_bytes}")
+    counters = report.summary.get("counters", {})
+    for name, truth in (("comm.upload_bytes", comm.total_uplink_bytes),
+                        ("comm.download_bytes", comm.total_downlink_bytes)):
+        if name in counters and not _close(counters[name], truth):
+            raise ReconcileError(
+                f"counter {name} = {counters[name]} != {truth}")
+
+    loop = getattr(runner, "loop", None)
+    if loop is not None:
+        parts = report.participants_per_round()
+        if parts != [int(p) for p in loop.participants_per_round]:
+            raise ReconcileError(
+                f"participants gauge {parts} != loop.participants_per_round "
+                f"{loop.participants_per_round}")
+
+    return {"outcomes_total": float(total), "uplink_bytes": up,
+            "downlink_bytes": down,
+            "aggregated": float(counts[AGGREGATED])}
+
+
+# ---------------------------------------------------------------------------
+# Markdown rendering
+# ---------------------------------------------------------------------------
+def _table(header: Sequence[str], rows: Sequence[Sequence[str]]) -> str:
+    out = ["| " + " | ".join(header) + " |",
+           "|" + "---|" * len(header)]
+    for row in rows:
+        out.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(out)
+
+
+def _fmt(x, digits=2) -> str:
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if math.isnan(x):
+            return "-"
+        return f"{x:.{digits}f}"
+    return str(x)
+
+
+def render_markdown(reports: List[RunReport],
+                    labels: Optional[List[str]] = None) -> str:
+    """Markdown run report over one or more telemetry ``RunReport``s."""
+    labels = labels or [r.label() for r in reports]
+    sections = ["# Run telemetry report", ""]
+
+    rows = []
+    for lab, rep in zip(labels, reports):
+        rows.append([
+            lab, rep.n_rounds, rep.n_clients,
+            _fmt(rep.final_accuracy(), 4),
+            _fmt(rep.mean_participants()),
+            _fmt(rep.mean_distortion(), 3),
+            _fmt(rep.total_upload_bytes() / 1e6),
+            _fmt(rep.total_download_bytes() / 1e6)])
+    sections += ["## Runs", "", _table(
+        ["run", "rounds", "clients", "final_acc", "mean_participants",
+         "mean_distortion", "uplink_MB", "downlink_MB"], rows), ""]
+
+    rows = []
+    for lab, rep in zip(labels, reports):
+        counts = rep.drop_cause_counts()
+        rows.append([lab] + [counts[c] for c in OUTCOMES]
+                    + [sum(counts.values())])
+    sections += ["## Drop-cause breakdown", "", _table(
+        ["run"] + list(OUTCOMES) + ["total"], rows), ""]
+
+    rows = []
+    for lab, rep in zip(labels, reports):
+        counts = rep.drop_cause_counts()
+        agg = counts[AGGREGATED]
+        up = rep.total_upload_bytes()
+        rows.append([
+            lab, agg, _fmt(rep.mean_participants()), _fmt(up / 1e6),
+            _fmt(up / 1e3 / agg if agg else None),
+            _fmt((up + rep.total_download_bytes()) / 1e6 /
+                 max(rep.n_rounds, 1))])
+    sections += ["## Bytes vs participation", "", _table(
+        ["run", "aggregated_updates", "mean_participants", "uplink_MB",
+         "KB_per_aggregated_update", "total_MB_per_round"], rows), ""]
+
+    def mass_section(title: str, key: str, sort_key=None) -> List[str]:
+        groups: List = []
+        masses = []
+        for rep in reports:
+            m = rep.beta_mass_by(key)
+            masses.append(m)
+            for g in m:
+                if g not in groups:
+                    groups.append(g)
+        if sort_key is not None:
+            groups.sort(key=sort_key)
+        rows = [[lab] + [_fmt(m.get(g, 0.0), 3) for g in groups]
+                for lab, m in zip(labels, masses)]
+        return [f"## {title}", "", _table(
+            ["run"] + [str(g) for g in groups], rows), ""]
+
+    if any(rep.beta_rows() for rep in reports):
+        sections += mass_section(
+            "β-mass by staleness", "staleness",
+            sort_key=lambda g: (isinstance(g, str), g))
+        sections += mass_section("β-mass by rung", "rung",
+                                 sort_key=lambda g: str(g))
+
+    return "\n".join(sections)

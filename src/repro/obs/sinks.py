@@ -1,0 +1,319 @@
+"""Telemetry sinks: in-memory ``RunReport``, NDJSON event log, console line.
+
+A sink consumes the hub's immutable records; it never feeds anything back
+into the run.  The NDJSON log is schema-versioned and **distinct from the
+replay trace** (``repro.fl.scenarios.trace``): the trace freezes a network
+realization for bit-exact replay, the telemetry log is an observational
+flight recording — replay never reads it.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.obs.telemetry import AGGREGATED, BUFFERED, OUTCOMES
+
+TELEMETRY_SCHEMA = "fft-telemetry"
+TELEMETRY_VERSION = 1
+
+
+def _jnum(x):
+    """JSON-safe number: non-finite floats become strings (JSON has no
+    literals for them); ints and finite floats pass through."""
+    if isinstance(x, float):
+        if math.isinf(x):
+            return "inf" if x > 0 else "-inf"
+        if math.isnan(x):
+            return "nan"
+    return x
+
+
+def _unjnum(x):
+    if x == "inf":
+        return math.inf
+    if x == "-inf":
+        return -math.inf
+    if x == "nan":
+        return math.nan
+    return x
+
+
+def _jsonable(obj):
+    """Recursively make a record JSON-serializable (numpy scalars → Python,
+    non-finite floats → strings)."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return _jnum(float(obj))
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    if isinstance(obj, float):
+        return _jnum(obj)
+    return obj
+
+
+class Sink:
+    """Telemetry consumer interface; every hook is optional."""
+
+    def on_run_start(self, meta: Dict) -> None:
+        pass
+
+    def on_round(self, rec: Dict) -> None:
+        pass
+
+    def on_resolution(self, rec: Dict) -> None:
+        pass
+
+    def on_run_end(self, summary: Dict) -> None:
+        pass
+
+
+class RunReport(Sink):
+    """In-memory flight record of one run, with the derived views the
+    benchmarks and the report renderer read their headline numbers from."""
+
+    def __init__(self):
+        self.meta: Dict[str, Any] = {}
+        self.rounds: List[Dict] = []
+        self.resolutions: List[Dict] = []
+        self.summary: Dict[str, Any] = {"counters": {}, "timers_s": {}}
+
+    # ---------------------------------------------------------------- sink
+    def on_run_start(self, meta: Dict) -> None:
+        self.meta = dict(meta)
+
+    def on_round(self, rec: Dict) -> None:
+        self.rounds.append(rec)
+
+    def on_resolution(self, rec: Dict) -> None:
+        self.resolutions.append(rec)
+
+    def on_run_end(self, summary: Dict) -> None:
+        self.summary = summary
+
+    # ------------------------------------------------------------- loading
+    @classmethod
+    def from_ndjson(cls, path: str) -> "RunReport":
+        """Rebuild a report from an ``NdjsonSink`` event log."""
+        rep = cls()
+        with open(path) as fh:
+            for line_no, line in enumerate(fh, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                kind = rec.get("record")
+                if kind == "run_start":
+                    if (rec.get("schema") != TELEMETRY_SCHEMA
+                            or rec.get("version") != TELEMETRY_VERSION):
+                        raise ValueError(
+                            f"{path}:{line_no}: not a "
+                            f"{TELEMETRY_SCHEMA} v{TELEMETRY_VERSION} log "
+                            f"(got {rec.get('schema')!r} "
+                            f"v{rec.get('version')!r})")
+                    rep.meta = rec.get("meta", {})
+                elif kind == "round":
+                    clients = {int(c["client"]): {
+                        k: _unjnum(v) for k, v in c.items()}
+                        for c in rec.get("clients", [])}
+                    rep.rounds.append({
+                        "round": int(rec["round"]), "clients": clients,
+                        "gauges": {k: _unjnum(v) for k, v in
+                                   rec.get("gauges", {}).items()},
+                        "betas": rec.get("betas", [])})
+                elif kind == "resolution":
+                    rep.resolutions.append(
+                        {k: v for k, v in rec.items() if k != "record"})
+                elif kind == "run_end":
+                    rep.summary = {"counters": rec.get("counters", {}),
+                                   "timers_s": rec.get("timers_s", {})}
+                else:
+                    raise ValueError(
+                        f"{path}:{line_no}: unknown record {kind!r}")
+        return rep
+
+    # ------------------------------------------------------- derived views
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def n_clients(self) -> int:
+        n = self.meta.get("n_clients")
+        if n is not None:
+            return int(n)
+        return max((len(r["clients"]) for r in self.rounds), default=0)
+
+    def final_outcomes(self) -> Dict[tuple, Dict]:
+        """``(round, client) → record`` with buffered records upgraded by
+        their resolution events — the terminal per-client per-round truth.
+        Uploads still in flight at run end legitimately stay ``buffered``.
+        """
+        out = {}
+        for rnd_rec in self.rounds:
+            r = rnd_rec["round"]
+            for c, rec in rnd_rec["clients"].items():
+                out[(r, int(c))] = dict(rec)
+        for res in self.resolutions:
+            key = (int(res["origin_round"]), int(res["client"]))
+            rec = out.get(key)
+            if rec is None:
+                raise ValueError(f"resolution for unknown record {key}")
+            if rec["outcome"] != BUFFERED:
+                raise ValueError(
+                    f"resolution for {key} but its outcome is "
+                    f"{rec['outcome']!r}, not {BUFFERED!r}")
+            rec["outcome"] = res["outcome"]
+            for k in ("staleness", "applied_round"):
+                if k in res:
+                    rec[k] = res[k]
+        return out
+
+    def drop_cause_counts(self) -> Dict[str, int]:
+        counts = {c: 0 for c in OUTCOMES}
+        for rec in self.final_outcomes().values():
+            counts[rec["outcome"]] += 1
+        return counts
+
+    def participants_per_round(self) -> List[int]:
+        return [int(r["gauges"].get("participants", 0)) for r in self.rounds]
+
+    def mean_participants(self) -> float:
+        parts = self.participants_per_round()
+        return float(np.mean(parts)) if parts else 0.0
+
+    def total_upload_bytes(self) -> float:
+        """Simulated uplink bytes summed over every recorded upload —
+        reconciles with ``CommState.total_uplink_bytes``."""
+        return float(math.fsum(
+            rec["upload_bytes"]
+            for r in self.rounds for rec in r["clients"].values()
+            if rec.get("upload_bytes") is not None))
+
+    def total_download_bytes(self) -> float:
+        """Broadcast bytes summed over rounds — reconciles with
+        ``CommState.total_downlink_bytes``."""
+        return float(math.fsum(r["gauges"].get("downlink_bytes", 0.0)
+                               for r in self.rounds))
+
+    def accuracy_curve(self) -> List[tuple]:
+        """``(round, accuracy)`` for every evaluated round."""
+        return [(r["round"], r["gauges"]["eval_acc"]) for r in self.rounds
+                if "eval_acc" in r["gauges"]]
+
+    def final_accuracy(self) -> Optional[float]:
+        curve = self.accuracy_curve()
+        return curve[-1][1] if curve else None
+
+    def mean_distortion(self) -> float:
+        """Mean recorded per-upload compression distortion (same definition
+        as ``repro.fl.metrics.mean_distortion`` over the loop's history)."""
+        vals = [rec["distortion"]
+                for r in self.rounds for rec in r["clients"].values()
+                if rec.get("distortion") is not None]
+        return float(np.mean(vals)) if vals else 0.0
+
+    def beta_rows(self, rnd: Optional[int] = None) -> List[Dict]:
+        if rnd is None:
+            return [row for r in self.rounds for row in r["betas"]]
+        for r in self.rounds:
+            if r["round"] == rnd:
+                return list(r["betas"])
+        return []
+
+    def beta_mass_by(self, key: str) -> Dict[Any, float]:
+        """Total applied β mass grouped by ``key`` (``"staleness"``,
+        ``"rung"``, or ``"role"``); non-client rows group under their role.
+        Normalized to fractions of the total recorded mass."""
+        mass: Dict[Any, float] = {}
+        for row in self.beta_rows():
+            if key == "role" or row.get("role") != "client":
+                g = row.get("role", "client")
+            else:
+                g = row.get(key)
+                if g is None:
+                    g = 0 if key == "staleness" else "?"
+            mass[g] = mass.get(g, 0.0) + float(row["beta"])
+        tot = sum(mass.values())
+        if tot > 0:
+            mass = {k: v / tot for k, v in mass.items()}
+        return mass
+
+    def rung_histogram(self) -> Dict[str, int]:
+        """Uploads per codec rung over the whole run (every outcome that
+        shipped bytes: aggregated, buffered, or later evicted)."""
+        hist: Dict[str, int] = {}
+        for r in self.rounds:
+            for rec in r["clients"].values():
+                rung = rec.get("rung")
+                if rung is not None:
+                    hist[rung] = hist.get(rung, 0) + 1
+        return hist
+
+    def label(self) -> str:
+        """Short human label for multi-run tables."""
+        m = self.meta
+        parts = [str(m.get(k)) for k in ("scenario", "server_mode", "codec",
+                                         "strategy") if m.get(k)]
+        return "/".join(parts) if parts else "run"
+
+
+class NdjsonSink(Sink):
+    """Append-only, schema-versioned NDJSON event-log writer.
+
+    One line per event, in emission order: ``run_start``, then per round a
+    ``round`` record (interleaved with any ``resolution`` events for past
+    rounds), finally ``run_end``.  Opens fresh (truncates) so one file
+    always holds exactly one run.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = open(path, "w")
+
+    def _write(self, rec: Dict) -> None:
+        self._fh.write(json.dumps(_jsonable(rec)) + "\n")
+
+    def on_run_start(self, meta: Dict) -> None:
+        self._write({"record": "run_start", "schema": TELEMETRY_SCHEMA,
+                     "version": TELEMETRY_VERSION, "meta": meta})
+        self._fh.flush()
+
+    def on_round(self, rec: Dict) -> None:
+        clients = [rec["clients"][c] for c in sorted(rec["clients"])]
+        self._write({"record": "round", "round": rec["round"],
+                     "gauges": rec["gauges"], "betas": rec["betas"],
+                     "clients": clients})
+        self._fh.flush()
+
+    def on_resolution(self, rec: Dict) -> None:
+        self._write({"record": "resolution", **rec})
+
+    def on_run_end(self, summary: Dict) -> None:
+        self._write({"record": "run_end", **summary})
+        self._fh.close()
+
+
+class ConsoleSink(Sink):
+    """One terminal summary line per round."""
+
+    def on_round(self, rec: Dict) -> None:
+        g = rec["gauges"]
+        causes: Dict[str, int] = {}
+        for c in rec["clients"].values():
+            causes[c["outcome"]] = causes.get(c["outcome"], 0) + 1
+        drops = ",".join(f"{k}={v}" for k, v in sorted(causes.items())
+                         if k != AGGREGATED and v)
+        acc = (f" acc={g['eval_acc']:.4f}" if "eval_acc" in g else "")
+        print(f"[obs] r={rec['round']:>3} "
+              f"agg={causes.get(AGGREGATED, 0)}/{len(rec['clients'])} "
+              f"[{drops}] wait={g.get('server_wait_s', 0.0):.2f}s "
+              f"up={g.get('cum_uplink_bytes', 0.0) / 1e6:.2f}MB "
+              f"down={g.get('cum_downlink_bytes', 0.0) / 1e6:.2f}MB{acc}")

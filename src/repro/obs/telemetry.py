@@ -1,0 +1,278 @@
+"""Run-wide telemetry hub: counters, gauges, timers, per-round events.
+
+The paper's convergence claim is *per-realization* — FedAuto converges for
+each individual realization of connection failures — so understanding a run
+means seeing, round by round, exactly why each client did or did not
+contribute and at what weight, staleness, and fidelity.  The ``Telemetry``
+hub is the one place that evidence lands: the round loops, the scenario
+engine, the comm subsystem, the staleness buffer, the adaptive controller,
+and the strategies all emit into it, and pluggable sinks
+(``repro.obs.sinks``) consume immutable per-round records.
+
+Drop-cause attribution: every client has exactly **one terminal outcome per
+round** (enforced — a second ``client_outcome`` for the same ``(round,
+client)`` raises):
+
+  ``not_selected``     the server never contacted the client this round
+  ``link_down``        selected, but the scenario reported the link down
+                       (``detail`` carries the refined cause: ``ap_outage``,
+                       ``handover``, ``churned``, …)
+  ``missed_deadline``  selected and up, but the upload landed too late for a
+                       synchronous server (or never lands at all)
+  ``buffered``         async modes: the upload is parked in the
+                       ``StalenessBuffer``; a later ``resolution`` event
+                       upgrades the outcome to ``aggregated`` (with the
+                       staleness it was applied at) or ``evicted``
+  ``evicted``          the upload aged past the staleness horizon (or could
+                       never physically land inside it — ``detail``
+                       ``unreachable``) and was dropped
+  ``aggregated``       the upload reached the strategy's aggregation step
+
+so per-cause counts over a finished run sum to ``n_clients × rounds``
+(still-in-flight uploads at run end legitimately remain ``buffered``).
+
+The hub is **observational**: it never feeds back into the run (replay
+consumes the scenario trace, never the telemetry log), and the disabled
+path is a shared ``NULL_TELEMETRY`` no-op whose methods do nothing and
+which is *falsy* — instrumentation sites guard any record-building work
+with ``if tel:`` so a telemetry-off run executes no extra code beyond the
+no-op call itself.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+# ---------------------------------------------------------------------------
+# drop-cause / outcome vocabulary
+# ---------------------------------------------------------------------------
+NOT_SELECTED = "not_selected"
+LINK_DOWN = "link_down"
+MISSED_DEADLINE = "missed_deadline"
+BUFFERED = "buffered"
+EVICTED = "evicted"
+AGGREGATED = "aggregated"
+
+OUTCOMES = (NOT_SELECTED, LINK_DOWN, MISSED_DEADLINE, BUFFERED, EVICTED,
+            AGGREGATED)
+# a buffered upload can only ever resolve to one of these
+RESOLUTIONS = (AGGREGATED, EVICTED)
+
+
+def beta_row(beta: float, *, role: str = "client",
+             client: Optional[int] = None,
+             origin_round: Optional[int] = None,
+             staleness: Optional[int] = None,
+             rung: Optional[str] = None,
+             distortion: Optional[float] = None) -> Dict[str, Any]:
+    """One participant's actually-applied aggregation weight.
+
+    ``role`` is ``"server"``, ``"comp"`` (compensatory model), or
+    ``"client"``; client rows carry the id and, when known, the origin
+    round, staleness, codec rung, and distortion the weight was computed
+    under — the renderer's β-mass-by-staleness/rung tables group on these.
+    """
+    row: Dict[str, Any] = {"role": role, "beta": float(beta)}
+    if client is not None:
+        row["client"] = int(client)
+    if origin_round is not None:
+        row["origin_round"] = int(origin_round)
+    if staleness is not None:
+        row["staleness"] = int(staleness)
+    if rung is not None:
+        row["rung"] = str(rung)
+    if distortion is not None:
+        row["distortion"] = float(distortion)
+    return row
+
+
+class _NullTimer:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_TIMER = _NullTimer()
+
+
+class NullTelemetry:
+    """Disabled telemetry: every method is a no-op and the object is falsy,
+    so ``if tel:``-guarded record building never runs.  One shared instance
+    (``NULL_TELEMETRY``) is the default everywhere."""
+
+    enabled = False
+
+    def __bool__(self) -> bool:
+        return False
+
+    def start_run(self, meta: Optional[Dict] = None) -> None:
+        pass
+
+    def begin_round(self, rnd: int) -> None:
+        pass
+
+    def client_outcome(self, rnd: int, client: int, outcome: str,
+                       **fields) -> None:
+        pass
+
+    def resolve(self, origin_round: int, client: int, outcome: str,
+                staleness: Optional[int] = None,
+                applied_round: Optional[int] = None) -> None:
+        pass
+
+    def betas(self, rnd: int, rows) -> None:
+        pass
+
+    def gauge(self, rnd: int, name: str, value: float) -> None:
+        pass
+
+    def counter(self, name: str, inc: float = 1) -> None:
+        pass
+
+    def timer(self, name: str):
+        return _NULL_TIMER
+
+    def end_round(self, rnd: int) -> None:
+        pass
+
+    def end_run(self) -> None:
+        pass
+
+
+NULL_TELEMETRY = NullTelemetry()
+
+
+class _Timer:
+    __slots__ = ("_tel", "_name", "_t0")
+
+    def __init__(self, tel: "Telemetry", name: str):
+        self._tel = tel
+        self._name = name
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._tel.timers_s[self._name] = (
+            self._tel.timers_s.get(self._name, 0.0) +
+            (time.perf_counter() - self._t0))
+        return False
+
+
+class Telemetry:
+    """Enabled telemetry hub.
+
+    Protocol (driven by ``RoundLoop.run``): ``start_run(meta)`` once, then
+    per round ``begin_round(r)`` → any number of ``client_outcome`` /
+    ``resolve`` / ``betas`` / ``gauge`` / ``counter`` / ``timer`` calls →
+    ``end_round(r)``, then ``end_run()``.  ``client_outcome`` enforces the
+    exactly-one-terminal-outcome-per-(round, client) invariant;
+    ``resolve`` events are forwarded to sinks immediately (they refer to a
+    *past* round's record), everything else is staged and flushed as one
+    immutable round record at ``end_round``.
+    """
+
+    enabled = True
+
+    def __init__(self, sinks=()):
+        self.sinks = list(sinks)
+        self.meta: Dict[str, Any] = {}
+        self.counters: Dict[str, float] = {}
+        self.timers_s: Dict[str, float] = {}
+        self._round: Optional[Dict[str, Any]] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start_run(self, meta: Optional[Dict] = None) -> None:
+        self.meta = dict(meta or {})
+        for s in self.sinks:
+            s.on_run_start(self.meta)
+
+    def begin_round(self, rnd: int) -> None:
+        if self._round is not None:
+            raise ValueError(
+                f"begin_round({rnd}) before end_round({self._round['round']})")
+        self._round = {"round": int(rnd), "clients": {}, "gauges": {},
+                       "betas": []}
+
+    def _staged(self, rnd: int) -> Dict[str, Any]:
+        if self._round is None or self._round["round"] != int(rnd):
+            cur = None if self._round is None else self._round["round"]
+            raise ValueError(f"telemetry event for round {rnd} but staged "
+                             f"round is {cur}")
+        return self._round
+
+    # --------------------------------------------------------------- events
+    def client_outcome(self, rnd: int, client: int, outcome: str,
+                       **fields) -> None:
+        """Record client ``client``'s terminal outcome for round ``rnd``.
+
+        ``fields``: ``detail`` (refined cause), ``rung`` (codec name),
+        ``upload_bytes``, ``download_bytes``, ``distortion``, ``staleness``
+        — absent fields are simply not recorded."""
+        if outcome not in OUTCOMES:
+            raise ValueError(f"unknown outcome {outcome!r} "
+                             f"(known: {OUTCOMES})")
+        staged = self._staged(rnd)
+        client = int(client)
+        if client in staged["clients"]:
+            raise ValueError(
+                f"round {rnd}: client {client} already has outcome "
+                f"{staged['clients'][client]['outcome']!r}; every client has "
+                f"exactly one terminal outcome per round")
+        rec: Dict[str, Any] = {"client": client, "outcome": outcome}
+        for k, v in fields.items():
+            if v is not None:
+                rec[k] = v
+        staged["clients"][client] = rec
+
+    def resolve(self, origin_round: int, client: int, outcome: str,
+                staleness: Optional[int] = None,
+                applied_round: Optional[int] = None) -> None:
+        """A previously-``buffered`` upload reached its terminal state."""
+        if outcome not in RESOLUTIONS:
+            raise ValueError(f"resolution outcome must be one of "
+                             f"{RESOLUTIONS}, got {outcome!r}")
+        rec = {"origin_round": int(origin_round), "client": int(client),
+               "outcome": outcome}
+        if staleness is not None:
+            rec["staleness"] = int(staleness)
+        if applied_round is not None:
+            rec["applied_round"] = int(applied_round)
+        for s in self.sinks:
+            s.on_resolution(rec)
+
+    def betas(self, rnd: int, rows: List[Dict[str, Any]]) -> None:
+        """The aggregation weights a strategy actually applied this round
+        (``beta_row`` dicts).  Extends — a strategy that aggregates more
+        than once per round (or a deferred flush) appends further rows."""
+        self._staged(rnd)["betas"].extend(rows)
+
+    def gauge(self, rnd: int, name: str, value: float) -> None:
+        self._staged(rnd)["gauges"][str(name)] = float(value)
+
+    def counter(self, name: str, inc: float = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0.0) + inc
+
+    def timer(self, name: str) -> _Timer:
+        return _Timer(self, name)
+
+    # ------------------------------------------------------------- flushing
+    def end_round(self, rnd: int) -> None:
+        staged = self._staged(rnd)
+        self._round = None
+        for s in self.sinks:
+            s.on_round(staged)
+
+    def end_run(self) -> None:
+        if self._round is not None:
+            # a crashed round still flushes what it staged
+            self.end_round(self._round["round"])
+        summary = {"counters": dict(self.counters),
+                   "timers_s": dict(self.timers_s)}
+        for s in self.sinks:
+            s.on_run_end(summary)

@@ -1,0 +1,90 @@
+"""Unit tests for ``repro.fl.metrics`` (shared run-level metrics)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.fl.metrics import (accuracy_drawdown, distortion_replay_matches,
+                              mean_distortion)
+
+
+# ---------------------------------------------------------------------------
+# accuracy_drawdown
+# ---------------------------------------------------------------------------
+def test_drawdown_basic():
+    # running max 0.5 → dip to 0.1 is a 0.4 drawdown
+    assert accuracy_drawdown([0.5, 0.1, 0.6, 0.55]) == pytest.approx(0.4)
+    # monotone curve never draws down
+    assert accuracy_drawdown([0.1, 0.2, 0.3]) == 0.0
+    assert accuracy_drawdown([]) == 0.0
+    assert accuracy_drawdown([0.7]) == 0.0
+
+
+def test_drawdown_warmup_skips_early_dips_but_max_still_warms():
+    hist = [0.5, 0.1, 0.6, 0.55]
+    # warmup=2 ignores the early dip; the worst counted drawdown is the
+    # final 0.6 → 0.55 dip
+    assert accuracy_drawdown(hist, warmup=2) == pytest.approx(0.05)
+    # the running max warms up over the skipped prefix: a curve that never
+    # re-reaches its early peak still counts the gap after warmup
+    assert accuracy_drawdown([0.9, 0.2, 0.3], warmup=2) == pytest.approx(0.6)
+    # warmup past the end of the curve counts nothing
+    assert accuracy_drawdown(hist, warmup=10) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# mean_distortion
+# ---------------------------------------------------------------------------
+def test_mean_distortion_empty():
+    assert mean_distortion([]) == 0.0
+    # rounds with no uploads contribute nothing (and don't divide by zero)
+    assert mean_distortion([{}, {}]) == 0.0
+
+
+def test_mean_distortion_averages_per_upload():
+    hist = [{0: 0.1, 1: 0.3}, {}, {2: 0.2}]
+    assert mean_distortion(hist) == pytest.approx((0.1 + 0.3 + 0.2) / 3)
+
+
+# ---------------------------------------------------------------------------
+# distortion_replay_matches
+# ---------------------------------------------------------------------------
+class _FakeReplay:
+    """Stub of ReplayFailureModel: round → recorded distortion array."""
+
+    def __init__(self, per_round):
+        self._per_round = per_round
+
+    def distortions(self, rnd):
+        return self._per_round.get(rnd)
+
+
+def test_replay_matches_exact_and_nan_means_absent():
+    rec = {1: np.array([0.1, math.nan, 0.3]),
+           2: np.array([math.nan, 0.0, math.nan])}
+    live = [{0: 0.1, 2: 0.3}, {1: 0.0}]
+    assert distortion_replay_matches(_FakeReplay(rec), live, 2)
+
+
+def test_replay_mismatch_value():
+    rec = {1: np.array([0.1, math.nan])}
+    assert not distortion_replay_matches(
+        _FakeReplay(rec), [{0: 0.1 + 1e-9}], 1)
+
+
+def test_replay_nan_but_live_uploaded():
+    # the trace says client 1 uploaded nothing, the live run has it
+    rec = {1: np.array([0.1, math.nan])}
+    assert not distortion_replay_matches(
+        _FakeReplay(rec), [{0: 0.1, 1: 0.2}], 1)
+
+
+def test_replay_value_but_live_absent():
+    rec = {1: np.array([0.1, 0.2])}
+    assert not distortion_replay_matches(_FakeReplay(rec), [{0: 0.1}], 1)
+
+
+def test_replay_absent_round_record():
+    # a round with no trace record matches only an upload-free live round
+    assert distortion_replay_matches(_FakeReplay({}), [{}], 1)
+    assert not distortion_replay_matches(_FakeReplay({}), [{0: 0.5}], 1)

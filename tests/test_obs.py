@@ -1,0 +1,377 @@
+"""ISSUE-6: run telemetry subsystem (repro.obs).
+
+Acceptance criteria, asserted across server modes × codec families on real
+instrumented runs:
+
+* outcome closure — every client in every round has exactly one terminal
+  outcome, and per-cause counts sum to ``n_clients × rounds``;
+* byte reconciliation — telemetry totals equal
+  ``CommState.total_uplink_bytes`` / ``total_downlink_bytes``;
+* β rows match the weights the strategy actually applied;
+* the NDJSON event log round-trips to the same flight record;
+* the disabled-telemetry path leaves accuracy histories bit-identical.
+
+Plus unit coverage of the hub's invariants (duplicate-outcome rejection,
+resolution upgrades, counters/timers) and the renderer/reconcile helpers.
+"""
+import copy
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.strategies import STRATEGIES
+from repro.core.weights_qp import heuristic_weights
+from repro.fl.runtime import FFTConfig
+from repro.fl.toy import make_toy_runner
+from repro.obs import (AGGREGATED, BUFFERED, EVICTED, LINK_DOWN,
+                       MISSED_DEADLINE, NOT_SELECTED, NULL_TELEMETRY,
+                       OUTCOMES, ConsoleSink, NdjsonSink, ReconcileError,
+                       RunReport, Telemetry, beta_row, reconcile,
+                       render_markdown)
+
+BASE = dict(n_clients=6, k_selected=4, local_steps=2, batch_size=8, lr=0.05,
+            seed=3, eval_every=2, deadline_s=30.0, tau_max=3, buffer_k=2,
+            failure_mode="scenario:bursty_handover")
+TOY = dict(n_samples=300, n_classes=4, image_size=8, public_per_class=10,
+           pretrain_steps=0, seed=3)
+ROUNDS = 5
+
+# (server_mode, codec, strategy): sync/async/buffered × static/adaptive
+COMBOS = [
+    ("sync", "fp32", "fedavg"),
+    ("sync", "qsgd:4", "fedauto"),
+    ("sync", "adaptive:sign1-fp16", "fedauto"),
+    ("async", "fp32", "fedasync"),
+    ("async", "adaptive:sign1-fp16", "fedauto_async"),
+    ("buffered", "qsgd:4", "fedbuff"),
+    ("buffered", "adaptive:sign1-fp16", "fedauto_async"),
+]
+
+
+def _run(mode, codec, strat, tmp_path=None, telemetry=True, rounds=ROUNDS,
+         **over):
+    cfg_kw = dict(BASE, server_mode=mode, codec=codec, telemetry=telemetry,
+                  **over)
+    if tmp_path is not None:
+        slug = codec.replace(":", "_").replace("-", "_")
+        cfg_kw["telemetry_log"] = str(
+            tmp_path / f"{mode}_{strat}_{slug}.ndjson")
+    cfg = FFTConfig(**cfg_kw)
+    runner = make_toy_runner(cfg, **TOY)
+    hist = runner.run(STRATEGIES[strat](), rounds=rounds)
+    return runner, hist
+
+
+@pytest.fixture(scope="module")
+def runs(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("tel")
+    out = {}
+    for mode, codec, strat in COMBOS:
+        out[(mode, codec, strat)] = _run(mode, codec, strat, tmp_path=tmp)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# acceptance: outcome closure + byte reconciliation + NDJSON round-trip
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("combo", COMBOS, ids=lambda c: "/".join(c))
+def test_outcome_closure_and_reconcile(runs, combo):
+    runner, _hist = runs[combo]
+    rep = runner.report
+    assert rep is not None and rep.n_rounds == ROUNDS
+    counts = rep.drop_cause_counts()
+    assert set(counts) == set(OUTCOMES)
+    assert sum(counts.values()) == BASE["n_clients"] * ROUNDS
+    # exactly one terminal outcome per (round, client)
+    assert len(rep.final_outcomes()) == BASE["n_clients"] * ROUNDS
+    nums = reconcile(rep, runner)          # raises ReconcileError on drift
+    assert nums["uplink_bytes"] == pytest.approx(
+        runner.comm.total_uplink_bytes)
+    assert nums["downlink_bytes"] == pytest.approx(
+        runner.comm.total_downlink_bytes)
+
+
+@pytest.mark.parametrize("combo", COMBOS, ids=lambda c: "/".join(c))
+def test_ndjson_roundtrip(runs, combo):
+    runner, _hist = runs[combo]
+    rep2 = RunReport.from_ndjson(runner.cfg.telemetry_log)
+    reconcile(rep2, runner)
+    assert rep2.drop_cause_counts() == runner.report.drop_cause_counts()
+    assert rep2.participants_per_round() == \
+        runner.report.participants_per_round()
+    assert rep2.total_upload_bytes() == pytest.approx(
+        runner.report.total_upload_bytes())
+    c1, c2 = runner.report.accuracy_curve(), rep2.accuracy_curve()
+    assert [r for r, _ in c2] == [r for r, _ in c1]
+    assert [a for _, a in c2] == pytest.approx([a for _, a in c1])
+    assert len(rep2.beta_rows()) == len(runner.report.beta_rows())
+
+
+def test_disabled_path_bit_identical():
+    for mode, codec, strat in [("sync", "qsgd:4", "fedauto"),
+                               ("buffered", "adaptive:sign1-fp16",
+                                "fedauto_async")]:
+        _, h_on = _run(mode, codec, strat, telemetry=True)
+        runner_off, h_off = _run(mode, codec, strat, telemetry=False)
+        assert h_off == h_on
+        assert runner_off.report is None
+        assert runner_off.telemetry is NULL_TELEMETRY
+
+
+# ---------------------------------------------------------------------------
+# acceptance: β rows match the strategy's actually-applied weights
+# ---------------------------------------------------------------------------
+def test_beta_rows_match_fedavg_weights(runs):
+    runner, _ = runs[("sync", "fp32", "fedavg")]
+    rep = runner.report
+    outcomes = rep.final_outcomes()
+    full = runner.k_selected >= runner.n_clients
+    for rnd_rec in rep.rounds:
+        r = rnd_rec["round"]
+        connected = np.array([
+            outcomes[(r, i)]["outcome"] == AGGREGATED
+            for i in range(runner.n_clients)])
+        beta = heuristic_weights(runner.p,
+                                 np.concatenate([[True], connected]),
+                                 server_idx=0, full_participation=full)
+        rows = rnd_rec["betas"]
+        by_client = {row["client"]: row["beta"] for row in rows
+                     if row["role"] == "client"}
+        assert set(by_client) == set(np.where(connected)[0])
+        for i, b in by_client.items():
+            assert b == pytest.approx(float(beta[i + 1]))
+        server = [row["beta"] for row in rows if row["role"] == "server"]
+        assert server == [pytest.approx(float(beta[0]))]
+
+
+@pytest.mark.parametrize("combo", [("sync", "qsgd:4", "fedauto"),
+                                   ("buffered", "adaptive:sign1-fp16",
+                                    "fedauto_async")],
+                         ids=lambda c: "/".join(c))
+def test_beta_rows_simplex_and_cohort(runs, combo):
+    """FedAuto's QP weights live on the simplex; the recorded client rows
+    must be exactly the aggregated cohort of each aggregation step."""
+    runner, _ = runs[combo]
+    rep = runner.report
+    outcomes = rep.final_outcomes()
+    for rnd_rec in rep.rounds:
+        rows = rnd_rec["betas"]
+        if not rows:                        # deferred buffered round
+            assert rnd_rec["gauges"]["participants"] == 0
+            continue
+        assert sum(row["beta"] for row in rows) == pytest.approx(1.0)
+        assert all(row["beta"] >= -1e-12 for row in rows)
+        recorded = {(row.get("origin_round", rnd_rec["round"]),
+                     row["client"])
+                    for row in rows if row["role"] == "client"}
+        aggregated = {
+            (r, c) for (r, c), rec in outcomes.items()
+            if rec["outcome"] == AGGREGATED
+            and rec.get("applied_round", r) == rnd_rec["round"]}
+        assert recorded == aggregated
+
+
+def test_aggregated_betas_carry_rung_and_distortion(runs):
+    runner, _ = runs[("sync", "adaptive:sign1-fp16", "fedauto")]
+    client_rows = [row for row in runner.report.beta_rows()
+                   if row.get("role") == "client"]
+    assert client_rows
+    for row in client_rows:
+        assert row["rung"] in runner.controller.rungs
+        assert 0.0 <= row["distortion"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# full outcome vocabulary on a harsh world (stragglers + evictions)
+# ---------------------------------------------------------------------------
+def test_async_vocabulary_and_resolutions(tmp_path):
+    runner, hist = _run("buffered", "fp32", "fedauto_async",
+                        tmp_path=tmp_path, telemetry=True, rounds=8,
+                        failure_mode="scenario:cross_region",
+                        deadline_s=6.0, model_bytes=8e6, k_selected=5,
+                        seed=7, tau_max=2, buffer_k=3)
+    rep = runner.report
+    reconcile(rep, runner)
+    counts = rep.drop_cause_counts()
+    assert counts[EVICTED] > 0             # unreachable stragglers
+    assert rep.resolutions                 # late arrivals resolved
+    # every resolution upgraded a record that was provisionally buffered
+    raw = {(r["round"], c): rec["outcome"]
+           for r in rep.rounds for c, rec in r["clients"].items()}
+    for res in rep.resolutions:
+        assert raw[(res["origin_round"], res["client"])] == BUFFERED
+        assert res["outcome"] in (AGGREGATED, EVICTED)
+    # unresolved buffered records are still in flight at run end
+    final = rep.final_outcomes()
+    in_flight = [k for k, rec in final.items()
+                 if rec["outcome"] == BUFFERED]
+    assert len(in_flight) == len(runner.loop.buffer)
+    # ndjson round-trip preserves the resolutions
+    rep2 = RunReport.from_ndjson(runner.cfg.telemetry_log)
+    assert rep2.drop_cause_counts() == counts
+    assert len(rep2.resolutions) == len(rep.resolutions)
+
+
+# ---------------------------------------------------------------------------
+# hub unit semantics
+# ---------------------------------------------------------------------------
+def test_hub_one_outcome_per_round_client():
+    tel = Telemetry()
+    tel.start_run({})
+    tel.begin_round(1)
+    tel.client_outcome(1, 0, AGGREGATED)
+    with pytest.raises(ValueError, match="exactly one terminal outcome"):
+        tel.client_outcome(1, 0, NOT_SELECTED)
+    with pytest.raises(ValueError, match="unknown outcome"):
+        tel.client_outcome(1, 1, "vanished")
+    with pytest.raises(ValueError, match="begin_round"):
+        tel.begin_round(2)
+    with pytest.raises(ValueError, match="staged"):
+        tel.client_outcome(7, 1, AGGREGATED)
+    with pytest.raises(ValueError, match="resolution outcome"):
+        tel.resolve(1, 0, NOT_SELECTED)
+
+
+def test_hub_counters_timers_and_null():
+    tel = Telemetry()
+    tel.counter("x")
+    tel.counter("x", 2.5)
+    assert tel.counters["x"] == 3.5
+    with tel.timer("t"):
+        pass
+    assert tel.timers_s["t"] >= 0.0
+    assert not NULL_TELEMETRY and bool(tel)
+    # the null hub accepts the whole protocol as no-ops
+    NULL_TELEMETRY.begin_round(1)
+    NULL_TELEMETRY.client_outcome(1, 0, "anything")
+    with NULL_TELEMETRY.timer("t"):
+        pass
+    NULL_TELEMETRY.end_round(1)
+    NULL_TELEMETRY.end_run()
+
+
+def test_report_resolution_upgrade_and_guards():
+    rep = RunReport()
+    tel = Telemetry(sinks=[rep])
+    tel.start_run({"n_clients": 2})
+    tel.begin_round(1)
+    tel.client_outcome(1, 0, BUFFERED)
+    tel.client_outcome(1, 1, NOT_SELECTED)
+    tel.end_round(1)
+    tel.begin_round(2)
+    tel.client_outcome(2, 0, NOT_SELECTED)
+    tel.client_outcome(2, 1, NOT_SELECTED)
+    tel.resolve(1, 0, AGGREGATED, staleness=1, applied_round=2)
+    tel.end_round(2)
+    tel.end_run()
+    final = rep.final_outcomes()
+    assert final[(1, 0)]["outcome"] == AGGREGATED
+    assert final[(1, 0)]["staleness"] == 1
+    # a resolution against a non-buffered record is rejected
+    bad = copy.deepcopy(rep)
+    bad.resolutions.append({"origin_round": 1, "client": 1,
+                            "outcome": EVICTED})
+    with pytest.raises(ValueError, match="not 'buffered'"):
+        bad.final_outcomes()
+    bad2 = copy.deepcopy(rep)
+    bad2.resolutions.append({"origin_round": 9, "client": 0,
+                             "outcome": EVICTED})
+    with pytest.raises(ValueError, match="unknown record"):
+        bad2.final_outcomes()
+
+
+def test_reconcile_flags_drift(runs):
+    runner, _ = runs[("sync", "qsgd:4", "fedauto")]
+    rep = copy.deepcopy(runner.report)
+    # tamper with one upload's byte count -> byte reconciliation must fail
+    for r in rep.rounds:
+        for rec in r["clients"].values():
+            if rec.get("upload_bytes"):
+                rec["upload_bytes"] += 1e6
+                break
+        else:
+            continue
+        break
+    with pytest.raises(ReconcileError, match="uplink"):
+        reconcile(rep, runner)
+    # drop one client record -> outcome closure must fail
+    rep2 = copy.deepcopy(runner.report)
+    clients = rep2.rounds[0]["clients"]
+    clients.pop(next(iter(clients)))
+    with pytest.raises(ReconcileError, match="outcome counts"):
+        reconcile(rep2, runner)
+
+
+def test_ndjson_nonfinite_roundtrip(tmp_path):
+    path = str(tmp_path / "nf.ndjson")
+    rep = RunReport()
+    tel = Telemetry(sinks=[rep, NdjsonSink(path)])
+    tel.start_run({"n_clients": 1})
+    tel.begin_round(1)
+    tel.client_outcome(1, 0, MISSED_DEADLINE, detail="never_lands",
+                       finish_s=math.inf)
+    tel.gauge(1, "nan_gauge", math.nan)
+    tel.end_round(1)
+    tel.end_run()
+    rep2 = RunReport.from_ndjson(path)
+    rec = rep2.final_outcomes()[(1, 0)]
+    assert rec["finish_s"] == math.inf
+    assert math.isnan(rep2.rounds[0]["gauges"]["nan_gauge"])
+
+
+def test_ndjson_rejects_foreign_schema(tmp_path):
+    path = tmp_path / "bad.ndjson"
+    path.write_text('{"record": "run_start", "schema": "other", '
+                    '"version": 1, "meta": {}}\n')
+    with pytest.raises(ValueError, match="not a fft-telemetry"):
+        RunReport.from_ndjson(str(path))
+
+
+# ---------------------------------------------------------------------------
+# renderer + console sink
+# ---------------------------------------------------------------------------
+def test_render_markdown_tables(runs):
+    reports, labels = [], []
+    for combo in COMBOS[:3]:
+        reports.append(runs[combo][0].report)
+        labels.append("/".join(combo))
+    md = render_markdown(reports, labels)
+    assert "## Drop-cause breakdown" in md
+    assert "## Bytes vs participation" in md
+    assert "## β-mass by staleness" in md and "## β-mass by rung" in md
+    for lab in labels:
+        assert lab in md
+    for outcome in OUTCOMES:
+        assert outcome in md
+    # drop-cause rows sum to n_clients × rounds in the table too
+    assert f"| {BASE['n_clients'] * ROUNDS} |" in md
+
+
+def test_beta_mass_and_rung_histogram(runs):
+    runner, _ = runs[("buffered", "adaptive:sign1-fp16", "fedauto_async")]
+    rep = runner.report
+    mass = rep.beta_mass_by("staleness")
+    assert mass and sum(mass.values()) == pytest.approx(1.0)
+    assert "server" in mass                 # non-client rows group by role
+    hist = rep.rung_histogram()
+    assert sum(hist.values()) > 0
+    assert set(hist) <= set(runner.controller.rungs)
+
+
+def test_console_sink_line(runs, capsys):
+    runner, _ = runs[("sync", "fp32", "fedavg")]
+    sink = ConsoleSink()
+    sink.on_round(runner.report.rounds[-1])
+    out = capsys.readouterr().out
+    assert out.startswith("[obs] r=")
+    assert "agg=" in out and "wait=" in out
+
+
+def test_beta_row_builder():
+    row = beta_row(0.25, client=3, origin_round=2, staleness=1,
+                   rung="qsgd:4", distortion=0.1)
+    assert row == {"role": "client", "beta": 0.25, "client": 3,
+                   "origin_round": 2, "staleness": 1, "rung": "qsgd:4",
+                   "distortion": 0.1}
+    assert beta_row(0.5, role="server") == {"role": "server", "beta": 0.5}
