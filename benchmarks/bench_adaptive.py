@@ -28,10 +28,10 @@ from __future__ import annotations
 
 import os
 import tempfile
-import time
 from typing import List
 
-from benchmarks.common import make_problem
+from benchmarks.common import (BenchResult, make_problem, report_phases,
+                               timed_run)
 from repro.core.strategies import STRATEGIES
 from repro.obs import reconcile
 
@@ -52,9 +52,7 @@ def _run_one(world: str, mode: str, codec: str, rounds: int, quick: bool,
                           codec=codec, model_bytes=MODEL_BYTES,
                           trace_record=trace_record,
                           trace_replay=trace_replay, telemetry=True)
-    t0 = time.time()
-    hist = runner.run(STRATEGIES[MODES[mode]](), rounds=rounds)
-    us_per_round = (time.time() - t0) / rounds * 1e6
+    hist, us_per_round = timed_run(runner, STRATEGIES[MODES[mode]](), rounds)
     # headline numbers from the telemetry flight record, cross-checked
     # against the run's own accounting
     reconcile(runner.report, runner)
@@ -80,8 +78,12 @@ def run(quick: bool = True) -> List[str]:
                                          f"{world}_{mode}.ndjson")
                 runner, hist, parts, us = _run_one(
                     world, mode, codec, rounds, quick, trace_record=trace)
-                rows.append(f"adaptive:{world}/{mode}/{codec},{us:.0f},"
-                            f"{hist[-1]:.4f}")
+                # headline row carries the run's per-phase profiler seconds
+                # into the JSON baseline
+                rows.append(BenchResult(
+                    name=f"adaptive:{world}/{mode}/{codec}", us_per_call=us,
+                    derived=f"{hist[-1]:.4f}", value=float(f"{hist[-1]:.4f}"),
+                    kind="accuracy", phases=report_phases(runner)))
                 rows.append(f"adaptive:{world}/{mode}/{codec}/participants,"
                             f"0,{parts:.3f}")
                 rows.append(f"adaptive:{world}/{mode}/{codec}/uplink_MB,0,"

@@ -20,10 +20,10 @@ def run(quick: bool = True):
         ag = rng.dirichlet(np.ones(C))
         active = np.ones(J, bool)
         fedauto_weights(alpha, ag, active, 0)           # compile
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(5):
             beta = fedauto_weights(alpha, ag, active, 0)
-        us = (time.time() - t0) / 5 * 1e6
+        us = (time.perf_counter() - t0) / 5 * 1e6
         rows.append(f"aggregation/qp_J{J}_C{C},{us:.0f},{float(beta.sum()):.4f}")
 
     # weighted aggregation cost vs model size
@@ -33,10 +33,10 @@ def run(quick: bool = True):
                   for i in range(22)]
         beta = np.full(22, 1 / 22)
         aggregate_pytrees(models, beta)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(5):
             out = aggregate_pytrees(models, beta)
         jax.block_until_ready(out)
-        us = (time.time() - t0) / 5 * 1e6
+        us = (time.perf_counter() - t0) / 5 * 1e6
         rows.append(f"aggregation/weighted_sum_P{P},{us:.0f},22")
     return rows

@@ -17,12 +17,11 @@ Modes map to strategies: sync -> fedauto, async/buffered -> fedauto_async.
 from __future__ import annotations
 
 import math
-import time
 from typing import List
 
 import numpy as np
 
-from benchmarks.common import make_problem
+from benchmarks.common import make_problem, timed_run
 from repro.core.strategies import STRATEGIES
 
 MODES = {"sync": "fedauto", "async": "fedauto_async",
@@ -35,9 +34,7 @@ def _run_mode(world: str, mode: str, strat: str, rounds: int,
                           quick=quick, deadline_s=deadline, seed=0,
                           server_mode=mode, tau_max=4, buffer_k=4,
                           eval_every=1)
-    t0 = time.time()
-    hist = runner.run(STRATEGIES[strat](), rounds=rounds)
-    us_per_round = (time.time() - t0) / rounds * 1e6
+    hist, us_per_round = timed_run(runner, STRATEGIES[strat](), rounds)
     return runner.timeline, hist[-1], us_per_round
 
 

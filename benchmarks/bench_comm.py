@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import make_problem
+from benchmarks.common import make_problem, timed_run
 from repro.core.strategies import STRATEGIES
 from repro.fl.scenarios.engine import CAUSE_DEADLINE
 
@@ -43,9 +43,7 @@ def _run_one(world: str, mode: str, codec: str, rounds: int, quick: bool):
                           quick=quick, deadline_s=DEADLINE_S, seed=0,
                           server_mode=mode, tau_max=4, buffer_k=4,
                           codec=codec, model_bytes=MODEL_BYTES)
-    t0 = time.time()
-    hist = runner.run(STRATEGIES[MODES[mode]](), rounds=rounds)
-    us_per_round = (time.time() - t0) / rounds * 1e6
+    hist, us_per_round = timed_run(runner, STRATEGIES[MODES[mode]](), rounds)
     parts = runner.loop.participants_per_round
     return (hist[-1], float(np.mean(parts)) if parts else 0.0,
             runner.upload_bytes, us_per_round)
@@ -81,11 +79,11 @@ def _bench_kernel(quick: bool) -> List[str]:
     rows = []
     for name, fn in [("fused", fused), ("decode_then_agg", unfused)]:
         fn(q, scales, betas)                        # compile
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(5):
             out = fn(q, scales, betas)
         jax.block_until_ready(out)
-        us = (time.time() - t0) / 5 * 1e6
+        us = (time.perf_counter() - t0) / 5 * 1e6
         gbps = M * P / (us / 1e6) / 1e9             # int8 payload bytes read
         rows.append(f"comm:kernel/dequant_fedagg_{name},{us:.0f},{gbps:.1f}")
     return rows

@@ -1,10 +1,8 @@
 """Fig. 2/3: convergence curves of FFT strategies under mixed failures.
 Prints the accuracy trajectory (derived = final acc; curve to stdout)."""
-import time
-
 import numpy as np
 
-from benchmarks.common import make_problem
+from benchmarks.common import make_problem, timed_run
 from repro.core.strategies import STRATEGIES
 
 
@@ -20,9 +18,7 @@ def run(quick: bool = True):
     for name in strats:
         runner.global_params = g0
         runner.rng = np.random.default_rng(123)
-        t0 = time.time()
-        hist = runner.run(STRATEGIES[name](), rounds)
-        us = (time.time() - t0) / rounds * 1e6
+        hist, us = timed_run(runner, STRATEGIES[name](), rounds)
         curve = " ".join(f"{a:.3f}" for a in hist)
         print(f"# fig2 curve {name}: {curve}")
         rows.append(f"fig2/{name},{us:.0f},{hist[-1]:.4f}")

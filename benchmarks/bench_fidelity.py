@@ -37,10 +37,10 @@ from __future__ import annotations
 
 import os
 import tempfile
-import time
 from typing import List
 
-from benchmarks.common import make_problem
+from benchmarks.common import (BenchResult, make_problem, report_phases,
+                               timed_run)
 from repro.core.strategies import FedAuto, FedAutoAsync
 from repro.fl.metrics import accuracy_drawdown, distortion_replay_matches
 from repro.obs import reconcile
@@ -81,9 +81,7 @@ def _run_one(world: str, mode: str, a: float, b: float, rounds: int,
                           codec=LADDER, model_bytes=MODEL_BYTES,
                           eval_every=2, trace_record=trace_record,
                           trace_replay=trace_replay, telemetry=True)
-    t0 = time.time()
-    hist = runner.run(_strategy(mode, a, b), rounds=rounds)
-    us_per_round = (time.time() - t0) / rounds * 1e6
+    hist, us_per_round = timed_run(runner, _strategy(mode, a, b), rounds)
     # headline numbers from the telemetry flight record, cross-checked
     # against the run's own accounting
     reconcile(runner.report, runner)
@@ -106,8 +104,13 @@ def run(quick: bool = True) -> List[str]:
                                          f"{world}_{mode}.ndjson")
                 runner, hist, us = _run_one(world, mode, a, b, rounds,
                                             quick, trace_record=trace)
-                rows.append(f"fidelity:{world}/{mode}/{variant},{us:.0f},"
-                            f"{hist[-1]:.4f}")
+                # headline row carries the run's per-phase profiler seconds
+                # into the JSON baseline
+                rows.append(BenchResult(
+                    name=f"fidelity:{world}/{mode}/{variant}",
+                    us_per_call=us, derived=f"{hist[-1]:.4f}",
+                    value=float(f"{hist[-1]:.4f}"), kind="accuracy",
+                    phases=report_phases(runner)))
                 rows.append(f"fidelity:{world}/{mode}/{variant}/transient,"
                             f"0,{accuracy_drawdown(hist, warmup):.4f}")
                 rows.append(f"fidelity:{world}/{mode}/{variant}"

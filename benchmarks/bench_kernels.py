@@ -12,11 +12,11 @@ from repro.kernels import ref
 
 def _time(fn, *args, iters=5):
     fn(*args)  # warmup/compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6
+    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def run(quick: bool = True):

@@ -1,10 +1,8 @@
 """Table 5: FedAuto ablations — Module 1 (compensatory training) ×
 Module 2 (weight optimization), mixed failures, non-iid."""
-import time
-
 import numpy as np
 
-from benchmarks.common import make_problem
+from benchmarks.common import make_problem, timed_run
 from repro.core.strategies import FedAuto
 
 
@@ -16,9 +14,8 @@ def run(quick: bool = True):
     for m1, m2 in [(False, False), (True, False), (False, True), (True, True)]:
         runner.global_params = g0
         runner.rng = np.random.default_rng(123)
-        t0 = time.time()
-        hist = runner.run(FedAuto(use_module1=m1, use_module2=m2), rounds)
-        us = (time.time() - t0) / rounds * 1e6
+        hist, us = timed_run(runner, FedAuto(use_module1=m1, use_module2=m2),
+                             rounds)
         rows.append(f"table5/m1={int(m1)}_m2={int(m2)},{us:.0f},{hist[-1]:.4f}")
     runner.global_params = g0
     return rows

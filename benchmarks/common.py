@@ -1,15 +1,28 @@
 """Shared benchmark scaffolding.
 
-Every paper table/figure gets a module with ``run(quick: bool) -> list of
-CSV rows``: ``name,us_per_call,derived``. ``us_per_call`` is wall time per
-FFT round (or per kernel call); ``derived`` is the table's metric (accuracy).
+Every paper table/figure gets a module with ``run(quick: bool) -> rows``
+where each row is either a ``name,us_per_call,derived`` CSV string or a
+``BenchResult``.  ``us_per_call`` is wall time per FFT round (or per kernel
+call); ``derived`` is the table's metric (accuracy, participants, …).
 Quick mode shrinks the problem so ``python -m benchmarks.run`` finishes on
 CPU; ``--full`` approaches the paper's setting.
+
+Besides the CSV stream, the harness persists every bench's results as a
+schema-versioned ``BENCH_<name>.json`` (``BENCH_SCHEMA``/``BENCH_VERSION``)
+carrying per-metric kinds, per-phase profiler seconds, and an environment
+fingerprint — the machine-readable baselines ``benchmarks.report diff``
+compares across runs.
 """
 from __future__ import annotations
 
+import dataclasses
+import datetime
+import json
+import os
+import platform
+import subprocess
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -82,6 +95,26 @@ def make_problem(*, non_iid: bool, failure_mode: str, quick: bool,
     return runner
 
 
+def timed_run(runner, strategy, rounds: int):
+    """One timed ``runner.run``: ``(history, us_per_round)``, measured with
+    the monotonic clock (``time.perf_counter`` — wall-clock jumps from NTP
+    adjustments can't corrupt a bench number)."""
+    t0 = time.perf_counter()
+    hist = runner.run(strategy, rounds=rounds)
+    return hist, (time.perf_counter() - t0) / rounds * 1e6
+
+
+def report_phases(runner) -> Optional[Dict[str, float]]:
+    """Per-phase profiler seconds of the runner's last instrumented run
+    (``RunReport.phase_seconds``), or None when telemetry was off."""
+    rep = getattr(runner, "report", None)
+    if rep is None:
+        return None
+    phases = rep.phase_seconds()
+    return ({k: round(float(v), 6) for k, v in phases.items()}
+            if phases else None)
+
+
 def run_strategies(runner, names: List[str], rounds: int,
                    label: str, strategy_kwargs: Optional[Dict] = None) -> List[str]:
     rows = []
@@ -91,10 +124,7 @@ def run_strategies(runner, names: List[str], rounds: int,
         runner.global_params = g0
         runner.rng = np.random.default_rng(123)
         strat = STRATEGIES[name](**kw.get(name, {}))
-        t0 = time.time()
-        hist = runner.run(strat, rounds=rounds)
-        dt = time.time() - t0
-        us_per_round = dt / rounds * 1e6
+        hist, us_per_round = timed_run(runner, strat, rounds)
         # telemetry-instrumented runs read the headline number from the
         # flight record (identical to hist[-1] by construction — the
         # eval_acc gauge is the same evaluate() call)
@@ -106,3 +136,138 @@ def run_strategies(runner, names: List[str], rounds: int,
         rows.append(f"{label}/{name},{us_per_round:.0f},{final:.4f}")
     runner.global_params = g0
     return rows
+
+
+# ---------------------------------------------------------------------------
+# structured bench results — the machine-readable baselines
+# ---------------------------------------------------------------------------
+BENCH_SCHEMA = "fft-bench"
+BENCH_VERSION = 1
+
+# metric kinds and how ``benchmarks.report diff`` compares them:
+#   accuracy  regression iff new < old − atol (improvements pass)
+#   count     regression iff |new − old| > atol (deterministic accounting —
+#             participants, simulated MB — where *any* shift means the run
+#             changed behavior)
+#   exact     must match bit-for-bit (replay/bit-exactness indicator rows)
+#   timing    relative band with a noise floor; warn-only by default
+#   info      non-numeric payloads (rung histograms, error rows) — never
+#             gate, mismatches are surfaced as notes
+BENCH_KINDS = ("accuracy", "count", "exact", "timing", "info")
+
+
+@dataclasses.dataclass
+class BenchResult:
+    """One bench metric: the CSV row, typed."""
+    name: str
+    us_per_call: float
+    derived: str                          # raw derived column (CSV payload)
+    value: Optional[float] = None         # numeric derived, when parsable
+    kind: str = "accuracy"
+    phases: Optional[Dict[str, float]] = None   # profiler seconds
+    #                                             (``report_phases``)
+
+    def __post_init__(self):
+        if self.kind not in BENCH_KINDS:
+            raise ValueError(f"unknown metric kind {self.kind!r} "
+                             f"(known: {BENCH_KINDS})")
+
+    def csv_row(self) -> str:
+        return f"{self.name},{self.us_per_call:.0f},{self.derived}"
+
+    @staticmethod
+    def classify(name: str, derived: str):
+        """``(value, kind)`` heuristics for plain-CSV rows: suffix-tagged
+        exactness indicators, deterministic counts, kernel throughputs,
+        everything else numeric is an accuracy-band metric."""
+        try:
+            value = float(derived)
+        except ValueError:
+            return None, "info"
+        base = name.rsplit("/", 1)[-1]
+        if base.endswith("_exact"):
+            return value, "exact"
+        if ("participants" in base
+                or base.endswith(("_MB", "_bytes", "_s"))):
+            # deterministic simulation accounting: any move is a behavior
+            # change, so the symmetric count band gates it
+            return value, "count"
+        if (name.startswith("kernels/") or "us_per" in base
+                or base.startswith("t_to_")):
+            # wall/derived times (t_to_* may legitimately be inf): noisy,
+            # so only the wide warn-first timing band applies
+            return value, "timing"
+        return value, "accuracy"
+
+    @classmethod
+    def from_csv_row(cls, row: str) -> "BenchResult":
+        parts = row.split(",", 2)
+        if len(parts) != 3:
+            raise ValueError(f"not a name,us_per_call,derived row: {row!r}")
+        name, us, derived = parts
+        value, kind = cls.classify(name, derived)
+        return cls(name=name, us_per_call=float(us), derived=derived,
+                   value=value, kind=kind)
+
+    def to_json(self) -> Dict[str, Any]:
+        doc: Dict[str, Any] = {"name": self.name,
+                               "us_per_call": round(self.us_per_call, 1),
+                               "derived": self.derived, "kind": self.kind}
+        if self.value is not None:
+            doc["value"] = self.value
+        if self.phases:
+            doc["phases"] = self.phases
+        return doc
+
+    @classmethod
+    def from_json(cls, doc: Dict[str, Any]) -> "BenchResult":
+        return cls(name=doc["name"], us_per_call=float(doc["us_per_call"]),
+                   derived=str(doc["derived"]), value=doc.get("value"),
+                   kind=doc.get("kind", "accuracy"),
+                   phases=doc.get("phases"))
+
+
+def env_fingerprint(quick: bool) -> Dict[str, Any]:
+    """Where these numbers came from: git sha, library versions, host,
+    quick/full mode, and a UTC timestamp."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or None
+    except Exception:
+        sha = None
+    import jax
+    return {"git_sha": sha,
+            "jax": jax.__version__,
+            "numpy": np.__version__,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "quick": bool(quick),
+            "date": datetime.datetime.now(datetime.timezone.utc)
+            .strftime("%Y-%m-%dT%H:%M:%SZ")}
+
+
+def write_bench_json(path: str, bench: str, results: List[BenchResult], *,
+                     elapsed_s: float, env: Dict[str, Any]) -> None:
+    doc = {"schema": BENCH_SCHEMA, "version": BENCH_VERSION, "bench": bench,
+           "env": env, "elapsed_s": round(float(elapsed_s), 3),
+           "results": [r.to_json() for r in results]}
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+
+
+def load_bench_json(path: str) -> Dict[str, Any]:
+    """Load and schema-check one ``BENCH_<name>.json`` document."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    if (doc.get("schema") != BENCH_SCHEMA
+            or doc.get("version") != BENCH_VERSION):
+        raise ValueError(
+            f"{path}: not a {BENCH_SCHEMA} v{BENCH_VERSION} baseline "
+            f"(got {doc.get('schema')!r} v{doc.get('version')!r})")
+    for key in ("bench", "results"):
+        if key not in doc:
+            raise ValueError(f"{path}: missing {key!r}")
+    return doc

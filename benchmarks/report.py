@@ -1,6 +1,6 @@
-"""Render benchmark tables.
+"""Render benchmark tables and diff bench baselines.
 
-Two modes:
+Three modes:
 
 * dry-run roofline (the default, EXPERIMENTS.md §Dry-run / §Roofline):
 
@@ -8,16 +8,34 @@ Two modes:
 
 * run-report — Markdown tables over one or more telemetry NDJSON logs
   (``FFTConfig.telemetry_log``; see ``repro.obs``): per-run summary,
-  drop-cause breakdown, bytes-vs-participation, β-mass by staleness/rung:
+  drop-cause breakdown, bytes-vs-participation, β-mass by staleness/rung,
+  per-phase profiler timings:
 
       PYTHONPATH=src python -m benchmarks.report run-report run1.ndjson ...
+
+* diff — cross-run regression gate over ``BENCH_<name>.json`` baselines
+  (written by ``python -m benchmarks.run``).  Arguments are files or
+  directories (a directory expands to its ``BENCH_*.json``); documents are
+  paired by their ``bench`` field, first occurrence = baseline, second =
+  candidate.  Per-metric tolerance bands by kind: accuracy may not drop
+  more than ``ACC_ATOL``; counts (participants, simulated MB) may not move
+  more than ``COUNT_ATOL``; ``*_exact`` indicators must match bit-for-bit;
+  timings use a relative band with a noise floor and only warn unless
+  ``--strict-timing``.  Prints a Markdown table of every flagged metric and
+  exits 1 on regression (2 on usage/schema errors):
+
+      PYTHONPATH=src python -m benchmarks.report diff benchmarks/baselines new/
 """
+import glob
 import json
+import os
 import sys
 
 USAGE = (
     "usage: python -m benchmarks.report <dryrun_results.json>\n"
-    "       python -m benchmarks.report run-report <telemetry.ndjson> [...]")
+    "       python -m benchmarks.report run-report <telemetry.ndjson> [...]\n"
+    "       python -m benchmarks.report diff [--strict-timing] "
+    "<old.json|dir> [...] <new.json|dir> [...]")
 
 
 def fmt_bytes(b):
@@ -67,6 +85,154 @@ def render_run_report(paths) -> str:
     return render_markdown(reports)
 
 
+# ---------------------------------------------------------------------------
+# baseline diffing
+# ---------------------------------------------------------------------------
+# accuracy on the toy problems is deterministic per machine but can drift a
+# couple of points across BLAS/jax builds; the band must stay well under a
+# real break (a lost cohort moves finals by 5+ points)
+ACC_ATOL = 0.02
+# participants / simulated MB are deterministic accounting: any visible
+# move means the run changed behavior (0.25 absorbs mean-rounding only)
+COUNT_ATOL = 0.25
+# shared-CI timing noise is huge; flag only clear blowups, and below the
+# floor (interpreter overhead territory) never flag at all
+TIMING_RTOL = 0.5
+TIMING_FLOOR_US = 200.0
+
+REGRESSION, WARNING, OK = "REGRESSION", "warning", "ok"
+
+
+def expand_bench_paths(paths):
+    """Files pass through; directories expand to their ``BENCH_*.json``."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            found = sorted(glob.glob(os.path.join(p, "BENCH_*.json")))
+            if not found:
+                raise ValueError(f"{p}: no BENCH_*.json files")
+            out.extend(found)
+        else:
+            out.append(p)
+    return out
+
+
+def pair_baselines(paths):
+    """Pair loaded documents by their ``bench`` field: first occurrence is
+    the baseline, second the candidate.  Returns ``(pairs, unpaired)`` as
+    ``{bench: (old_doc, new_doc)}`` and the benches seen only once."""
+    from benchmarks.common import load_bench_json
+    seen = {}
+    pairs = {}
+    for p in paths:
+        doc = load_bench_json(p)
+        bench = doc["bench"]
+        if bench in pairs:
+            raise ValueError(
+                f"{p}: bench {bench!r} appears more than twice")
+        if bench in seen:
+            pairs[bench] = (seen.pop(bench), doc)
+        else:
+            seen[bench] = doc
+    return pairs, seen
+
+
+def _timing_status(old_us, new_us, strict):
+    if max(old_us, new_us) < TIMING_FLOOR_US:
+        return OK, None
+    limit = old_us * (1.0 + TIMING_RTOL) + TIMING_FLOOR_US
+    if new_us <= limit:
+        return OK, None
+    note = f"slower than {1.0 + TIMING_RTOL:.1f}x band"
+    return (REGRESSION if strict else WARNING), note
+
+
+def diff_metric(kind, old, new, *, strict_timing=False):
+    """Compare one metric's derived values under its kind's tolerance band:
+    ``(status, note)``."""
+    if kind == "info":
+        if old.derived != new.derived:
+            return WARNING, "payload changed"
+        return OK, None
+    if old.value is None or new.value is None:
+        return WARNING, "metric lost its numeric value"
+    if kind == "exact":
+        if new.value != old.value:
+            return REGRESSION, "exactness indicator changed"
+        return OK, None
+    if kind == "count":
+        if abs(new.value - old.value) > COUNT_ATOL:
+            return REGRESSION, f"moved more than ±{COUNT_ATOL}"
+        return OK, None
+    if kind == "timing":
+        return _timing_status(old.value, new.value, strict_timing)
+    # accuracy: one-sided — improvements pass
+    if new.value < old.value - ACC_ATOL:
+        return REGRESSION, f"dropped more than {ACC_ATOL}"
+    return OK, None
+
+
+def diff_baselines(paths, *, strict_timing=False):
+    """Diff paired baselines; returns ``(markdown, n_regressions)``."""
+    from benchmarks.common import BenchResult
+    pairs, unpaired = pair_baselines(paths)
+    if not pairs:
+        raise ValueError("no baseline/candidate pair: every bench appeared "
+                         f"only once ({sorted(unpaired) or 'none'})")
+    flagged = []         # (bench, metric, kind, old, new, status, note)
+    n_reg = 0
+    n_metrics = 0
+    for bench in sorted(unpaired):
+        flagged.append((bench, "(whole bench)", "-", "present", "missing",
+                        REGRESSION, "no candidate run to compare"))
+        n_reg += 1
+    for bench, (old_doc, new_doc) in sorted(pairs.items()):
+        old = {r["name"]: BenchResult.from_json(r)
+               for r in old_doc["results"]}
+        new = {r["name"]: BenchResult.from_json(r)
+               for r in new_doc["results"]}
+        for name, o in old.items():
+            n = new.get(name)
+            if n is None:
+                flagged.append((bench, name, o.kind, o.derived, "missing",
+                                REGRESSION, "metric disappeared"))
+                n_reg += 1
+                continue
+            n_metrics += 1
+            status, note = diff_metric(o.kind, o, n,
+                                       strict_timing=strict_timing)
+            if status != OK:
+                flagged.append((bench, name, o.kind, o.derived, n.derived,
+                                status, note))
+                n_reg += status == REGRESSION
+            # every row's us_per_call additionally gets the timing band
+            tstat, tnote = _timing_status(o.us_per_call, n.us_per_call,
+                                          strict_timing)
+            if tstat != OK:
+                flagged.append((bench, name, "us_per_call",
+                                f"{o.us_per_call:.0f}",
+                                f"{n.us_per_call:.0f}", tstat, tnote))
+                n_reg += tstat == REGRESSION
+        for name in sorted(set(new) - set(old)):
+            flagged.append((bench, name, new[name].kind, "-",
+                            new[name].derived, WARNING,
+                            "new metric, no baseline"))
+    lines = ["# Bench baseline diff", "",
+             f"{len(pairs)} bench(es), {n_metrics} paired metric(s), "
+             f"{n_reg} regression(s), "
+             f"{sum(1 for f in flagged if f[5] == WARNING)} warning(s)", ""]
+    if flagged:
+        lines += ["| bench | metric | kind | old | new | status | note |",
+                  "|---|---|---|---|---|---|---|"]
+        flagged.sort(key=lambda f: (f[5] != REGRESSION, f[0], f[1]))
+        for bench, metric, kind, old_v, new_v, status, note in flagged:
+            lines.append(f"| {bench} | {metric} | {kind} | {old_v} | "
+                         f"{new_v} | {status} | {note or ''} |")
+    else:
+        lines.append("No regressions, no warnings.")
+    return "\n".join(lines), n_reg
+
+
 def main(argv) -> int:
     if len(argv) < 2:
         print(USAGE, file=sys.stderr)
@@ -77,6 +243,21 @@ def main(argv) -> int:
             return 2
         print(render_run_report(argv[2:]))
         return 0
+    if argv[1] == "diff":
+        args = argv[2:]
+        strict = "--strict-timing" in args
+        args = [a for a in args if a != "--strict-timing"]
+        if not args:
+            print(USAGE, file=sys.stderr)
+            return 2
+        try:
+            report, n_reg = diff_baselines(expand_bench_paths(args),
+                                           strict_timing=strict)
+        except (ValueError, OSError, json.JSONDecodeError, KeyError) as e:
+            print(f"diff: {e}", file=sys.stderr)
+            return 2
+        print(report)
+        return 1 if n_reg else 0
     print(render(argv[1]))
     return 0
 

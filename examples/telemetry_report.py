@@ -57,6 +57,14 @@ def main() -> None:
             == runner.report.drop_cause_counts())
     print(f"reconciled: {nums}")
 
+    # per-phase profiler (PR 7): where each round's wall time actually
+    # went — exclusive timers, so shares sum to 100%
+    print("\nphase table (hottest first):")
+    for row in reloaded.phase_table():
+        print(f"  {row['phase']:<14s} {row['total_s']:8.3f} s total"
+              f"  {row['s_per_round'] * 1e3:8.2f} ms/round"
+              f"  {row['share'] * 100:5.1f}%")
+
     md = render_markdown([reloaded])
     print("\n" + md)
     if args.report_out:

@@ -24,7 +24,7 @@ from repro.core.aggregation import (aggregate_pytrees, delta_pytree,
                                     fedauto_simple_average_weights,
                                     missing_classes)
 from repro.core.weights_qp import heuristic_weights
-from repro.obs.telemetry import beta_row
+from repro.obs.telemetry import NULL_TELEMETRY, beta_row
 
 
 @dataclasses.dataclass
@@ -64,6 +64,27 @@ def _record_betas(ctx, rows) -> None:
         tel.betas(ctx.rnd, rows)
 
 
+def _phase(ctx, name: str):
+    """A ``phase.*`` profiler timer on the round's telemetry hub — the
+    shared no-op context manager when the run is uninstrumented.  Strategies
+    use it to split their aggregation between the weight solve
+    (``phase.weight_solve``) and the pytree accumulate
+    (``phase.accumulate``); both nest inside the loop's ``phase.aggregate``,
+    which (timers being exclusive) keeps only its own bookkeeping time."""
+    tel = getattr(ctx, "telemetry", None)
+    return (tel or NULL_TELEMETRY).timer(name)
+
+
+def _accumulate(ctx, models, betas):
+    """``aggregate_pytrees`` under the ``phase.accumulate`` timer, synced
+    when telemetry is live so the timer sees device time, not dispatch."""
+    with _phase(ctx, "phase.accumulate"):
+        out = aggregate_pytrees(models, betas)
+        if getattr(ctx, "telemetry", None):
+            jax.block_until_ready(out)
+    return out
+
+
 class Strategy:
     name = "base"
 
@@ -96,8 +117,10 @@ class FedAvg(Strategy):
     name = "fedavg"
 
     def aggregate(self, ctx: RoundContext):
-        beta = heuristic_weights(ctx.p, self._mask(ctx), server_idx=0,
-                                 full_participation=ctx.full_participation)
+        with _phase(ctx, "phase.weight_solve"):
+            beta = heuristic_weights(
+                ctx.p, self._mask(ctx), server_idx=0,
+                full_participation=ctx.full_participation)
         models = [ctx.server_model] + [ctx.client_models[i]
                                        for i in range(len(ctx.connected))
                                        if ctx.connected[i]]
@@ -110,7 +133,7 @@ class FedAvg(Strategy):
                 beta_row(beta[i + 1], client=i, rung=codecs.get(i),
                          distortion=dists.get(i))
                 for i in range(len(ctx.connected)) if ctx.connected[i]])
-        return aggregate_pytrees(models, np.array(weights))
+        return _accumulate(ctx, models, np.array(weights))
 
 
 class FedProx(FedAvg):
@@ -397,11 +420,12 @@ class FedAuto(Strategy):
         alpha_g = dist(ctx.global_hist.astype(float))
         active = np.ones(len(rows), dtype=bool)
         if self.use_module2:
-            beta = fedauto_discounted_weights(
-                alpha_rows, alpha_g, np.zeros(len(rows)),
-                np.asarray(distortion), server_row=0,
-                discount_b=_resolve_fidelity_discount(self.fidelity_discount,
-                                                      ctx))
+            with _phase(ctx, "phase.weight_solve"):
+                beta = fedauto_discounted_weights(
+                    alpha_rows, alpha_g, np.zeros(len(rows)),
+                    np.asarray(distortion), server_row=0,
+                    discount_b=_resolve_fidelity_discount(
+                        self.fidelity_discount, ctx))
         else:
             beta = fedauto_simple_average_weights(active, 0, comp_model is not None)
         if getattr(ctx, "telemetry", None):
@@ -416,7 +440,7 @@ class FedAuto(Strategy):
                                     rung=codecs.get(i),
                                     distortion=float(dmap.get(i, 0.0))))
             _record_betas(ctx, out)
-        return aggregate_pytrees(models, beta)
+        return _accumulate(ctx, models, beta)
 
 
 # ---------------------------------------------------------------------------
@@ -585,7 +609,7 @@ class FedBuff(AsyncStrategy):
             _record_betas(ctx, rows)
         if flush:
             self._held = []
-        step = aggregate_pytrees(deltas, np.asarray(discs) / len(deltas))
+        step = _accumulate(ctx, deltas, np.asarray(discs) / len(deltas))
         return jax.tree.map(
             lambda g, d: (g.astype(jnp.float32) +
                           self.eta * d.astype(jnp.float32)).astype(g.dtype),
@@ -642,12 +666,13 @@ class FedAutoAsync(AsyncStrategy):
             distortion.append(float(arr.distortion))
         alpha_rows = np.stack(rows)
         alpha_g = dist(ctx.global_hist.astype(float))
-        beta = fedauto_discounted_weights(
-            alpha_rows, alpha_g, np.asarray(staleness),
-            np.asarray(distortion), server_row=0,
-            discount_a=self.discount_a,
-            discount_b=_resolve_fidelity_discount(self.fidelity_discount,
-                                                  ctx))
+        with _phase(ctx, "phase.weight_solve"):
+            beta = fedauto_discounted_weights(
+                alpha_rows, alpha_g, np.asarray(staleness),
+                np.asarray(distortion), server_row=0,
+                discount_a=self.discount_a,
+                discount_b=_resolve_fidelity_discount(self.fidelity_discount,
+                                                      ctx))
         if getattr(ctx, "telemetry", None):
             out = [beta_row(beta[0], role="server")]
             k = 1
@@ -661,7 +686,7 @@ class FedAutoAsync(AsyncStrategy):
                                     staleness=arr.staleness, rung=arr.codec,
                                     distortion=arr.distortion))
             _record_betas(ctx, out)
-        return aggregate_pytrees(models, beta)
+        return _accumulate(ctx, models, beta)
 
 
 class CentralizedPublic(Strategy):

@@ -182,16 +182,17 @@ class AdaptiveCommController:
         this round (the round-1 full-model enrollment transfer) so
         ``observe`` later divides the wire bits that actually traveled by
         the observed time."""
-        idx = [self.rung_index_for(c) for c in self.cap_hat]
-        a = RoundAssignment(
-            rnd=rnd,
-            codecs=[self.rungs[k] for k in idx],
-            upload_bytes=self.rung_bytes[idx].copy(),
-            download_bytes=(self.download_bytes if download_bytes is None
-                            else float(download_bytes)),
-            selected=(None if selected is None
-                      else np.asarray(selected, dtype=bool).copy()))
-        self.assignments[rnd] = a
+        with self.telemetry.timer("phase.controller"):
+            idx = [self.rung_index_for(c) for c in self.cap_hat]
+            a = RoundAssignment(
+                rnd=rnd,
+                codecs=[self.rungs[k] for k in idx],
+                upload_bytes=self.rung_bytes[idx].copy(),
+                download_bytes=(self.download_bytes if download_bytes is None
+                                else float(download_bytes)),
+                selected=(None if selected is None
+                          else np.asarray(selected, dtype=bool).copy()))
+            self.assignments[rnd] = a
         return a
 
     # ---------------------------------------------------------- learning
@@ -206,32 +207,35 @@ class AdaptiveCommController:
         a = self.assignments.get(rnd)
         if a is None:
             return
-        for i in range(self.n_clients):
-            if not bool(selected[i]):
-                continue
-            e = events.events[i]
-            wire_bits = (a.upload_bytes[i] +
-                         a.download_bytes / self.dl_ratio) * 8.0
-            if e.met_deadline and math.isfinite(e.finish_s):
-                obs = wire_bits / max(e.finish_s - self.fixed_s, 1e-3)
-                w = self.ewma_up if obs > self.cap_hat[i] else self.ewma_down
-                self.cap_hat[i] = (1.0 - w) * self.cap_hat[i] + w * obs
-                self.n_success += 1
-            else:
-                self.cap_hat[i] *= self.backoff
-                self.n_miss += 1
-            self.cap_hat[i] = min(max(self.cap_hat[i], self.cap_min),
-                                  self.cap_max)
         tel = self.telemetry
-        if tel:
-            n_sel = int(np.asarray(selected, dtype=bool).sum())
-            n_landed = sum(
-                1 for i in range(self.n_clients) if bool(selected[i])
-                and events.events[i].met_deadline
-                and math.isfinite(events.events[i].finish_s))
-            tel.counter("adaptive.landed", n_landed)
-            tel.counter("adaptive.missed", n_sel - n_landed)
-            tel.gauge(rnd, "cap_hat_mean_bps", float(self.cap_hat.mean()))
+        with tel.timer("phase.controller"):
+            for i in range(self.n_clients):
+                if not bool(selected[i]):
+                    continue
+                e = events.events[i]
+                wire_bits = (a.upload_bytes[i] +
+                             a.download_bytes / self.dl_ratio) * 8.0
+                if e.met_deadline and math.isfinite(e.finish_s):
+                    obs = wire_bits / max(e.finish_s - self.fixed_s, 1e-3)
+                    w = (self.ewma_up if obs > self.cap_hat[i]
+                         else self.ewma_down)
+                    self.cap_hat[i] = (1.0 - w) * self.cap_hat[i] + w * obs
+                    self.n_success += 1
+                else:
+                    self.cap_hat[i] *= self.backoff
+                    self.n_miss += 1
+                self.cap_hat[i] = min(max(self.cap_hat[i], self.cap_min),
+                                      self.cap_max)
+            if tel:
+                n_sel = int(np.asarray(selected, dtype=bool).sum())
+                n_landed = sum(
+                    1 for i in range(self.n_clients) if bool(selected[i])
+                    and events.events[i].met_deadline
+                    and math.isfinite(events.events[i].finish_s))
+                tel.counter("adaptive.landed", n_landed)
+                tel.counter("adaptive.missed", n_sel - n_landed)
+                tel.gauge(rnd, "cap_hat_mean_bps",
+                          float(self.cap_hat.mean()))
 
     # ------------------------------------------------------------- stats
     def rung_histogram(self) -> Dict[str, int]:

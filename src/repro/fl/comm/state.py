@@ -159,42 +159,46 @@ class CommState:
         controller's per-client rung); the residual carries across rung
         changes unchanged — EF is codec-agnostic.
         """
-        codec = self.codec if codec is None else codec
-        delta = jax.tree.map(
-            lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32),
-            model, global_params)
-        resid = self._residuals.get(client)
-        distortion = 0.0
-        if codec.lossless and resid is None:
-            payload = codec.encode(delta)
-            decoded = codec.decode(payload)
-        else:
-            carry = (delta if resid is None else
-                     jax.tree.map(jnp.add, delta, resid))
-            payload = codec.encode(carry)
-            decoded = codec.decode(payload)
-            if codec.lossless:
-                # the wire carried the full corrected delta: residual flushed
-                self._residuals.pop(client, None)
-            else:
-                new_resid = jax.tree.map(jnp.subtract, carry, decoded)
-                self._residuals[client] = new_resid
-                carry_norm = _l2(carry)
-                if carry_norm > 0.0:
-                    distortion = _l2(new_resid) / carry_norm
-        recon = jax.tree.map(
-            lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
-            global_params, decoded)
-        # accumulate *simulated* wire bytes (override-scaled), the same unit
-        # the deadline simulator, traces, and total_downlink_bytes use
-        nbytes = self.nbytes_for(codec)
-        self.total_uplink_bytes += nbytes
-        self.n_encoded += 1
-        self.last_distortions[client] = distortion
         tel = self.telemetry
-        if tel:
-            tel.counter("comm.uploads")
-            tel.counter("comm.upload_bytes", nbytes)
+        with tel.timer("phase.uplink"):
+            codec = self.codec if codec is None else codec
+            delta = jax.tree.map(
+                lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32),
+                model, global_params)
+            resid = self._residuals.get(client)
+            distortion = 0.0
+            if codec.lossless and resid is None:
+                payload = codec.encode(delta)
+                decoded = codec.decode(payload)
+            else:
+                carry = (delta if resid is None else
+                         jax.tree.map(jnp.add, delta, resid))
+                payload = codec.encode(carry)
+                decoded = codec.decode(payload)
+                if codec.lossless:
+                    # wire carried the full corrected delta: residual flushed
+                    self._residuals.pop(client, None)
+                else:
+                    new_resid = jax.tree.map(jnp.subtract, carry, decoded)
+                    self._residuals[client] = new_resid
+                    carry_norm = _l2(carry)
+                    if carry_norm > 0.0:
+                        distortion = _l2(new_resid) / carry_norm
+            recon = jax.tree.map(
+                lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
+                global_params, decoded)
+            # accumulate *simulated* wire bytes (override-scaled), the same
+            # unit the deadline simulator, traces, and total_downlink_bytes
+            # use
+            nbytes = self.nbytes_for(codec)
+            self.total_uplink_bytes += nbytes
+            self.n_encoded += 1
+            self.last_distortions[client] = distortion
+            if tel:
+                # device time is honest only once the reconstruction exists
+                jax.block_until_ready(recon)
+                tel.counter("comm.uploads")
+                tel.counter("comm.upload_bytes", nbytes)
         return recon, payload, distortion
 
     # ----------------------------------------------------------- downlink
@@ -224,34 +228,36 @@ class CommState:
         per-round rate: a 100×-compressed downlink run must still account
         for how clients got the model in the first place.
         """
-        if self.downlink_codec is None:
-            self.total_downlink_bytes += self.download_bytes
-            tel = self.telemetry
-            if tel:
-                tel.counter("comm.broadcasts")
-                tel.counter("comm.download_bytes", self.download_bytes)
-            return global_params, self.download_bytes
-        nbytes = self.download_bytes
-        if self._dl_ref is None:
-            self._dl_ref = jax.tree.map(
-                lambda g: g.astype(jnp.float32), global_params)
-            nbytes = self.ref_bytes          # enrollment: full-model transfer
-        else:
-            delta = jax.tree.map(
-                lambda g, ref: g.astype(jnp.float32) - ref,
-                global_params, self._dl_ref)
-            if self._dl_residual is not None:
-                delta = jax.tree.map(jnp.add, delta, self._dl_residual)
-            payload = self.downlink_codec.encode(delta)
-            decoded = self.downlink_codec.decode(payload)
-            if not self.downlink_codec.lossless:
-                self._dl_residual = jax.tree.map(jnp.subtract, delta, decoded)
-            self._dl_ref = jax.tree.map(jnp.add, self._dl_ref, decoded)
-        self.total_downlink_bytes += nbytes
         tel = self.telemetry
-        if tel:
-            tel.counter("comm.broadcasts")
-            tel.counter("comm.download_bytes", nbytes)
-        out = jax.tree.map(lambda ref, g: ref.astype(g.dtype),
-                           self._dl_ref, global_params)
+        with tel.timer("phase.downlink"):
+            if self.downlink_codec is None:
+                self.total_downlink_bytes += self.download_bytes
+                if tel:
+                    tel.counter("comm.broadcasts")
+                    tel.counter("comm.download_bytes", self.download_bytes)
+                return global_params, self.download_bytes
+            nbytes = self.download_bytes
+            if self._dl_ref is None:
+                self._dl_ref = jax.tree.map(
+                    lambda g: g.astype(jnp.float32), global_params)
+                nbytes = self.ref_bytes      # enrollment: full-model transfer
+            else:
+                delta = jax.tree.map(
+                    lambda g, ref: g.astype(jnp.float32) - ref,
+                    global_params, self._dl_ref)
+                if self._dl_residual is not None:
+                    delta = jax.tree.map(jnp.add, delta, self._dl_residual)
+                payload = self.downlink_codec.encode(delta)
+                decoded = self.downlink_codec.decode(payload)
+                if not self.downlink_codec.lossless:
+                    self._dl_residual = jax.tree.map(
+                        jnp.subtract, delta, decoded)
+                self._dl_ref = jax.tree.map(jnp.add, self._dl_ref, decoded)
+            self.total_downlink_bytes += nbytes
+            out = jax.tree.map(lambda ref, g: ref.astype(g.dtype),
+                               self._dl_ref, global_params)
+            if tel:
+                jax.block_until_ready(out)
+                tel.counter("comm.broadcasts")
+                tel.counter("comm.download_bytes", nbytes)
         return out, nbytes

@@ -334,9 +334,16 @@ class FFTRunner:
         return k
 
     def run_local(self, t_global, x, y, rnd, *, mu=0.0, corr=None):
-        corr = corr if corr is not None else self._zeros_like_t(t_global)
-        return self._local_update(t_global, t_global, corr, x, y,
-                                  self._next_key(), self.lr(rnd), mu)
+        tel = self.telemetry
+        with tel.timer("phase.local_update"):
+            corr = corr if corr is not None else self._zeros_like_t(t_global)
+            out = self._local_update(t_global, t_global, corr, x, y,
+                                     self._next_key(), self.lr(rnd), mu)
+            if tel:
+                # the update is one jitted lax.scan: without a sync the timer
+                # would stop at dispatch, not completion
+                jax.block_until_ready(out)
+        return out
 
     def loss_on(self, t, x, y):
         return self._loss_on(t, x, y)
@@ -373,15 +380,17 @@ class FFTRunner:
         self.global_params = t
 
     def evaluate(self) -> float:
-        t = self.global_params
-        bs = self.cfg.eval_batch
-        n = len(self.test.y)
-        correct = 0
-        for i in range(0, n, bs):
-            x = jnp.asarray(self.test.x[i:i + bs])
-            y = jnp.asarray(self.test.y[i:i + bs])
-            correct += int(self._accuracy_batch(t, x, y))
-        return correct / n
+        with self.telemetry.timer("phase.eval"):
+            t = self.global_params
+            bs = self.cfg.eval_batch
+            n = len(self.test.y)
+            correct = 0
+            for i in range(0, n, bs):
+                x = jnp.asarray(self.test.x[i:i + bs])
+                y = jnp.asarray(self.test.y[i:i + bs])
+                # int() already forces the device sum, so the timer is honest
+                correct += int(self._accuracy_batch(t, x, y))
+            return correct / n
 
     def _draw_network(self, r: int):
         """(up, met_deadline, RoundEvents|None) for round ``r``.

@@ -80,22 +80,23 @@ class StalenessBuffer:
         enough (staleness ``<= tau_max``); silently evict updates whose
         staleness exceeded the horizon (landed or not — they can only get
         staler).  Returns arrivals sorted by landing time."""
-        ready, kept = [], []
-        for e in self._entries:
-            if e.staleness(current_round) > self.tau_max:
-                self.n_evicted += 1
-                if self.telemetry:
-                    self.telemetry.counter("buffer.evicted")
-                    self.evictions.append((e.client, e.origin_round))
-            elif e.arrival_s <= now_s:
-                ready.append(e)
-            else:
-                kept.append(e)
-        self._entries = kept
-        ready.sort(key=lambda e: (e.arrival_s, e.client))
-        self.n_applied += len(ready)
-        if self.telemetry and ready:
-            self.telemetry.counter("buffer.applied", len(ready))
+        with self.telemetry.timer("phase.buffer"):
+            ready, kept = [], []
+            for e in self._entries:
+                if e.staleness(current_round) > self.tau_max:
+                    self.n_evicted += 1
+                    if self.telemetry:
+                        self.telemetry.counter("buffer.evicted")
+                        self.evictions.append((e.client, e.origin_round))
+                elif e.arrival_s <= now_s:
+                    ready.append(e)
+                else:
+                    kept.append(e)
+            self._entries = kept
+            ready.sort(key=lambda e: (e.arrival_s, e.client))
+            self.n_applied += len(ready)
+            if self.telemetry and ready:
+                self.telemetry.counter("buffer.applied", len(ready))
         return ready
 
     def ready_count(self, now_s: float, current_round: int) -> int:
@@ -109,16 +110,17 @@ class StalenessBuffer:
         """Drop every update whose staleness exceeded the horizon; returns
         the number evicted.  ``collect`` does this implicitly — this is for
         rounds where the server defers aggregation."""
-        n0 = len(self._entries)
-        if self.telemetry:
-            for e in self._entries:
-                if e.staleness(current_round) > self.tau_max:
-                    self.telemetry.counter("buffer.evicted")
-                    self.evictions.append((e.client, e.origin_round))
-        self._entries = [e for e in self._entries
-                         if e.staleness(current_round) <= self.tau_max]
-        self.n_evicted += n0 - len(self._entries)
-        return n0 - len(self._entries)
+        with self.telemetry.timer("phase.buffer"):
+            n0 = len(self._entries)
+            if self.telemetry:
+                for e in self._entries:
+                    if e.staleness(current_round) > self.tau_max:
+                        self.telemetry.counter("buffer.evicted")
+                        self.evictions.append((e.client, e.origin_round))
+            self._entries = [e for e in self._entries
+                             if e.staleness(current_round) <= self.tau_max]
+            self.n_evicted += n0 - len(self._entries)
+            return n0 - len(self._entries)
 
     def drop_client(self, client: int) -> int:
         """Discard every pending upload from ``client`` (e.g. permanent

@@ -25,8 +25,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Dict, List
 
+import jax
 import numpy as np
 
 from repro.core.aggregation import delta_pytree
@@ -172,19 +174,22 @@ class RoundLoop:
                      assignment, dl_bytes, distortions=None) -> None:
         if self.tracer is None:
             return
-        runner = self.runner
-        codecs = None
-        if assignment is not None:
-            # only rungs the server actually handed out this round are
-            # assignments; unselected clients' rows carry no codec
-            codecs = [c if selected[i] else None
-                      for i, c in enumerate(assignment.codecs)]
-        self.tracer.write_round(
-            r, selected, connected, events, up=up, met_deadline=met_deadline,
-            payload_bytes=(assignment.upload_bytes if assignment is not None
-                           else runner.comm.upload_bytes),
-            download_bytes=dl_bytes,
-            codecs=codecs, distortions=distortions)
+        with self.obs.timer("phase.trace"):
+            runner = self.runner
+            codecs = None
+            if assignment is not None:
+                # only rungs the server actually handed out this round are
+                # assignments; unselected clients' rows carry no codec
+                codecs = [c if selected[i] else None
+                          for i, c in enumerate(assignment.codecs)]
+            self.tracer.write_round(
+                r, selected, connected, events, up=up,
+                met_deadline=met_deadline,
+                payload_bytes=(assignment.upload_bytes
+                               if assignment is not None
+                               else runner.comm.upload_bytes),
+                download_bytes=dl_bytes,
+                codecs=codecs, distortions=distortions)
 
     def _observe(self, r, events, selected) -> None:
         runner = self.runner
@@ -231,6 +236,11 @@ class RoundLoop:
         tel = self.obs
         for r in range(1, rounds + 1):
             tel.begin_round(r)
+            if tel:
+                # snapshot the run-wide phase accumulators so this round's
+                # share can be emitted as per-round gauges below
+                phase_snap = dict(tel.timers_s)
+                wall_t0 = time.perf_counter()
             duration = self.run_round(r)
             self.clock_s += duration
             if tel:
@@ -244,6 +254,18 @@ class RoundLoop:
                 tel.gauge(r, "cum_downlink_bytes",
                           float(comm.total_downlink_bytes))
             self._maybe_eval(r, rounds, history)
+            if tel:
+                # real (host) wall seconds of this round, eval included —
+                # distinct from the *simulated* server_wait_s — plus each
+                # phase timer's delta since the round began; phases are
+                # exclusive, so the deltas are disjoint and sum ≤ wall
+                tel.gauge(r, "round_wall_s", time.perf_counter() - wall_t0)
+                for name, total in tel.timers_s.items():
+                    if not name.startswith("phase."):
+                        continue
+                    delta = total - phase_snap.get(name, 0.0)
+                    if delta > 0.0:
+                        tel.gauge(r, name, delta)
             tel.end_round(r)
         return history
 
@@ -258,7 +280,8 @@ class SyncRoundLoop(RoundLoop):
         runner, strategy = self.runner, self.strategy
         selected = self._select()
         t_global, assignment, dl_bytes = self._begin_round(r, selected)
-        up, met_deadline, events = runner._draw_network(r)
+        with self.obs.timer("phase.network_draw"):
+            up, met_deadline, events = runner._draw_network(r)
         connected = selected & up & met_deadline
         self.participants_per_round.append(int(connected.sum()))
         self._observe(r, events, selected)
@@ -323,7 +346,11 @@ class SyncRoundLoop(RoundLoop):
             upload_nbytes=(None if assignment else runner.comm.upload_bytes),
             codecs=codecs_used, upload_bytes=nbytes_used,
             distortions=distortions, telemetry=self.obs)
-        runner.global_params = strategy.aggregate(ctx)
+        with tel.timer("phase.aggregate"):
+            new_global = strategy.aggregate(ctx)
+            if tel:
+                jax.block_until_ready(new_global)
+        runner.global_params = new_global
         return self._round_duration(selected, connected, events)
 
 
@@ -359,7 +386,8 @@ class AsyncRoundLoop(RoundLoop):
         runner, strategy, cfg = self.runner, self.strategy, self.runner.cfg
         selected = self._select()
         t_global, assignment, dl_bytes = self._begin_round(r, selected)
-        up, met_deadline, events = runner._draw_network(r)
+        with self.obs.timer("phase.network_draw"):
+            up, met_deadline, events = runner._draw_network(r)
         if events is None:
             raise RuntimeError(
                 "async server modes need per-client arrival timelines; the "
@@ -447,8 +475,12 @@ class AsyncRoundLoop(RoundLoop):
                 {(a.client, a.origin_round): a for a in arrivals})
         server_model = runner.run_local(t_global, runner.public_x,
                                         runner.public_y, r)
-        runner.global_params = self._aggregate(r, now, t_global, server_model,
-                                               selected, arrivals)
+        with tel.timer("phase.aggregate"):
+            new_global = self._aggregate(r, now, t_global, server_model,
+                                         selected, arrivals)
+            if tel:
+                jax.block_until_ready(new_global)
+        runner.global_params = new_global
         self.version += 1
         return duration
 

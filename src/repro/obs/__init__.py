@@ -13,7 +13,8 @@ reports into the ``benchmarks.report run-report`` tables.
 from repro.obs.report import (ReconcileError, reconcile,  # noqa: F401
                               render_markdown)
 from repro.obs.sinks import (ConsoleSink, NdjsonSink, RunReport,  # noqa: F401
-                             Sink, TELEMETRY_SCHEMA, TELEMETRY_VERSION)
+                             Sink, TELEMETRY_SCHEMA, TELEMETRY_VERSION,
+                             TELEMETRY_VERSIONS_READABLE)
 from repro.obs.telemetry import (AGGREGATED, BUFFERED,  # noqa: F401
                                  EVICTED, LINK_DOWN, MISSED_DEADLINE,
                                  NOT_SELECTED, NULL_TELEMETRY, OUTCOMES,

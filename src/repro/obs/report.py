@@ -80,6 +80,30 @@ def reconcile(report: RunReport, runner) -> Dict[str, float]:
                 f"participants gauge {parts} != loop.participants_per_round "
                 f"{loop.participants_per_round}")
 
+    # per-round phase gauges must telescope back to the run-summary timers
+    # (the gauges are per-round deltas of the same accumulators), and no
+    # round's phases may claim more than its measured wall time — the
+    # profiler's exclusive-timer guarantee.
+    timers = report.summary.get("timers_s", {})
+    for name, want_s in timers.items():
+        if not name.startswith("phase."):
+            continue
+        got_s = math.fsum(r["gauges"].get(name, 0.0) for r in report.rounds)
+        if not _close(got_s, want_s):
+            raise ReconcileError(
+                f"per-round {name} gauges sum to {got_s} but the run "
+                f"summary timer says {want_s}")
+    for r in report.rounds:
+        wall = r["gauges"].get("round_wall_s")
+        if wall is None:
+            continue
+        claimed = math.fsum(v for k, v in r["gauges"].items()
+                            if k.startswith("phase."))
+        if claimed > wall + 1e-6:
+            raise ReconcileError(
+                f"round {r['round']}: phases claim {claimed}s of a "
+                f"{wall}s round wall")
+
     return {"outcomes_total": float(total), "uplink_bytes": up,
             "downlink_bytes": down,
             "aggregated": float(counts[AGGREGATED])}
@@ -169,5 +193,16 @@ def render_markdown(reports: List[RunReport],
             sort_key=lambda g: (isinstance(g, str), g))
         sections += mass_section("β-mass by rung", "rung",
                                  sort_key=lambda g: str(g))
+
+    if any(rep.phase_table() for rep in reports):
+        rows = []
+        for lab, rep in zip(labels, reports):
+            for p in rep.phase_table():
+                rows.append([lab, p["phase"], _fmt(p["total_s"], 3),
+                             _fmt(p["s_per_round"] * 1e3, 1),
+                             _fmt(p["share"] * 100.0, 1)])
+        sections += ["## Phase timings", "", _table(
+            ["run", "phase", "total_s", "ms_per_round", "share_%"], rows),
+            ""]
 
     return "\n".join(sections)

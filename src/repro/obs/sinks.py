@@ -17,7 +17,11 @@ import numpy as np
 from repro.obs.telemetry import AGGREGATED, BUFFERED, OUTCOMES
 
 TELEMETRY_SCHEMA = "fft-telemetry"
-TELEMETRY_VERSION = 1
+# v2 (PR 7): per-round profiler phase gauges (``phase.*``, ``round_wall_s``)
+# emitted by the round loops.  Structurally backward compatible — v1 logs
+# (no phase gauges) still load; the loader accepts both versions.
+TELEMETRY_VERSION = 2
+TELEMETRY_VERSIONS_READABLE = (1, 2)
 
 
 def _jnum(x):
@@ -112,10 +116,12 @@ class RunReport(Sink):
                 kind = rec.get("record")
                 if kind == "run_start":
                     if (rec.get("schema") != TELEMETRY_SCHEMA
-                            or rec.get("version") != TELEMETRY_VERSION):
+                            or rec.get("version")
+                            not in TELEMETRY_VERSIONS_READABLE):
                         raise ValueError(
                             f"{path}:{line_no}: not a "
-                            f"{TELEMETRY_SCHEMA} v{TELEMETRY_VERSION} log "
+                            f"{TELEMETRY_SCHEMA} "
+                            f"v{TELEMETRY_VERSIONS_READABLE} log "
                             f"(got {rec.get('schema')!r} "
                             f"v{rec.get('version')!r})")
                     rep.meta = rec.get("meta", {})
@@ -245,6 +251,50 @@ class RunReport(Sink):
         if tot > 0:
             mass = {k: v / tot for k, v in mass.items()}
         return mass
+
+    def total_wall_s(self) -> float:
+        """Measured wall seconds summed over rounds (the ``round_wall_s``
+        gauge the round loops emit; 0.0 for uninstrumented/v1 records)."""
+        return float(math.fsum(r["gauges"].get("round_wall_s", 0.0)
+                               for r in self.rounds))
+
+    def phase_seconds(self, rnd: Optional[int] = None) -> Dict[str, float]:
+        """Per-phase exclusive wall seconds (``phase.*`` gauges), summed
+        over the run — or for one round — keyed by the bare phase name."""
+        rounds = (self.rounds if rnd is None
+                  else [r for r in self.rounds if r["round"] == rnd])
+        out: Dict[str, float] = {}
+        for r in rounds:
+            for k, v in r["gauges"].items():
+                if k.startswith("phase."):
+                    name = k[len("phase."):]
+                    out[name] = out.get(name, 0.0) + float(v)
+        return out
+
+    def phase_table(self) -> List[Dict[str, float]]:
+        """Per-phase profile of the run, hottest phase first.
+
+        One row per recorded ``phase.*`` gauge plus a final ``(untimed)``
+        row for wall time no phase claimed: ``{"phase", "total_s",
+        "s_per_round", "share"}`` where ``share`` is the fraction of the
+        measured round wall time (phases are exclusive, so shares sum to
+        ≤ 1 and the ``(untimed)`` row closes the gap).  Empty when the run
+        recorded no phase gauges (telemetry off, or a v1 log)."""
+        totals = self.phase_seconds()
+        if not totals:
+            return []
+        wall = self.total_wall_s()
+        n = max(self.n_rounds, 1)
+        rows = [{"phase": name, "total_s": s, "s_per_round": s / n,
+                 "share": (s / wall) if wall > 0 else math.nan}
+                for name, s in sorted(totals.items(),
+                                      key=lambda kv: -kv[1])]
+        untimed = wall - math.fsum(totals.values())
+        if wall > 0:
+            rows.append({"phase": "(untimed)", "total_s": untimed,
+                         "s_per_round": untimed / n,
+                         "share": untimed / wall})
+        return rows
 
     def rung_histogram(self) -> Dict[str, int]:
         """Uploads per codec rung over the whole run (every outcome that

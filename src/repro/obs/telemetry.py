@@ -147,20 +147,40 @@ NULL_TELEMETRY = NullTelemetry()
 
 
 class _Timer:
-    __slots__ = ("_tel", "_name", "_t0")
+    """Exclusive (self-time) phase timer.
+
+    Timers nest: entering a timer while another is active *pauses* the
+    outer one, so each phase accumulates only the time no inner phase
+    claimed.  Disjoint-by-construction means per-round phase seconds sum
+    to at most the round's wall time, never more — ``phase.local_update``
+    triggered from inside a strategy's aggregation step is attributed to
+    the local update, not double-counted under ``phase.aggregate``.
+    """
+
+    __slots__ = ("_tel", "_name")
 
     def __init__(self, tel: "Telemetry", name: str):
         self._tel = tel
         self._name = name
 
     def __enter__(self):
-        self._t0 = time.perf_counter()
+        now = time.perf_counter()
+        stack = self._tel._timer_stack
+        if stack:                          # pause the enclosing phase
+            outer = stack[-1]
+            timers = self._tel.timers_s
+            timers[outer[0]] = timers.get(outer[0], 0.0) + (now - outer[1])
+        stack.append([self._name, now])
         return self
 
     def __exit__(self, *exc):
-        self._tel.timers_s[self._name] = (
-            self._tel.timers_s.get(self._name, 0.0) +
-            (time.perf_counter() - self._t0))
+        now = time.perf_counter()
+        stack = self._tel._timer_stack
+        name, t0 = stack.pop()
+        timers = self._tel.timers_s
+        timers[name] = timers.get(name, 0.0) + (now - t0)
+        if stack:                          # resume the enclosing phase
+            stack[-1][1] = now
         return False
 
 
@@ -184,6 +204,7 @@ class Telemetry:
         self.meta: Dict[str, Any] = {}
         self.counters: Dict[str, float] = {}
         self.timers_s: Dict[str, float] = {}
+        self._timer_stack: List[list] = []   # active (name, t0) phase frames
         self._round: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------ lifecycle
@@ -259,6 +280,12 @@ class Telemetry:
         self.counters[name] = self.counters.get(name, 0.0) + inc
 
     def timer(self, name: str) -> _Timer:
+        """Context manager accumulating *exclusive* wall seconds into
+        ``timers_s[name]`` (nested timers pause the enclosing one).  Names
+        prefixed ``phase.`` are the per-round profiler phases: the round
+        loops emit each round's delta as a same-named gauge, so phase
+        seconds land in the ``RunReport`` / NDJSON log per round and
+        ``RunReport.phase_table()`` can break a run down by phase."""
         return _Timer(self, name)
 
     # ------------------------------------------------------------- flushing

@@ -1,0 +1,316 @@
+"""PR 7: machine-readable bench baselines + cross-run regression diffing.
+
+Unit coverage of the ``BENCH_<name>.json`` schema (``benchmarks.common``)
+and the ``benchmarks.report diff`` gate: kind classification, JSON
+round-trip, tolerance bands per metric kind, pairing/expansion semantics,
+and the CLI exit codes (0 clean / 1 regression / 2 usage or schema error).
+No FFT runs — everything here works on synthetic baselines, so the file
+stays fast enough for tier-1.
+"""
+import copy
+import json
+
+import pytest
+
+from benchmarks.common import (BENCH_SCHEMA, BENCH_VERSION, BenchResult,
+                               env_fingerprint, load_bench_json,
+                               write_bench_json)
+from benchmarks.report import (ACC_ATOL, COUNT_ATOL, OK, REGRESSION,
+                               TIMING_FLOOR_US, TIMING_RTOL, WARNING,
+                               diff_baselines, diff_metric,
+                               expand_bench_paths, main, pair_baselines)
+from benchmarks.run import run_benches
+
+
+# ---------------------------------------------------------------------------
+# BenchResult: kind classification and (de)serialization
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,derived,value,kind", [
+    ("adaptive:diurnal/sync/fp32", "0.8125", 0.8125, "accuracy"),
+    ("adaptive:diurnal/sync/replay_bit_exact", "1", 1.0, "exact"),
+    ("fidelity:diurnal/sync/none/mean_distortion", "0.0312", 0.0312,
+     "accuracy"),
+    ("adaptive:diurnal/sync/fp32/participants", "5.250", 5.25, "count"),
+    ("adaptive:diurnal/sync/fp32/uplink_MB", "88.00", 88.0, "count"),
+    ("comm:lossy/sync/fp32/upload_bytes", "4000000", 4e6, "count"),
+    ("kernels/fedagg_ref_xla", "14.6", 14.6, "timing"),
+    ("async:staleness/t_to_sync_final", "inf", float("inf"), "timing"),
+    ("table2/us_per_round_total_s", "1.5", 1.5, "count"),
+    ("adaptive:diurnal/sync/rungs", "sign1:3|fp16:2", None, "info"),
+])
+def test_classify(name, derived, value, kind):
+    got_value, got_kind = BenchResult.classify(name, derived)
+    assert got_kind == kind
+    assert got_value == value
+
+
+def test_from_csv_row_and_back():
+    r = BenchResult.from_csv_row("fig2/fedavg,1234,0.7500")
+    assert (r.name, r.us_per_call, r.derived) == ("fig2/fedavg", 1234.0,
+                                                  "0.7500")
+    assert (r.value, r.kind) == (0.75, "accuracy")
+    assert r.csv_row() == "fig2/fedavg,1234,0.7500"
+    # derived may itself contain commas (info payloads)
+    r2 = BenchResult.from_csv_row("x/ERROR,0,ValueError:a,b")
+    assert r2.derived == "ValueError:a,b" and r2.kind == "info"
+    with pytest.raises(ValueError, match="not a name"):
+        BenchResult.from_csv_row("just-one-field")
+    with pytest.raises(ValueError, match="unknown metric kind"):
+        BenchResult(name="x", us_per_call=0, derived="0", kind="vibes")
+
+
+def test_json_roundtrip_preserves_phases():
+    r = BenchResult(name="fidelity:a/sync/none", us_per_call=5000.0,
+                    derived="0.8000", value=0.8, kind="accuracy",
+                    phases={"uplink": 0.12, "local_update": 0.5})
+    r2 = BenchResult.from_json(r.to_json())
+    assert r2 == r
+
+
+def _write(tmp_path, fname, bench, results, mutate=None):
+    path = str(tmp_path / fname)
+    write_bench_json(path, bench, results, elapsed_s=1.0,
+                     env={"quick": True})
+    if mutate:
+        doc = json.load(open(path))
+        mutate(doc)
+        json.dump(doc, open(path, "w"))
+    return path
+
+
+def test_write_load_schema_gate(tmp_path):
+    res = [BenchResult.from_csv_row("a/x,100,0.5")]
+    path = _write(tmp_path, "BENCH_a.json", "a", res)
+    doc = load_bench_json(path)
+    assert (doc["schema"], doc["version"]) == (BENCH_SCHEMA, BENCH_VERSION)
+    assert doc["bench"] == "a" and len(doc["results"]) == 1
+    bad = _write(tmp_path, "BENCH_bad.json", "a", res,
+                 mutate=lambda d: d.update(version=99))
+    with pytest.raises(ValueError, match="not a fft-bench"):
+        load_bench_json(bad)
+    worse = _write(tmp_path, "BENCH_worse.json", "a", res,
+                   mutate=lambda d: d.pop("results"))
+    with pytest.raises(ValueError, match="missing 'results'"):
+        load_bench_json(worse)
+
+
+def test_env_fingerprint_fields():
+    env = env_fingerprint(quick=True)
+    for key in ("git_sha", "jax", "numpy", "python", "quick", "date"):
+        assert key in env
+    assert env["quick"] is True
+    assert env["date"].endswith("Z")
+
+
+# ---------------------------------------------------------------------------
+# diff_metric: one band per kind
+# ---------------------------------------------------------------------------
+def _res(value, kind="accuracy", us=1000.0):
+    return BenchResult(name="m", us_per_call=us, derived=str(value),
+                       value=None if kind == "info" else float(value),
+                       kind=kind)
+
+
+def test_accuracy_band_is_one_sided():
+    old = _res(0.80)
+    assert diff_metric("accuracy", old, _res(0.80 - ACC_ATOL / 2))[0] == OK
+    assert diff_metric("accuracy", old, _res(0.95))[0] == OK   # improvement
+    status, note = diff_metric("accuracy", old, _res(0.80 - 2 * ACC_ATOL))
+    assert status == REGRESSION and str(ACC_ATOL) in note
+
+
+def test_count_band_is_symmetric():
+    old = _res(5.0, "count")
+    assert diff_metric("count", old, _res(5.0 + COUNT_ATOL / 2, "count"))[0] \
+        == OK
+    for moved in (5.0 + 2 * COUNT_ATOL, 5.0 - 2 * COUNT_ATOL):
+        assert diff_metric("count", old, _res(moved, "count"))[0] \
+            == REGRESSION
+
+
+def test_exact_band_is_bit_for_bit():
+    old = _res(1, "exact")
+    assert diff_metric("exact", old, _res(1, "exact"))[0] == OK
+    assert diff_metric("exact", old, _res(0, "exact"))[0] == REGRESSION
+
+
+def test_timing_band_floor_and_strictness():
+    lo = TIMING_FLOOR_US / 2
+    # below the noise floor (both sides) nothing is flagged — interpreter
+    # jitter territory, a 90% "blowup" of 100us means nothing
+    assert diff_metric("timing", _res(lo, "timing"),
+                       _res(lo * 1.9, "timing"))[0] == OK
+    old = _res(10_000, "timing")
+    slow = _res(10_000 * (1 + TIMING_RTOL) + TIMING_FLOOR_US + 1, "timing")
+    assert diff_metric("timing", old, slow)[0] == WARNING
+    assert diff_metric("timing", old, slow, strict_timing=True)[0] \
+        == REGRESSION
+    # inf -> inf passes (t_to_* metrics may legitimately never converge)
+    inf = _res(float("inf"), "timing")
+    assert diff_metric("timing", inf, inf)[0] == OK
+
+
+def test_info_band_only_warns():
+    old, new = _res("a|b", "info"), _res("a|c", "info")
+    assert diff_metric("info", old, old)[0] == OK
+    assert diff_metric("info", old, new) == (WARNING, "payload changed")
+
+
+# ---------------------------------------------------------------------------
+# diff_baselines: pairing, missing metrics, table, exit codes
+# ---------------------------------------------------------------------------
+ROWS = ["a/acc,1000,0.8000", "a/acc/participants,0,5.000",
+        "a/replay_bit_exact,0,1", "kernels/k0,900,14.6"]
+
+
+def _baseline_pair(tmp_path, perturb=None):
+    res = [BenchResult.from_csv_row(r) for r in ROWS]
+    old = _write(tmp_path, "old_BENCH_a.json", "a", res)
+    new_res = copy.deepcopy(res)
+    if perturb:
+        perturb(new_res)
+    new = _write(tmp_path, "new_BENCH_a.json", "a", new_res)
+    return [old, new]
+
+
+def test_diff_identical_is_clean(tmp_path):
+    md, n_reg = diff_baselines(_baseline_pair(tmp_path))
+    assert n_reg == 0
+    assert "No regressions, no warnings." in md
+
+
+def test_diff_flags_accuracy_regression(tmp_path):
+    def perturb(res):
+        res[0].value, res[0].derived = 0.70, "0.7000"
+    md, n_reg = diff_baselines(_baseline_pair(tmp_path, perturb))
+    assert n_reg == 1
+    assert "| a | a/acc | accuracy | 0.8000 | 0.7000 | REGRESSION |" in md
+
+
+def test_diff_flags_missing_metric_and_new_metric(tmp_path):
+    def perturb(res):
+        res.pop(1)                          # participants disappears
+        res.append(BenchResult.from_csv_row("a/new_metric,0,1.0"))
+    md, n_reg = diff_baselines(_baseline_pair(tmp_path, perturb))
+    assert n_reg == 1
+    assert "metric disappeared" in md and "a/acc/participants" in md
+    assert "new metric, no baseline" in md and "a/new_metric" in md
+
+
+def test_diff_flags_exact_flip_and_count_move(tmp_path):
+    def perturb(res):
+        res[1].value, res[1].derived = 6.0, "6.000"     # count move
+        res[2].value, res[2].derived = 0.0, "0"         # exact flip
+    md, n_reg = diff_baselines(_baseline_pair(tmp_path, perturb))
+    assert n_reg == 2
+    assert "exactness indicator changed" in md
+    assert f"moved more than ±{COUNT_ATOL}" in md
+
+
+def test_diff_timing_warns_unless_strict(tmp_path):
+    def perturb(res):
+        res[3].us_per_call *= 4
+        res[3].value *= 4
+        res[3].derived = str(res[3].value)
+    paths = _baseline_pair(tmp_path, perturb)
+    md, n_reg = diff_baselines(paths)
+    assert n_reg == 0 and "warning" in md
+    md, n_reg = diff_baselines(paths, strict_timing=True)
+    assert n_reg >= 1 and "REGRESSION" in md
+
+
+def test_diff_us_per_call_checked_on_every_row(tmp_path):
+    def perturb(res):
+        res[0].us_per_call = 100_000        # headline metric got 100x slower
+    md, n_reg = diff_baselines(_baseline_pair(tmp_path, perturb),
+                               strict_timing=True)
+    assert n_reg == 1 and "us_per_call" in md
+
+
+def test_unpaired_bench_is_a_regression(tmp_path):
+    paths = _baseline_pair(tmp_path)
+    lone = _write(tmp_path, "BENCH_lonely.json", "lonely",
+                  [BenchResult.from_csv_row("l/x,0,1.0")])
+    md, n_reg = diff_baselines(paths + [lone])
+    assert n_reg == 1
+    assert "(whole bench)" in md and "no candidate run to compare" in md
+
+
+def test_pairing_rejects_third_occurrence(tmp_path):
+    paths = _baseline_pair(tmp_path)
+    third = _write(tmp_path, "BENCH_third.json", "a",
+                   [BenchResult.from_csv_row("a/acc,0,0.8")])
+    with pytest.raises(ValueError, match="more than twice"):
+        pair_baselines(paths + [third])
+    with pytest.raises(ValueError, match="appeared only once"):
+        diff_baselines(paths[:1])
+
+
+def test_expand_bench_paths(tmp_path):
+    old_dir, new_dir = tmp_path / "old", tmp_path / "new"
+    old_dir.mkdir(), new_dir.mkdir()
+    res = [BenchResult.from_csv_row("a/x,0,1.0")]
+    _write(old_dir, "BENCH_a.json", "a", res)
+    _write(new_dir, "BENCH_a.json", "a", res)
+    paths = expand_bench_paths([str(old_dir), str(new_dir)])
+    assert [p.split("/")[-2] for p in paths] == ["old", "new"]
+    md, n_reg = diff_baselines(paths)
+    assert n_reg == 0
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(ValueError, match="no BENCH"):
+        expand_bench_paths([str(empty)])
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (benchmarks.report main / benchmarks.run run_benches)
+# ---------------------------------------------------------------------------
+def test_report_main_exit_codes(tmp_path, capsys):
+    paths = _baseline_pair(
+        tmp_path, lambda res: setattr(res[0], "derived", "0.5000")
+        or setattr(res[0], "value", 0.5))
+    clean = tmp_path / "c"
+    clean.mkdir()
+    assert main(["report", "diff"] + _baseline_pair(clean)) == 0
+    assert main(["report", "diff"] + paths) == 1
+    out = capsys.readouterr().out
+    assert "| REGRESSION |" in out and "a/acc" in out
+    # usage / schema errors exit 2 without a traceback
+    assert main(["report", "diff"]) == 2
+    assert main(["report"]) == 2
+    bogus = tmp_path / "BENCH_bogus.json"
+    bogus.write_text('{"schema": "other", "version": 1}\n')
+    assert main(["report", "diff", str(bogus), str(bogus)]) == 2
+    err = capsys.readouterr().err
+    assert "not a fft-bench" in err
+
+
+class _FakeBench:
+    def __init__(self, rows=None, exc=None):
+        self._rows, self._exc = rows or [], exc
+
+    def run(self, quick=True):
+        if self._exc:
+            raise self._exc
+        return self._rows
+
+
+def test_run_benches_tracks_failures(tmp_path, capsys):
+    benches = {"good": _FakeBench(["g/x,100,0.9"]),
+               "bad": _FakeBench(exc=RuntimeError("boom")),
+               "alsogood": _FakeBench(["h/y,50,1.0"])}
+    rc = run_benches(benches, quick=True, json_dir=str(tmp_path))
+    assert rc == 1
+    out, err = capsys.readouterr()
+    # the failing bench emits an ERROR row but never stops later benches
+    assert "bad/ERROR,0,RuntimeError:boom" in out
+    assert "h/y,50,1.0" in out
+    assert "# FAILED: bad" in err
+    # JSON baselines exist for the successes only
+    assert (tmp_path / "BENCH_good.json").exists()
+    assert (tmp_path / "BENCH_alsogood.json").exists()
+    assert not (tmp_path / "BENCH_bad.json").exists()
+    doc = load_bench_json(str(tmp_path / "BENCH_good.json"))
+    assert doc["results"][0]["name"] == "g/x"
+    assert run_benches({"good": benches["good"]}, quick=True,
+                       json_dir=None) == 0

@@ -368,6 +368,164 @@ def test_console_sink_line(runs, capsys):
     assert "agg=" in out and "wait=" in out
 
 
+# ---------------------------------------------------------------------------
+# PR 7: per-phase profiler — exclusive timers, round gauges, NDJSON v2
+# ---------------------------------------------------------------------------
+PHASE_CORE = {"phase.uplink", "phase.local_update", "phase.aggregate",
+              "phase.network_draw"}
+
+
+@pytest.mark.parametrize("combo", COMBOS, ids=lambda c: "/".join(c))
+def test_phase_gauges_bounded_by_round_wall(runs, combo):
+    """Phases are exclusive timers: per round they can never claim more
+    than the measured wall time, and over the run they should cover the
+    bulk of it (the ``(untimed)`` remainder is loop bookkeeping)."""
+    rep = runs[combo][0].report
+    claimed_total, wall_total = 0.0, 0.0
+    for r in rep.rounds:
+        wall = r["gauges"]["round_wall_s"]
+        claimed = sum(v for k, v in r["gauges"].items()
+                      if k.startswith("phase."))
+        assert 0.0 < claimed <= wall + 1e-6
+        claimed_total += claimed
+        wall_total += wall
+    assert wall_total == pytest.approx(rep.total_wall_s())
+    assert claimed_total / wall_total > 0.5
+
+
+@pytest.mark.parametrize("combo", COMBOS, ids=lambda c: "/".join(c))
+def test_phase_timer_vocabulary(runs, combo):
+    mode, codec, _ = combo
+    runner, _hist = runs[combo]
+    timers = runner.report.summary["timers_s"]
+    phases = {k for k in timers if k.startswith("phase.")}
+    assert PHASE_CORE <= phases
+    assert "phase.eval" in phases           # eval_every=2, rounds=5
+    if codec.startswith("adaptive:"):
+        assert "phase.controller" in phases
+    if mode == "buffered":
+        assert "phase.buffer" in phases
+    # all timers are positive and (being accumulators) finite
+    for name in phases:
+        assert 0.0 < timers[name] < 1e4
+
+
+def test_phase_timers_exclusive_nesting():
+    """A nested timer pauses its parent: the two buckets partition the
+    elapsed time instead of double-counting the inner span."""
+    import time as _time
+    tel = Telemetry()
+    t0 = _time.perf_counter()
+    with tel.timer("phase.outer"):
+        _time.sleep(0.02)
+        with tel.timer("phase.inner"):
+            _time.sleep(0.04)
+        _time.sleep(0.01)
+    elapsed = _time.perf_counter() - t0
+    outer, inner = tel.timers_s["phase.outer"], tel.timers_s["phase.inner"]
+    assert inner >= 0.04
+    assert outer >= 0.03
+    assert outer + inner <= elapsed + 1e-6
+    # timers accumulate monotonically across reuse
+    with tel.timer("phase.outer"):
+        pass
+    assert tel.timers_s["phase.outer"] >= outer
+
+
+def test_phase_table_untimed_closes_gap(runs):
+    rep = runs[("sync", "qsgd:4", "fedauto")][0].report
+    table = rep.phase_table()
+    assert table and table[-1]["phase"] == "(untimed)"
+    named = table[:-1]
+    # hottest-first ordering over the named phases
+    assert [p["total_s"] for p in named] == \
+        sorted((p["total_s"] for p in named), reverse=True)
+    # untimed row closes the accounting: totals and shares both telescope
+    assert sum(p["total_s"] for p in table) == \
+        pytest.approx(rep.total_wall_s())
+    assert sum(p["share"] for p in table) == pytest.approx(1.0)
+    for p in table:
+        assert p["s_per_round"] == pytest.approx(p["total_s"] / rep.n_rounds)
+    # phase_seconds keys are the bare names feeding the table
+    assert {p["phase"] for p in named} == set(rep.phase_seconds())
+
+
+def test_phase_seconds_single_round_slice(runs):
+    rep = runs[("sync", "qsgd:4", "fedauto")][0].report
+    whole = rep.phase_seconds()
+    per_round = [rep.phase_seconds(r["round"]) for r in rep.rounds]
+    for name, total in whole.items():
+        assert sum(pr.get(name, 0.0) for pr in per_round) == \
+            pytest.approx(total)
+
+
+def test_ndjson_v2_roundtrips_phase_gauges(runs):
+    runner, _ = runs[("buffered", "adaptive:sign1-fp16", "fedauto_async")]
+    rep2 = RunReport.from_ndjson(runner.cfg.telemetry_log)
+    assert rep2.total_wall_s() == pytest.approx(
+        runner.report.total_wall_s())
+    want, got = runner.report.phase_seconds(), rep2.phase_seconds()
+    assert set(got) == set(want)
+    for name in want:
+        assert got[name] == pytest.approx(want[name])
+    assert rep2.phase_table()
+    reconcile(rep2, runner)                 # telescoping holds post-load
+
+
+def test_ndjson_v1_log_still_loads(runs, tmp_path):
+    """A pre-profiler v1 log (no phase gauges) must keep loading under the
+    v2 reader, with the phase views degrading to empty."""
+    import json as _json
+    src = runs[("sync", "fp32", "fedavg")][0].cfg.telemetry_log
+    dst = tmp_path / "v1.ndjson"
+    lines = []
+    for line in open(src):
+        doc = _json.loads(line)
+        if doc.get("record") == "run_start":
+            assert doc["version"] == 2
+            doc["version"] = 1
+        if doc.get("record") == "round":
+            doc["gauges"] = {k: v for k, v in doc["gauges"].items()
+                             if not k.startswith("phase.")
+                             and k != "round_wall_s"}
+        lines.append(_json.dumps(doc))
+    dst.write_text("\n".join(lines) + "\n")
+    rep = RunReport.from_ndjson(str(dst))
+    assert rep.n_rounds == ROUNDS
+    assert rep.phase_seconds() == {}
+    assert rep.phase_table() == []
+    assert rep.total_wall_s() == 0.0
+    assert rep.drop_cause_counts() == \
+        runs[("sync", "fp32", "fedavg")][0].report.drop_cause_counts()
+
+
+def test_reconcile_flags_tampered_phase_gauges(runs):
+    runner, _ = runs[("sync", "qsgd:4", "fedauto")]
+    # inflating one round's phase gauge breaks the telescoping check
+    rep = copy.deepcopy(runner.report)
+    gauges = rep.rounds[0]["gauges"]
+    name = next(k for k in gauges if k.startswith("phase."))
+    gauges[name] += 10.0
+    with pytest.raises(ReconcileError, match="gauges sum"):
+        reconcile(rep, runner)
+    # phases claiming more than the measured wall break the budget check
+    rep2 = copy.deepcopy(runner.report)
+    rep2.summary["timers_s"] = {}           # silence the telescoping check
+    rep2.rounds[0]["gauges"]["round_wall_s"] = 1e-9
+    with pytest.raises(ReconcileError, match="round wall"):
+        reconcile(rep2, runner)
+
+
+def test_run_report_renders_phase_section(runs):
+    runner, _ = runs[("sync", "qsgd:4", "fedauto")]
+    md = render_markdown([runner.report], ["qsgd"])
+    assert "## Phase timings" in md
+    assert "phase_table" not in md          # bare names, not repr noise
+    assert "(untimed)" in md
+    for name in runner.report.phase_seconds():
+        assert name in md
+
+
 def test_beta_row_builder():
     row = beta_row(0.25, client=3, origin_round=2, staleness=1,
                    rung="qsgd:4", distortion=0.1)
