@@ -9,9 +9,19 @@ Three modes:
 * run-report — Markdown tables over one or more telemetry NDJSON logs
   (``FFTConfig.telemetry_log``; see ``repro.obs``): per-run summary,
   drop-cause breakdown, bytes-vs-participation, β-mass by staleness/rung,
-  per-phase profiler timings:
+  distribution quantiles, health verdicts, per-phase profiler timings.
+  Full-mode and sketch-mode logs both render (``load_report`` picks the
+  report type per file); ``--fail-on-alarm`` exits 1 when any run's health
+  verdict carries alarms (the CI fault-injection gate):
 
-      PYTHONPATH=src python -m benchmarks.report run-report run1.ndjson ...
+      PYTHONPATH=src python -m benchmarks.report run-report [--fail-on-alarm] run1.ndjson ...
+
+* watch — live dashboard over an NDJSON log another process is writing
+  (per-record flush + truncated-final-line tolerance make it readable
+  mid-run); redraws in place until the run_end record lands.  ``--once``
+  renders a single frame and exits (CI smoke):
+
+      PYTHONPATH=src python -m benchmarks.report watch [--interval 2] [--once] run.ndjson
 
 * diff — cross-run regression gate over ``BENCH_<name>.json`` baselines
   (written by ``python -m benchmarks.run``).  Arguments are files or
@@ -33,7 +43,10 @@ import sys
 
 USAGE = (
     "usage: python -m benchmarks.report <dryrun_results.json>\n"
-    "       python -m benchmarks.report run-report <telemetry.ndjson> [...]\n"
+    "       python -m benchmarks.report run-report [--fail-on-alarm] "
+    "<telemetry.ndjson> [...]\n"
+    "       python -m benchmarks.report watch [--interval N] [--once] "
+    "<telemetry.ndjson>\n"
     "       python -m benchmarks.report diff [--strict-timing] "
     "<old.json|dir> [...] <new.json|dir> [...]")
 
@@ -79,10 +92,25 @@ def render(path: str) -> str:
 
 
 def render_run_report(paths) -> str:
-    """Markdown run report over telemetry NDJSON logs (``repro.obs``)."""
-    from repro.obs import RunReport, render_markdown
-    reports = [RunReport.from_ndjson(p) for p in paths]
+    """Markdown run report over telemetry NDJSON logs (``repro.obs``);
+    full-mode and sketch-mode logs mix freely."""
+    from repro.obs import load_report, render_markdown
+    reports = [load_report(p) for p in paths]
     return render_markdown(reports)
+
+
+def run_report_alarms(paths) -> int:
+    """Total health alarms across the logs (for ``--fail-on-alarm``)."""
+    from repro.obs import load_report
+    total = 0
+    for p in paths:
+        rep = load_report(p)
+        verdict = rep.health_verdict()
+        if verdict is not None:
+            total += int(verdict.get("n_alarms", 0))
+        else:
+            total += len(getattr(rep, "health", []) or [])
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -238,10 +266,40 @@ def main(argv) -> int:
         print(USAGE, file=sys.stderr)
         return 2
     if argv[1] == "run-report":
-        if len(argv) < 3:
+        args = argv[2:]
+        fail_on_alarm = "--fail-on-alarm" in args
+        args = [a for a in args if a != "--fail-on-alarm"]
+        if not args:
             print(USAGE, file=sys.stderr)
             return 2
-        print(render_run_report(argv[2:]))
+        print(render_run_report(args))
+        if fail_on_alarm:
+            n = run_report_alarms(args)
+            if n:
+                print(f"run-report: {n} health alarm(s)", file=sys.stderr)
+                return 1
+        return 0
+    if argv[1] == "watch":
+        args = argv[2:]
+        once = "--once" in args
+        args = [a for a in args if a != "--once"]
+        interval = 2.0
+        if "--interval" in args:
+            i = args.index("--interval")
+            try:
+                interval = float(args[i + 1])
+            except (IndexError, ValueError):
+                print(USAGE, file=sys.stderr)
+                return 2
+            del args[i:i + 2]
+        if len(args) != 1:
+            print(USAGE, file=sys.stderr)
+            return 2
+        from repro.obs import watch
+        try:
+            watch(args[0], interval=interval, once=once)
+        except KeyboardInterrupt:
+            pass
         return 0
     if argv[1] == "diff":
         args = argv[2:]

@@ -9,6 +9,12 @@ tables ``python -m benchmarks.report run-report <log.ndjson>`` prints.
     PYTHONPATH=src python examples/telemetry_report.py
     PYTHONPATH=src python examples/telemetry_report.py --mode buffered \\
         --codec adaptive:sign1-fp16 --out /tmp/telemetry.ndjson
+
+``--telemetry sketch`` records the same run through the bounded-memory
+sketch sink (PR 8) — byte totals stay bit-equal, distributions become
+ε-approximate quantiles; ``--trace spans.json`` additionally exports the
+phase timers as Perfetto-loadable Chrome trace-event JSON and verifies the
+spans telescope back to the report's phase gauges.
 """
 from __future__ import annotations
 
@@ -17,7 +23,8 @@ import argparse
 from repro.core.strategies import STRATEGIES
 from repro.fl.runtime import FFTConfig
 from repro.fl.toy import make_toy_runner
-from repro.obs import RunReport, reconcile, render_markdown
+from repro.obs import (load_report, reconcile, render_markdown,
+                       verify_trace)
 
 
 def main() -> None:
@@ -33,6 +40,11 @@ def main() -> None:
                     help="NDJSON event-log path")
     ap.add_argument("--report-out", default=None,
                     help="also write the Markdown report here")
+    ap.add_argument("--telemetry", default="full",
+                    choices=["full", "sketch"],
+                    help="flight-recorder mode (sketch = bounded memory)")
+    ap.add_argument("--trace", default=None,
+                    help="also export a Chrome trace-event JSON here")
     args = ap.parse_args()
 
     strategy = args.strategy or ("fedauto" if args.mode == "sync"
@@ -41,8 +53,8 @@ def main() -> None:
                     failure_mode=f"scenario:{args.world}", deadline_s=5.0,
                     model_bytes=4e6, server_mode=args.mode, tau_max=3,
                     buffer_k=3, codec=args.codec, eval_every=2, seed=0,
-                    telemetry=True, telemetry_log=args.out,
-                    telemetry_console=True)
+                    telemetry=args.telemetry, telemetry_log=args.out,
+                    telemetry_console=True, telemetry_trace=args.trace)
     runner = make_toy_runner(cfg, n_samples=600, public_per_class=10,
                              pretrain_steps=15)
     hist = runner.run(STRATEGIES[strategy](), rounds=args.rounds)
@@ -50,8 +62,9 @@ def main() -> None:
 
     # the NDJSON log round-trips to the same flight record the run held in
     # memory, and both agree with CommState's byte totals and the loop's
-    # participant counts
-    reloaded = RunReport.from_ndjson(args.out)
+    # participant counts (load_report picks RunReport or SketchReport by
+    # the log's recorded telemetry mode)
+    reloaded = load_report(args.out)
     nums = reconcile(reloaded, runner)
     assert (reloaded.drop_cause_counts()
             == runner.report.drop_cause_counts())
@@ -64,6 +77,11 @@ def main() -> None:
         print(f"  {row['phase']:<14s} {row['total_s']:8.3f} s total"
               f"  {row['s_per_round'] * 1e3:8.2f} ms/round"
               f"  {row['share'] * 100:5.1f}%")
+
+    if args.trace:
+        stats = verify_trace(args.trace, runner.report)
+        print(f"\ntrace verified: {stats} → load {args.trace} in "
+              f"https://ui.perfetto.dev")
 
     md = render_markdown([reloaded])
     print("\n" + md)

@@ -157,6 +157,7 @@ class AdaptiveCommController:
         self.assignments: Dict[int, RoundAssignment] = {}
         self.n_success = 0
         self.n_miss = 0
+        self._last_idx: Optional[np.ndarray] = None  # previous rung indices
 
     # ------------------------------------------------------------- policy
     def rung_index_for(self, cap_bps: float) -> int:
@@ -182,7 +183,8 @@ class AdaptiveCommController:
         this round (the round-1 full-model enrollment transfer) so
         ``observe`` later divides the wire bits that actually traveled by
         the observed time."""
-        with self.telemetry.timer("phase.controller"):
+        tel = self.telemetry
+        with tel.timer("phase.controller"):
             idx = [self.rung_index_for(c) for c in self.cap_hat]
             a = RoundAssignment(
                 rnd=rnd,
@@ -193,6 +195,20 @@ class AdaptiveCommController:
                 selected=(None if selected is None
                           else np.asarray(selected, dtype=bool).copy()))
             self.assignments[rnd] = a
+            idx_arr = np.asarray(idx)
+            if tel:
+                if self._last_idx is not None:
+                    # fraction of clients whose assigned rung changed since
+                    # the previous assignment — the health monitors' rung-
+                    # thrash signal (policy instability, not selection noise,
+                    # so it is measured over all clients)
+                    churn = float((idx_arr != self._last_idx).mean())
+                    tel.gauge(rnd, "rung_churn", churn)
+                # per-client capacity estimates as a distribution (folded
+                # into a quantile sketch in sketch mode, dropped in full
+                # mode where cap_hat_mean_bps already summarizes them)
+                tel.distribution(rnd, "cap_hat_bps", self.cap_hat)
+            self._last_idx = idx_arr
         return a
 
     # ---------------------------------------------------------- learning

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -79,13 +79,29 @@ class FFTConfig:
     #                                       strategy's own fidelity_discount
     #                                       knob overrides this)
     # --- run telemetry (repro.obs) --------------------------------------------
-    telemetry: bool = False               # per-round flight recorder; off =
+    telemetry: Any = False                # per-round flight recorder; off =
     #                                       shared no-op hub, bit-identical
-    #                                       to an uninstrumented run
+    #                                       to an uninstrumented run.
+    #                                       True/"full": per-client rows;
+    #                                       "sketch": bounded-memory mode —
+    #                                       exact counters/byte totals +
+    #                                       streaming quantile sketches,
+    #                                       state O(rounds + K) instead of
+    #                                       O(n_clients × rounds)
     telemetry_log: Optional[str] = None   # NDJSON event-log path (implies
     #                                       telemetry; observational only —
     #                                       replay never reads it)
     telemetry_console: bool = False       # per-round terminal summary line
+    #                                       (implies telemetry)
+    telemetry_sketch_k: int = 64          # sketch mode: reservoir-sample rows
+    telemetry_health: bool = True         # online run-health monitors (when
+    #                                       telemetry is on): alarm records +
+    #                                       run-end verdict; observational
+    telemetry_trace: Optional[str] = None  # Chrome trace-event JSON path
+    #                                       (implies telemetry; open the file
+    #                                       in Perfetto for a flamegraph of
+    #                                       the phase timers)
+    telemetry_dashboard: bool = False     # in-place live console dashboard
     #                                       (implies telemetry)
 
 
@@ -465,19 +481,43 @@ class FFTRunner:
         error-feedback residuals) and attach it to every collaborator that
         emits into it.  Disabled (the default) this is the shared falsy
         no-op hub — zero per-round work, bit-identical histories."""
-        from repro.obs import (ConsoleSink, NdjsonSink, NULL_TELEMETRY,
-                               RunReport, Telemetry)
+        from repro.obs import (ChromeTraceRecorder, ConsoleSink,
+                               DashboardSink, HealthMonitors, NdjsonSink,
+                               NULL_TELEMETRY, RunReport, SketchReport,
+                               SketchState, Telemetry)
         cfg = self.cfg
-        enabled = bool(cfg.telemetry or cfg.telemetry_log
-                       or cfg.telemetry_console)
+        mode = cfg.telemetry
+        if mode is True:
+            mode = "full"
+        elif mode and mode not in ("full", "sketch"):
+            raise ValueError(f"FFTConfig.telemetry must be False, True, "
+                             f"'full', or 'sketch', got {cfg.telemetry!r}")
+        enabled = bool(mode or cfg.telemetry_log or cfg.telemetry_console
+                       or cfg.telemetry_trace or cfg.telemetry_dashboard)
         if enabled:
-            self.report = RunReport()
+            mode = mode or "full"
+            sketch = None
+            if mode == "sketch":
+                # bounded-memory mode: per-client events fold into sketches;
+                # the report mirrors RunReport's aggregate API
+                sketch = SketchState(self.n_clients,
+                                     k=cfg.telemetry_sketch_k, seed=cfg.seed)
+                self.report = SketchReport()
+            else:
+                self.report = RunReport()
             sinks = [self.report]
             if cfg.telemetry_log:
                 sinks.append(NdjsonSink(cfg.telemetry_log))
             if cfg.telemetry_console:
                 sinks.append(ConsoleSink())
-            tel = Telemetry(sinks=sinks)
+            if cfg.telemetry_dashboard:
+                # after the report sink, so each frame sees the new round
+                sinks.append(DashboardSink(self.report))
+            health = HealthMonitors() if cfg.telemetry_health else None
+            trace = (ChromeTraceRecorder(cfg.telemetry_trace)
+                     if cfg.telemetry_trace else None)
+            tel = Telemetry(sinks=sinks, sketch=sketch, health=health,
+                            trace=trace)
             tel.start_run({
                 "scenario": self.failure_mode_resolved,
                 "server_mode": cfg.server_mode,

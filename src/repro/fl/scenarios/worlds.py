@@ -296,3 +296,48 @@ class LossyUplinkScenario(Scenario):
                 if self.rng.uniform() < self.p_out
                 else LinkState(self._cap(self.base_mbps * MBPS, 0.7))
                 for _ in range(self.n_clients)]
+
+
+@register
+class BlackoutScenario(Scenario):
+    """Fault-injection world for the run-health monitors.
+
+    Nominal lognormal links for the first ``onset`` rounds, then a core-
+    network blackout: a seeded ``dark_frac`` of clients lose their links
+    outright and the survivors' capacity collapses to ``residual`` of its
+    base — uploads slide down the codec ladder, cohorts empty out, buffered
+    uploads age past any staleness horizon, and the adaptive controller's
+    capacity estimates fall off a cliff.  Every detector in
+    ``repro.obs.health`` has something to say about this world; the healthy
+    worlds above are the silence baselines.
+    """
+
+    name = "blackout"
+
+    def __init__(self, n_clients: int, seed: int = 0, onset: int = 6,
+                 dark_frac: float = 0.9, residual: float = 0.02,
+                 base_mbps: float = 12.0, **kw):
+        self.onset = onset
+        self.dark_frac = dark_frac
+        self.residual = residual
+        self.base_mbps = base_mbps
+        super().__init__(n_clients, seed, **kw)
+
+    def _setup(self) -> None:
+        self.base = self.base_mbps * MBPS * np.exp(
+            self.rng.normal(0.0, 0.4, self.n_clients))
+        # who goes dark is drawn once at setup, so the realization is fixed
+        # by the seed regardless of how many rounds run before the onset
+        self.dark = self.rng.uniform(size=self.n_clients) < self.dark_frac
+
+    def sample_round(self, r: int) -> List[LinkState]:
+        links = []
+        for i in range(self.n_clients):
+            if r > self.onset and self.dark[i]:
+                links.append(LinkState(0.0, up=False, cause="blackout"))
+            else:
+                cap = self._cap(self.base[i], 0.3)
+                if r > self.onset:
+                    cap *= self.residual
+                links.append(LinkState(cap))
+        return links

@@ -187,12 +187,59 @@ def render_markdown(reports: List[RunReport],
         return [f"## {title}", "", _table(
             ["run"] + [str(g) for g in groups], rows), ""]
 
-    if any(rep.beta_rows() for rep in reports):
+    # β-mass sections render for any report that recorded applied weights —
+    # full mode keeps the rows, sketch mode keeps the per-group mass sums
+    if any(rep.beta_mass_by("role") for rep in reports):
         sections += mass_section(
             "β-mass by staleness", "staleness",
             sort_key=lambda g: (isinstance(g, str), g))
         sections += mass_section("β-mass by rung", "rung",
                                  sort_key=lambda g: str(g))
+
+    quantile_rows = []
+    for lab, rep in zip(labels, reports):
+        qdocs = rep.quantiles() if hasattr(rep, "quantiles") else {}
+        for metric in sorted(qdocs):
+            qs = qdocs[metric]
+            quantile_rows.append(
+                [lab, metric,
+                 _fmt(qs.get(0.5), 4), _fmt(qs.get(0.9), 4),
+                 _fmt(qs.get(0.99), 4)])
+    if quantile_rows:
+        sections += ["## Distribution quantiles", "",
+                     "Exact for full-mode reports; rank error ≤ ε·n "
+                     "(sketch ε, default 0.01) for sketch-mode reports.", "",
+                     _table(["run", "metric", "p50", "p90", "p99"],
+                            quantile_rows), ""]
+
+    health_rows = []
+    for lab, rep in zip(labels, reports):
+        verdict = (rep.health_verdict()
+                   if hasattr(rep, "health_verdict") else None)
+        alarms = getattr(rep, "health", None) or []
+        if verdict is None and not alarms:
+            continue
+        if verdict is None:
+            verdict = {"healthy": not alarms, "n_alarms": len(alarms),
+                       "first_alarm_round": (alarms[0]["round"]
+                                             if alarms else None),
+                       "by_monitor": {}}
+        by = ",".join(f"{k}×{v}" for k, v in
+                      sorted(verdict.get("by_monitor", {}).items())) or "-"
+        health_rows.append(
+            [lab, "HEALTHY" if verdict.get("healthy") else "ALARMS",
+             verdict.get("n_alarms", 0),
+             _fmt(verdict.get("first_alarm_round")), by])
+    if health_rows:
+        sections += ["## Health", "", _table(
+            ["run", "verdict", "alarms", "first_alarm_round", "by_monitor"],
+            health_rows), ""]
+        for lab, rep in zip(labels, reports):
+            for a in (getattr(rep, "health", None) or []):
+                sections.append(f"- **{lab}** r={a['round']} "
+                                f"`{a['monitor']}`: {a['message']}")
+        if any(getattr(rep, "health", None) for rep in reports):
+            sections.append("")
 
     if any(rep.phase_table() for rep in reports):
         rows = []

@@ -130,6 +130,9 @@ class NullTelemetry:
     def gauge(self, rnd: int, name: str, value: float) -> None:
         pass
 
+    def distribution(self, rnd: int, name: str, values) -> None:
+        pass
+
     def counter(self, name: str, inc: float = 1) -> None:
         pass
 
@@ -171,6 +174,12 @@ class _Timer:
             timers = self._tel.timers_s
             timers[outer[0]] = timers.get(outer[0], 0.0) + (now - outer[1])
         stack.append([self._name, now])
+        trace = self._tel.trace
+        if trace is not None:
+            # the *same* timestamp feeds the timer accounting and the trace
+            # span, so a self-time replay of the trace reproduces the
+            # exclusive timers bit-for-bit
+            trace.begin(self._name, now)
         return self
 
     def __exit__(self, *exc):
@@ -181,6 +190,9 @@ class _Timer:
         timers[name] = timers.get(name, 0.0) + (now - t0)
         if stack:                          # resume the enclosing phase
             stack[-1][1] = now
+        trace = self._tel.trace
+        if trace is not None:
+            trace.end(name, now)
         return False
 
 
@@ -199,8 +211,11 @@ class Telemetry:
 
     enabled = True
 
-    def __init__(self, sinks=()):
+    def __init__(self, sinks=(), *, sketch=None, health=None, trace=None):
         self.sinks = list(sinks)
+        self.sketch = sketch           # SketchState → bounded-memory mode
+        self.health = health           # HealthMonitors → online detectors
+        self.trace = trace             # ChromeTraceRecorder → span export
         self.meta: Dict[str, Any] = {}
         self.counters: Dict[str, float] = {}
         self.timers_s: Dict[str, float] = {}
@@ -210,6 +225,8 @@ class Telemetry:
     # ------------------------------------------------------------ lifecycle
     def start_run(self, meta: Optional[Dict] = None) -> None:
         self.meta = dict(meta or {})
+        self.meta.setdefault(
+            "telemetry_mode", "sketch" if self.sketch is not None else "full")
         for s in self.sinks:
             s.on_run_start(self.meta)
 
@@ -217,8 +234,17 @@ class Telemetry:
         if self._round is not None:
             raise ValueError(
                 f"begin_round({rnd}) before end_round({self._round['round']})")
-        self._round = {"round": int(rnd), "clients": {}, "gauges": {},
-                       "betas": []}
+        if self.sketch is not None:
+            # bounded-memory mode: per-client events fold into the sketch
+            # state instead of staging O(n_clients) rows
+            self._round = {"round": int(rnd), "gauges": {}}
+            self.sketch.begin_round(int(rnd))
+        else:
+            self._round = {"round": int(rnd), "clients": {}, "gauges": {},
+                           "betas": []}
+        if self.trace is not None:
+            self.trace.begin("round", time.perf_counter(),
+                             args={"round": int(rnd)})
 
     def _staged(self, rnd: int) -> Dict[str, Any]:
         if self._round is None or self._round["round"] != int(rnd):
@@ -240,6 +266,9 @@ class Telemetry:
                              f"(known: {OUTCOMES})")
         staged = self._staged(rnd)
         client = int(client)
+        if self.sketch is not None:
+            self.sketch.client_outcome(client, outcome, fields)
+            return
         if client in staged["clients"]:
             raise ValueError(
                 f"round {rnd}: client {client} already has outcome "
@@ -264,6 +293,8 @@ class Telemetry:
             rec["staleness"] = int(staleness)
         if applied_round is not None:
             rec["applied_round"] = int(applied_round)
+        if self.sketch is not None:
+            self.sketch.resolve(rec)
         for s in self.sinks:
             s.on_resolution(rec)
 
@@ -271,10 +302,22 @@ class Telemetry:
         """The aggregation weights a strategy actually applied this round
         (``beta_row`` dicts).  Extends — a strategy that aggregates more
         than once per round (or a deferred flush) appends further rows."""
-        self._staged(rnd)["betas"].extend(rows)
+        staged = self._staged(rnd)
+        if self.sketch is not None:
+            self.sketch.betas(rows)
+        else:
+            staged["betas"].extend(rows)
 
     def gauge(self, rnd: int, name: str, value: float) -> None:
         self._staged(rnd)["gauges"][str(name)] = float(value)
+
+    def distribution(self, rnd: int, name: str, values) -> None:
+        """Fold a per-client value stream (e.g. the adaptive controller's
+        capacity estimates) into a named quantile sketch.  Only sketch mode
+        retains these — full mode already keeps richer per-client rows."""
+        self._staged(rnd)
+        if self.sketch is not None:
+            self.sketch.distribution(name, values)
 
     def counter(self, name: str, inc: float = 1) -> None:
         self.counters[name] = self.counters.get(name, 0.0) + inc
@@ -292,8 +335,21 @@ class Telemetry:
     def end_round(self, rnd: int) -> None:
         staged = self._staged(rnd)
         self._round = None
+        if self.sketch is not None:
+            staged["sketch"] = self.sketch.end_round(staged["gauges"])
+        elif staged.get("betas"):
+            ess = _beta_ess_from_rows(staged["betas"])
+            if ess is not None:
+                staged["gauges"]["beta_ess"] = ess
+        if self.trace is not None:
+            self.trace.end("round", time.perf_counter())
         for s in self.sinks:
             s.on_round(staged)
+        if self.health is not None:
+            for rec in self.health.observe_round(
+                    _round_digest(staged, self.meta)):
+                for s in self.sinks:
+                    s.on_health(rec)
 
     def end_run(self) -> None:
         if self._round is not None:
@@ -301,5 +357,66 @@ class Telemetry:
             self.end_round(self._round["round"])
         summary = {"counters": dict(self.counters),
                    "timers_s": dict(self.timers_s)}
+        if self.sketch is not None:
+            summary["sketch"] = self.sketch.summary()
+        if self.health is not None:
+            summary["health"] = self.health.verdict()
         for s in self.sinks:
             s.on_run_end(summary)
+        if self.trace is not None:
+            self.trace.save(meta=self.meta)
+
+
+def _beta_ess_from_rows(rows: List[Dict[str, Any]]) -> Optional[float]:
+    """β effective sample size over the round's *client* rows:
+    (Σβ)²/Σβ² — n when the applied client mass is uniform, → 1 as a single
+    client dominates.  The ``beta_ess`` gauge is the health monitors' view
+    of aggregation-weight concentration."""
+    n = 0
+    total = sumsq = 0.0
+    for row in rows:
+        if row.get("role", "client") != "client":
+            continue
+        b = float(row["beta"])
+        n += 1
+        total += b
+        sumsq += b * b
+    if n == 0 or sumsq <= 0.0:
+        return None
+    return (total * total) / sumsq
+
+
+def _round_digest(staged: Dict[str, Any], meta: Dict[str, Any]
+                  ) -> Dict[str, Any]:
+    """Constant-size view of a flushed round record for the health
+    monitors — identical shape whether the round was staged in full or
+    sketch mode, so the detectors are mode-agnostic."""
+    gauges = staged["gauges"]
+    if "sketch" in staged:
+        sk = staged["sketch"]
+        counts = dict(sk["counts"])
+        n_dist = sk["distortion_n"]
+        distortion_mean = (sk["distortion_sum"] / n_dist) if n_dist else None
+        beta_n = sk["beta"]["n"]
+    else:
+        counts = {o: 0 for o in OUTCOMES}
+        dist_sum = 0.0
+        n_dist = 0
+        for rec in staged["clients"].values():
+            counts[rec["outcome"]] += 1
+            d = rec.get("distortion")
+            if d is not None:
+                dist_sum += float(d)
+                n_dist += 1
+        distortion_mean = (dist_sum / n_dist) if n_dist else None
+        beta_n = sum(1 for row in staged.get("betas", ())
+                     if row.get("role", "client") == "client")
+    return {"round": staged["round"],
+            "n_clients": int(meta.get("n_clients", 0) or 0),
+            "counts": counts,
+            "participants": gauges.get("participants"),
+            "eval_acc": gauges.get("eval_acc"),
+            "beta_n": beta_n,
+            "beta_ess": gauges.get("beta_ess"),
+            "distortion_mean": distortion_mean,
+            "gauges": gauges}

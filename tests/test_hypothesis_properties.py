@@ -349,3 +349,61 @@ def test_fedagg_convex_hull_property(seed, m, p):
     lo = np.min(np.asarray(stacked), axis=0) - 1e-4
     hi = np.max(np.asarray(stacked), axis=0) + 1e-4
     assert np.all(out >= lo) and np.all(out <= hi)
+
+
+# ---------------------------------------------------------------------------
+# sketch-mode telemetry (ISSUE 8): GK quantile sketches honor their
+# documented rank-error bound and exact summation is order-independent
+# (deterministic variants live in test_obs_scale)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000),
+       st.sampled_from(["normal", "exp", "ints", "sorted", "constant"]),
+       st.integers(50, 4000), st.sampled_from([0.01, 0.05]))
+@settings(max_examples=25, deadline=None)
+def test_gk_quantile_rank_error_property(seed, dist, n, eps):
+    """For any stream and quantile q, the sketch's answer has rank within
+    ε·n of ⌈q·n⌉ — the bound SKETCH_EPS documents for sketch-mode reports."""
+    import math
+    from bisect import bisect_left, bisect_right
+
+    from repro.obs import GKQuantiles
+
+    rng = np.random.default_rng(seed)
+    vals = {"normal": lambda: rng.normal(0, 1, n),
+            "exp": lambda: rng.exponential(1.0, n),
+            "ints": lambda: rng.integers(0, 7, n).astype(float),
+            "sorted": lambda: np.sort(rng.uniform(0, 1, n)),
+            "constant": lambda: np.full(n, 3.25)}[dist]()
+    gk = GKQuantiles(eps)
+    for v in vals:
+        gk.add(float(v))
+    srt = sorted(float(v) for v in vals)
+    for q in (0.05, 0.25, 0.5, 0.75, 0.95, 0.99):
+        got = gk.query(q)
+        target = max(1, math.ceil(q * n))
+        lo = bisect_left(srt, got) + 1
+        hi = bisect_right(srt, got)
+        slack = eps * n + 1
+        assert lo - slack <= target <= hi + slack
+
+
+@given(st.integers(0, 10_000), st.integers(1, 300))
+@settings(max_examples=40, deadline=None)
+def test_exact_sum_order_independent_property(seed, n):
+    """Shewchuk accumulation is bit-equal to math.fsum over the same
+    multiset regardless of fold order — the property that makes sketch-mode
+    byte totals reconcile bit-for-bit against full mode."""
+    import math
+
+    from repro.obs import ExactSum
+
+    rng = np.random.default_rng(seed)
+    vals = list(np.exp(rng.normal(0.0, 12.0, n)) *
+                rng.choice([-1.0, 1.0], n))
+    want = math.fsum(vals)
+    fwd, rev = ExactSum(), ExactSum()
+    for v in vals:
+        fwd.add(v)
+    for v in reversed(vals):
+        rev.add(v)
+    assert fwd.value() == want == rev.value()
