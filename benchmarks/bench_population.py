@@ -1,0 +1,99 @@
+"""Population-scale scenario-engine bench: timing-only rounds to 1M clients.
+
+Rows:
+
+* ``population/10k_<world>_participants`` — exact connected-client totals
+  at n=10k over a few rounds (count kind: any shift in the realized
+  simulation gates the bench).
+* ``population/10k_adaptive_participants`` / ``.../10k_skipped_participants``
+  — same accounting with a real adaptive controller pricing rungs against
+  the synthetic wire model, straggler skip on.
+* ``population/sketch_trace_bytes`` — on-disk size of a v5 sketch trace of
+  the 10k adaptive run (count kind: sketch-size regressions gate).
+* ``population/engine_equiv_exact`` — 1.0 iff the vectorized engine is
+  bit-identical to the heap reference across every registered world at
+  small n (exact kind).
+* ``population/100k_us_per_round`` and ``population/1m_us_per_round`` —
+  wall time per simulated round at 100k and 1M clients (timing kind,
+  warn-only).  The 1M row doubles as the "completes a 1M-client round"
+  acceptance check.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from repro.fl.scenarios import (available_scenarios, make_scenario_model,
+                                simulate_population)
+
+COUNT_WORLDS = ["cross_region", "lossy_uplink"]
+
+
+def _engine_equivalent(n: int = 33, rounds: int = 3) -> bool:
+    for name in available_scenarios():
+        models = {
+            eng: make_scenario_model(name, n, model_bytes=2e5,
+                                     deadline_s=10.0, seed=3, engine=eng)
+            for eng in ("heap", "vectorized")}
+        for r in range(1, rounds + 1):
+            ev = {eng: m.draw_events(r) for eng, m in models.items()}
+            a, b = ev["heap"], ev["vectorized"]
+            if not (np.array_equal(a.up_mask(), b.up_mask())
+                    and np.array_equal(a.finish_array(), b.finish_array())
+                    and a.cause_list() == b.cause_list()):
+                return False
+    return True
+
+
+def _timed(world: str, n: int, rounds: int, **kw) -> float:
+    t0 = time.perf_counter()
+    simulate_population(world, n, rounds, **kw)
+    return (time.perf_counter() - t0) / rounds
+
+
+def run(quick: bool = True) -> List[str]:
+    rows = []
+
+    # exact participant accounting at 10k (gates)
+    for world in COUNT_WORLDS:
+        t0 = time.perf_counter()
+        stats = simulate_population(world, 10_000, 3, seed=0)
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        total = sum(s.n_connected for s in stats)
+        rows.append(f"population/10k_{world}_participants,{us:.0f},{total}")
+
+    # adaptive controller + straggler skip + v5 sketch trace at 10k
+    with tempfile.TemporaryDirectory() as td:
+        trace = os.path.join(td, "pop10k.ndjson")
+        t0 = time.perf_counter()
+        stats = simulate_population(
+            "lossy_uplink", 10_000, 3, seed=0, k_selected=5_000,
+            adaptive="adaptive:sign1-fp16", skip_stragglers=True,
+            trace_path=trace, trace_mode="sketch")
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append("population/10k_adaptive_participants,"
+                    f"{us:.0f},{sum(s.n_connected for s in stats)}")
+        rows.append("population/10k_skipped_participants,"
+                    f"0,{sum(s.n_skipped for s in stats)}")
+        rows.append("population/sketch_trace_bytes,"
+                    f"0,{os.path.getsize(trace)}")
+
+    # vectorized vs heap reference, every registered world
+    ok = _engine_equivalent()
+    rows.append(f"population/engine_equiv_exact,0,{1.0 if ok else 0.0:.4f}")
+
+    # scale timings (warn-only)
+    s = _timed("cross_region", 100_000, 3 if quick else 5, seed=0)
+    rows.append(f"population/100k_us_per_round,{s * 1e6:.0f},{s:.3f}")
+    s = _timed("cross_region", 1_000_000, 1 if quick else 2, seed=0)
+    rows.append(f"population/1m_us_per_round,{s * 1e6:.0f},{s:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

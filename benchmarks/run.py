@@ -16,8 +16,9 @@ import time
 def get_benches():
     from benchmarks import (bench_adaptive, bench_aggregation, bench_async,
                             bench_comm, bench_convergence, bench_fidelity,
-                            bench_kernels, bench_resourceopt,
-                            bench_scenarios, bench_table1, bench_table2,
+                            bench_kernels, bench_population,
+                            bench_resourceopt, bench_scenarios,
+                            bench_table1, bench_table2,
                             bench_table3, bench_table4, bench_table5,
                             roofline)
     return {
@@ -31,6 +32,7 @@ def get_benches():
         "table5": bench_table5,
         "resourceopt": bench_resourceopt,
         "scenarios": bench_scenarios,
+        "population": bench_population,
         "async": bench_async,
         "comm": bench_comm,
         "adaptive": bench_adaptive,

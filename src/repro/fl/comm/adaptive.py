@@ -44,7 +44,7 @@ nothing drifted.
 from __future__ import annotations
 
 import dataclasses
-import math
+import json
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -92,16 +92,24 @@ def ladder_between(lo: str, hi: str) -> Tuple[str, ...]:
 class RoundAssignment:
     """One round's per-client codec decision (what the v3+ trace records).
 
-    ``codecs``/``upload_bytes`` cover all N clients (the policy is a
+    ``rung_idx``/``upload_bytes`` cover all N clients (the policy is a
     deterministic function of the estimates, and the simulator prices every
     link), but only the entries where ``selected`` is True describe rungs
     the server actually handed out — histograms and trace rows mask by it.
+    The decision is stored array-backed (``rung_idx`` into ``rungs``);
+    ``codecs`` materializes the historical per-client name list on demand.
     """
     rnd: int
-    codecs: List[str]            # per-client rung name
+    rung_idx: np.ndarray         # (N,) int index into ``rungs``
+    rungs: Tuple[str, ...]       # ladder slice the indices refer to
     upload_bytes: np.ndarray     # (N,) simulated uplink wire bytes
     download_bytes: float        # broadcast bytes each client receives
     selected: Optional[np.ndarray] = None  # (N,) bool; None = all selected
+
+    @property
+    def codecs(self) -> List[str]:
+        """Per-client rung names (derived view over ``rung_idx``)."""
+        return [self.rungs[k] for k in self.rung_idx]
 
 
 class AdaptiveCommController:
@@ -172,6 +180,26 @@ class AdaptiveCommController:
     def rung_for(self, cap_bps: float) -> str:
         return self.rungs[self.rung_index_for(cap_bps)]
 
+    def rung_indices(self, cap_bps: np.ndarray) -> np.ndarray:
+        """Vectorized ``rung_index_for`` over a capacity array.
+
+        ``wire_bits`` is non-decreasing, so the feasible set at any capacity
+        is a prefix of the ladder and the richest feasible rung is simply
+        ``count(feasible) − 1`` (0 when nothing fits) — one broadcasted
+        comparison instead of N python loops."""
+        cap_bps = np.asarray(cap_bps, dtype=float)
+        feasible = (self.wire_bits[None, :]
+                    <= cap_bps[:, None] * self.transfer_budget_s)
+        return np.maximum(feasible.sum(axis=1) - 1, 0)
+
+    def landable_mask(self) -> np.ndarray:
+        """(N,) bool: True where the current capacity estimate can land at
+        least the *lowest* rung inside the transfer budget — the
+        straggler-skip predicate (``FFTConfig.skip_stragglers``).  A False
+        entry means even the coarsest upload is predicted to miss the
+        deadline, so selecting that client buys nothing this round."""
+        return self.wire_bits[0] <= self.cap_hat * self.transfer_budget_s
+
     def assign(self, rnd: int, selected: Optional[np.ndarray] = None,
                download_bytes: Optional[float] = None) -> RoundAssignment:
         """Assign this round's rungs.  ``selected`` masks the clients the
@@ -185,17 +213,17 @@ class AdaptiveCommController:
         the observed time."""
         tel = self.telemetry
         with tel.timer("phase.controller"):
-            idx = [self.rung_index_for(c) for c in self.cap_hat]
+            idx_arr = self.rung_indices(self.cap_hat)
             a = RoundAssignment(
                 rnd=rnd,
-                codecs=[self.rungs[k] for k in idx],
-                upload_bytes=self.rung_bytes[idx].copy(),
+                rung_idx=idx_arr,
+                rungs=self.rungs,
+                upload_bytes=self.rung_bytes[idx_arr].copy(),
                 download_bytes=(self.download_bytes if download_bytes is None
                                 else float(download_bytes)),
                 selected=(None if selected is None
                           else np.asarray(selected, dtype=bool).copy()))
             self.assignments[rnd] = a
-            idx_arr = np.asarray(idx)
             if tel:
                 if self._last_idx is not None:
                     # fraction of clients whose assigned rung changed since
@@ -225,42 +253,80 @@ class AdaptiveCommController:
             return
         tel = self.telemetry
         with tel.timer("phase.controller"):
-            for i in range(self.n_clients):
-                if not bool(selected[i]):
-                    continue
-                e = events.events[i]
-                wire_bits = (a.upload_bytes[i] +
-                             a.download_bytes / self.dl_ratio) * 8.0
-                if e.met_deadline and math.isfinite(e.finish_s):
-                    obs = wire_bits / max(e.finish_s - self.fixed_s, 1e-3)
-                    w = (self.ewma_up if obs > self.cap_hat[i]
-                         else self.ewma_down)
-                    self.cap_hat[i] = (1.0 - w) * self.cap_hat[i] + w * obs
-                    self.n_success += 1
-                else:
-                    self.cap_hat[i] *= self.backoff
-                    self.n_miss += 1
-                self.cap_hat[i] = min(max(self.cap_hat[i], self.cap_min),
-                                      self.cap_max)
+            sel = np.asarray(selected, dtype=bool)
+            finish = events.finish_array()
+            met = events.deadline_mask()
+            landed = sel & met & np.isfinite(finish)
+            missed = sel & ~(met & np.isfinite(finish))
+            wire_bits = (a.upload_bytes +
+                         a.download_bytes / self.dl_ratio) * 8.0
+            with np.errstate(divide="ignore", invalid="ignore"):
+                obs = wire_bits / np.maximum(finish - self.fixed_s, 1e-3)
+            w = np.where(obs > self.cap_hat, self.ewma_up, self.ewma_down)
+            ewma = (1.0 - w) * self.cap_hat + w * obs
+            cap = np.where(landed, ewma,
+                           np.where(missed, self.cap_hat * self.backoff,
+                                    self.cap_hat))
+            # clip only the clients observed this round (the rest keep
+            # their estimate verbatim, clipped or not)
+            self.cap_hat = np.where(
+                sel, np.minimum(np.maximum(cap, self.cap_min), self.cap_max),
+                cap)
+            n_landed = int(landed.sum())
+            n_sel = int(sel.sum())
+            self.n_success += n_landed
+            self.n_miss += n_sel - n_landed
             if tel:
-                n_sel = int(np.asarray(selected, dtype=bool).sum())
-                n_landed = sum(
-                    1 for i in range(self.n_clients) if bool(selected[i])
-                    and events.events[i].met_deadline
-                    and math.isfinite(events.events[i].finish_s))
                 tel.counter("adaptive.landed", n_landed)
                 tel.counter("adaptive.missed", n_sel - n_landed)
                 tel.gauge(rnd, "cap_hat_mean_bps",
                           float(self.cap_hat.mean()))
+
+    # ------------------------------------------------------- persistence
+    def save_state(self, path: str) -> None:
+        """Persist the learned capacity estimates as JSON.
+
+        The estimates are the controller's only cross-round state: a later
+        run that loads them skips the optimistic-probe warm-up and opens on
+        each client's converged rung (``FFTConfig.controller_state_in``)."""
+        state = {
+            "version": 1,
+            "n_clients": self.n_clients,
+            "rungs": list(self.rungs),
+            "cap_hat_bps": [float(c) for c in self.cap_hat],
+            "n_success": int(self.n_success),
+            "n_miss": int(self.n_miss),
+        }
+        with open(path, "w") as f:
+            json.dump(state, f)
+
+    def load_state(self, path: str) -> None:
+        """Warm-start capacity estimates from ``save_state`` output.
+
+        The ladder slice may differ between runs (estimates are in bps,
+        rung-independent), but the population size must match — estimates
+        are indexed by client id."""
+        with open(path) as f:
+            state = json.load(f)
+        n = int(state["n_clients"])
+        if n != self.n_clients:
+            raise ValueError(
+                f"controller state {path} was saved for {n} clients but "
+                f"this run has {self.n_clients}; capacity estimates are "
+                "indexed by client id and cannot be remapped")
+        cap = np.asarray(state["cap_hat_bps"], dtype=float)
+        self.cap_hat = np.minimum(np.maximum(cap, self.cap_min), self.cap_max)
+        self.n_success = int(state.get("n_success", 0))
+        self.n_miss = int(state.get("n_miss", 0))
 
     # ------------------------------------------------------------- stats
     def rung_histogram(self) -> Dict[str, int]:
         """Total per-rung assignment counts across all rounds so far —
         *selected* clients only: a rung computed for a client the server
         never contacted that round is policy state, not an assignment."""
-        hist = {name: 0 for name in self.rungs}
+        totals = np.zeros(len(self.rungs), dtype=np.int64)
         for a in self.assignments.values():
-            for i, name in enumerate(a.codecs):
-                if a.selected is None or a.selected[i]:
-                    hist[name] += 1
-        return hist
+            idx = (a.rung_idx if a.selected is None
+                   else a.rung_idx[a.selected])
+            totals += np.bincount(idx, minlength=len(self.rungs))
+        return {name: int(totals[k]) for k, name in enumerate(self.rungs)}

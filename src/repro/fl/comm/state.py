@@ -46,6 +46,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fl.comm.codecs import Codec, Payload, make_codec
 from repro.obs.telemetry import NULL_TELEMETRY
@@ -54,6 +55,112 @@ from repro.obs.telemetry import NULL_TELEMETRY
 def fp32_nbytes(template) -> int:
     """Bytes of the baseline uncompressed fp32 upload of ``template``."""
     return sum(4 * l.size for l in jax.tree.leaves(template))
+
+
+class _ResidualStore:
+    """Error-feedback residuals for all clients, leaf-major.
+
+    Dense mode (``n`` known): one ``(N, *leaf.shape)`` float32 array per
+    template leaf, allocated lazily on the first lossy store, plus an
+    ``(N,)`` presence mask — O(1) per-client access with no dict churn at
+    population scale, and the whole store is two allocations instead of N
+    pytrees.  Sparse mode (``n`` is None): a plain per-client dict, for
+    direct ``CommState`` constructions that never declare a population
+    size.  ``get`` always returns a fresh pytree (device copies of the
+    rows), so a caller-held residual is never aliased by a later store.
+    """
+
+    def __init__(self, template, n: Optional[int]):
+        self.n = n
+        self._treedef = jax.tree.structure(template)
+        self._shapes = [tuple(l.shape) for l in jax.tree.leaves(template)]
+        self._dict: Optional[Dict[int, Any]] = {} if n is None else None
+        self._stacks: Optional[list] = None
+        self._present = None if n is None else np.zeros(n, dtype=bool)
+
+    def __len__(self) -> int:
+        if self._dict is not None:
+            return len(self._dict)
+        return int(self._present.sum())
+
+    def clear(self) -> None:
+        if self._dict is not None:
+            self._dict.clear()
+        else:
+            self._stacks = None
+            self._present[:] = False
+
+    def get(self, client: int):
+        if self._dict is not None:
+            return self._dict.get(client)
+        if self._stacks is None or not self._present[client]:
+            return None
+        return jax.tree.unflatten(
+            self._treedef, [jnp.asarray(s[client]) for s in self._stacks])
+
+    def set(self, client: int, tree) -> None:
+        if self._dict is not None:
+            self._dict[client] = tree
+            return
+        leaves = jax.tree.leaves(tree)
+        if self._stacks is None:
+            self._stacks = [np.zeros((self.n,) + shp, dtype=np.float32)
+                            for shp in self._shapes]
+        for s, leaf in zip(self._stacks, leaves):
+            s[client] = np.asarray(leaf, dtype=np.float32)
+        self._present[client] = True
+
+    def pop(self, client: int) -> None:
+        if self._dict is not None:
+            self._dict.pop(client, None)
+        elif self._present is not None:
+            self._present[client] = False
+
+
+class _DenseFloatMap:
+    """Dict-shaped view over a dense ``(N,)`` float array + presence mask.
+
+    Drop-in for the per-client ``last_distortions`` dict when the
+    population size is known: ``m[i]`` / ``m[i] = x`` / ``m.get(i)`` /
+    ``i in m`` / ``len(m)`` all work, backed by two fixed arrays instead
+    of a hash map that churns at population scale."""
+
+    def __init__(self, n: int):
+        self._vals = np.zeros(n, dtype=np.float64)
+        self._present = np.zeros(n, dtype=bool)
+
+    def __getitem__(self, client: int) -> float:
+        if not self._present[client]:
+            raise KeyError(client)
+        return float(self._vals[client])
+
+    def __setitem__(self, client: int, value: float) -> None:
+        self._vals[client] = value
+        self._present[client] = True
+
+    def __contains__(self, client) -> bool:
+        c = int(client)
+        return 0 <= c < len(self._vals) and bool(self._present[c])
+
+    def __len__(self) -> int:
+        return int(self._present.sum())
+
+    def get(self, client: int, default: float = None):
+        c = int(client)
+        if 0 <= c < len(self._vals) and self._present[c]:
+            return float(self._vals[c])
+        return default
+
+    def clear(self) -> None:
+        self._present[:] = False
+        self._vals[:] = 0.0
+
+    def keys(self):
+        return (int(i) for i in np.nonzero(self._present)[0])
+
+    def items(self):
+        return ((int(i), float(self._vals[i]))
+                for i in np.nonzero(self._present)[0])
 
 
 def _l2(tree) -> float:
@@ -67,7 +174,8 @@ class CommState:
 
     def __init__(self, codec: Codec, template, *,
                  model_bytes_override: Optional[float] = None,
-                 lora_cfg=None, downlink_codec: Optional[Codec] = None):
+                 lora_cfg=None, downlink_codec: Optional[Codec] = None,
+                 n_clients: Optional[int] = None):
         codec.validate_template(template, lora_cfg=lora_cfg)
         if downlink_codec is not None:
             downlink_codec.validate_template(template, lora_cfg=lora_cfg)
@@ -91,7 +199,10 @@ class CommState:
         self.upload_bytes = self.nbytes_for(codec)
         self.download_bytes = (self.ref_bytes if downlink_codec is None
                                else self.nbytes_for(downlink_codec))
-        self._residuals: Dict[int, Any] = {}
+        # per-client state: dense arrays indexed by client id when the
+        # population size is declared, dicts otherwise (see _ResidualStore)
+        self.n_clients = n_clients
+        self._residuals = _ResidualStore(template, n_clients)
         self._dl_ref = None                    # clients' decoded global replica
         self._dl_residual = None               # server-side EF residual
         self.total_uplink_bytes = 0.0          # cumulative, all clients
@@ -100,7 +211,8 @@ class CommState:
         # last measured normalized compression distortion per client
         # (‖carry − decoded‖/‖carry‖ of the most recent roundtrip; exactly
         # 0.0 for lossless uploads)
-        self.last_distortions: Dict[int, float] = {}
+        self.last_distortions = (_DenseFloatMap(n_clients)
+                                 if n_clients is not None else {})
         # telemetry hub (repro.obs); the runner swaps in a live one per
         # instrumented run — the comm counters are a third, independent
         # accounting the reconcile cross-check compares against
@@ -177,10 +289,10 @@ class CommState:
                 decoded = codec.decode(payload)
                 if codec.lossless:
                     # wire carried the full corrected delta: residual flushed
-                    self._residuals.pop(client, None)
+                    self._residuals.pop(client)
                 else:
                     new_resid = jax.tree.map(jnp.subtract, carry, decoded)
-                    self._residuals[client] = new_resid
+                    self._residuals.set(client, new_resid)
                     carry_norm = _l2(carry)
                     if carry_norm > 0.0:
                         distortion = _l2(new_resid) / carry_norm

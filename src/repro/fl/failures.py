@@ -118,7 +118,8 @@ def make_failure_model(mode: str, channels: List[ClientChannel],
                        rate_bps: float, *, duration_max: int = 10,
                        seed: int = 0, model_bytes: Optional[float] = None,
                        deadline_s: Optional[float] = None,
-                       compute_s: float = 2.0) -> FailureModel:
+                       compute_s: float = 2.0,
+                       engine: str = "vectorized") -> FailureModel:
     n = len(channels)
     if mode.startswith("scenario:"):
         # Deadline-based scenario worlds (repro.fl.scenarios). Imported here
@@ -130,7 +131,7 @@ def make_failure_model(mode: str, channels: List[ClientChannel],
         return scen.make_scenario_model(
             mode.split(":", 1)[1], n, model_bytes=model_bytes,
             deadline_s=deadline_s, compute_s=compute_s, seed=seed,
-            channels=channels)
+            channels=channels, engine=engine)
     if mode.startswith("replay:"):
         from repro.fl.scenarios import ReplayFailureModel
         return ReplayFailureModel(mode.split(":", 1)[1], n_clients=n)

@@ -68,6 +68,39 @@ class ClientChannel:
         return fails / n_mc
 
 
+def capacity_array(channels: List["ClientChannel"],
+                   rng: np.random.Generator) -> np.ndarray:
+    """Vectorized ``ClientChannel.capacity`` over a channel list.
+
+    One shadowing draw per *non-wired* channel, in channel order — wired
+    links are inf and consume no randomness, exactly like the scalar
+    method's early return — so a single array draw replaces N scalar calls.
+    """
+    n = len(channels)
+    caps = np.full(n, np.inf)
+    idx = np.array([i for i, c in enumerate(channels)
+                    if c.standard != "wired"], dtype=int)
+    if len(idx) == 0:
+        return caps
+    dist = np.array([channels[i].distance_m for i in idx])
+    freq = np.array([channels[i].freq_mhz for i in idx])
+    sigma = np.array([channels[i].shadow_sigma for i in idx])
+    wall = np.array([channels[i].wall_db for i in idx])
+    power = np.array([channels[i].power_dbm for i in idx])
+    bw = np.array([channels[i].bandwidth for i in idx])
+    d_km = np.maximum(dist, 1.0) / 1000.0
+    pl0 = (20.0 * np.log10(d_km) + 20.0 * np.log10(np.maximum(freq, 1.0))
+           + 32.44)
+    shadow = rng.normal(0.0, sigma)
+    gain_db = (-pl0 - 10.0 * PATHLOSS_EXP * np.log10(np.maximum(dist, 1.0))
+               + shadow - wall)
+    p_rx_dbm = power + gain_db
+    noise_dbm = N0_DBM_HZ + 10.0 * np.log10(bw)
+    snr = 10.0 ** ((p_rx_dbm - noise_dbm) / 10.0)
+    caps[idx] = bw * np.log2(1.0 + snr)
+    return caps
+
+
 def build_network(n_clients: int = 20, seed: int = 0) -> List[ClientChannel]:
     """Paper topology: 8 indoor (Wi-Fi, 20×20 m room), 12 outdoor (200 m cell)."""
     rng = np.random.default_rng(seed)

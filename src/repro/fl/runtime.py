@@ -55,9 +55,25 @@ class FFTConfig:
     # --- scenario engine (repro.fl.scenarios) ---------------------------------
     deadline_s: float = 30.0              # server round timeout (scenario modes)
     compute_s: float = 2.0                # mean local-compute wall-clock per round
+    engine: str = "vectorized"            # timing engine: "vectorized" batch
+    #                                       closed-form | "heap" reference
+    #                                       event loop (bit-identical)
+    cohort_size: int = 0                  # stream clients through the round in
+    #                                       fixed-size cohorts (0 = whole
+    #                                       population at once); bounds peak
+    #                                       memory at O(cohort) for the
+    #                                       timing arrays and local updates
     trace_record: Optional[str] = None    # NDJSON path: record realized rounds
     trace_replay: Optional[str] = None    # NDJSON path: replay (overrides
     #                                       failure_mode)
+    trace_mode: str = "auto"              # "full": per-client rows every round
+    #                                       (v1–v4 behavior); "sketch": v5
+    #                                       bounded rows — per-round counts,
+    #                                       cause histogram + GK sketches,
+    #                                       regenerable from the seed;
+    #                                       "auto": full below
+    #                                       TRACE_SKETCH_THRESHOLD clients,
+    #                                       sketch at or above it
     # --- asynchronous server (repro.fl.server) --------------------------------
     server_mode: str = "sync"             # sync | async | buffered
     tau_max: int = 5                      # max staleness (rounds) accepted async
@@ -66,6 +82,17 @@ class FFTConfig:
     codec: str = "fp32"                   # fp32 | fp16 | int8 | qsgd:<bits> |
     #                                       topk:<frac> | sign1 | lora_only |
     #                                       adaptive:<lo>-<hi>
+    skip_stragglers: bool = False         # adaptive runs: exclude clients whose
+    #                                       capacity estimate cannot land even
+    #                                       the lowest rung from selection
+    #                                       (telemetry outcome
+    #                                       "skipped_straggler")
+    controller_state_in: Optional[str] = None   # JSON path: warm-start the
+    #                                       adaptive controller's capacity
+    #                                       estimates from a previous run
+    controller_state_out: Optional[str] = None  # JSON path: persist the
+    #                                       controller's converged estimates
+    #                                       at run end
     downlink_codec: Optional[str] = None  # broadcast codec; None = fp32 for
     #                                       static runs, the hi rung for
     #                                       adaptive ones ("fp32" forces the
@@ -185,7 +212,8 @@ class FFTRunner:
                     else make_codec(self.downlink_codec_resolved))
         self.comm = CommState(static_codec, self.global_params,
                               model_bytes_override=cfg.model_bytes,
-                              lora_cfg=lora_cfg, downlink_codec=dl_codec)
+                              lora_cfg=lora_cfg, downlink_codec=dl_codec,
+                              n_clients=cfg.n_clients)
         self.model_bytes = self.comm.ref_bytes            # fp32 reference size
         self.upload_bytes = self.comm.upload_bytes        # codec wire size
         self.download_bytes = self.comm.download_bytes    # broadcast wire size
@@ -200,11 +228,13 @@ class FFTRunner:
         mode = (f"replay:{cfg.trace_replay}" if cfg.trace_replay
                 else cfg.failure_mode)
         self.failure_mode_resolved = mode
+        if cfg.engine not in ("heap", "vectorized"):
+            raise ValueError(f"unknown engine {cfg.engine!r}")
         self.failures = fail_mod.make_failure_model(
             mode, self.channels, rate,
             duration_max=cfg.duration_max, seed=cfg.seed,
             model_bytes=self.model_bytes, deadline_s=cfg.deadline_s,
-            compute_s=cfg.compute_s)
+            compute_s=cfg.compute_s, engine=cfg.engine)
         if cfg.server_mode not in ("sync", "async", "buffered"):
             raise ValueError(f"unknown server_mode {cfg.server_mode!r}")
         if ((cfg.server_mode != "sync" or self.adaptive_spec)
@@ -218,7 +248,10 @@ class FFTRunner:
             self.failures = TimedFailureAdapter(
                 self.failures, self.channels, model_bytes=self.model_bytes,
                 deadline_s=cfg.deadline_s, compute_s=cfg.compute_s,
-                seed=cfg.seed)
+                seed=cfg.seed, engine=cfg.engine)
+        sim = getattr(self.failures, "sim", None)
+        if sim is not None and cfg.cohort_size:
+            sim.cohort_size = int(cfg.cohort_size)
         # Wire sizes into the timing model: uploads carry the codec's payload,
         # downloads the (possibly compressed) global broadcast.  Adaptive
         # runs re-price every round through the controller; this is the
@@ -436,6 +469,11 @@ class FFTRunner:
         self.comm.reset()                 # error-feedback residuals per run
         if self.controller is not None:
             self.controller.reset()       # capacity estimates per run
+            if self.cfg.controller_state_in:
+                # warm start: seed this run's capacity estimates with a
+                # previous run's converged state (reset first, so a missing
+                # field in the file falls back to the cold-start value)
+                self.controller.load_state(self.cfg.controller_state_in)
         self.report = None
         self.telemetry = self._make_telemetry(strategy, rounds)
         tracer = None
@@ -457,6 +495,7 @@ class FFTRunner:
                 "scenario": self.failure_mode_resolved,
                 "n_clients": self.n_clients,
                 "deadline_s": self.cfg.deadline_s,
+                "compute_s": self.cfg.compute_s,
                 "model_bytes": self.model_bytes,
                 "codec": self.cfg.codec,
                 # adaptive runs have no single upload size: the per-round
@@ -465,7 +504,7 @@ class FFTRunner:
                                  else self.upload_bytes),
                 "downlink_codec": self.downlink_codec_resolved,
                 "download_bytes": self.download_bytes,
-                "seed": self.cfg.seed})
+                "seed": self.cfg.seed}, mode=self.cfg.trace_mode)
         self.timeline: List[TimePoint] = []
         self.loop = make_round_loop(self.cfg.server_mode, self, strategy,
                                     tracer=tracer, log=log)
@@ -475,6 +514,8 @@ class FFTRunner:
             self.telemetry.end_run()
             if tracer is not None:
                 tracer.close()
+            if self.controller is not None and self.cfg.controller_state_out:
+                self.controller.save_state(self.cfg.controller_state_out)
 
     def _make_telemetry(self, strategy: Strategy, rounds: int):
         """Build this run's telemetry hub (a fresh one per run, like the

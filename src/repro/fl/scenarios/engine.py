@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -28,6 +28,11 @@ from repro.fl.failures import FailureModel
 DOWNLOAD_DONE = "download_done"
 COMPUTE_DONE = "compute_done"
 UPLOAD_DONE = "upload_done"
+
+# Engine dispatch (mirrors kernels' ref/ops split): the heap is the
+# reference event loop, the vectorized path is the closed-form batch
+# computation — bit-identical by construction, cross-checked in tests.
+ENGINES = ("heap", "vectorized")
 
 # Participation causes recorded per client per round.
 CAUSE_OK = "ok"                 # upload finished before the deadline
@@ -44,6 +49,73 @@ class LinkState:
     up: bool = True              # False = hard outage for the whole round
     cause: str = CAUSE_OK        # refined cause when ``up`` is False
     downlink_ratio: float = 8.0  # downlink capacity = ratio * uplink
+
+
+@dataclasses.dataclass
+class LinkArrays:
+    """Struct-of-arrays form of one round's link states (scenario output).
+
+    The population-scale twin of ``List[LinkState]``: one float64 capacity
+    array, one up mask, and per-client cause *codes* into a small string
+    table (code 0 is always ``CAUSE_OK``) instead of N Python objects.
+    Worlds emit this directly (``Scenario.sample_round_arrays``); the
+    object-list view is derived from it via ``to_links`` only when a
+    consumer actually needs per-client objects, so both engine paths see
+    the identical numeric realization by construction.
+    """
+    capacity_bps: np.ndarray          # (N,) float64
+    up: np.ndarray                    # (N,) bool
+    cause_codes: np.ndarray           # (N,) small int into cause_table
+    cause_table: Tuple[str, ...]      # cause_table[0] == CAUSE_OK
+    downlink_ratio: float = 8.0       # downlink capacity = ratio * uplink
+
+    def __post_init__(self):
+        self.capacity_bps = np.asarray(self.capacity_bps, dtype=np.float64)
+        self.up = np.asarray(self.up, dtype=bool)
+        self.cause_codes = np.asarray(self.cause_codes, dtype=np.int16)
+
+    def __len__(self) -> int:
+        return len(self.capacity_bps)
+
+    @staticmethod
+    def all_up(capacity_bps, downlink_ratio: float = 8.0) -> "LinkArrays":
+        caps = np.asarray(capacity_bps, dtype=np.float64)
+        return LinkArrays(caps, np.ones(len(caps), dtype=bool),
+                          np.zeros(len(caps), dtype=np.int16), (CAUSE_OK,),
+                          downlink_ratio=downlink_ratio)
+
+    @staticmethod
+    def from_links(links: Sequence[LinkState]) -> "LinkArrays":
+        caps = np.array([l.capacity_bps for l in links], dtype=np.float64)
+        up = np.array([l.up for l in links], dtype=bool)
+        table: List[str] = [CAUSE_OK]
+        index = {CAUSE_OK: 0}
+        codes = np.zeros(len(links), dtype=np.int16)
+        for i, l in enumerate(links):
+            if l.cause not in index:
+                index[l.cause] = len(table)
+                table.append(l.cause)
+            codes[i] = index[l.cause]
+        ratios = {float(l.downlink_ratio) for l in links}
+        if len(ratios) > 1:
+            raise ValueError(
+                f"LinkArrays carries one shared downlink_ratio; links mix "
+                f"{sorted(ratios)}")
+        return LinkArrays(caps, up, codes, tuple(table),
+                          downlink_ratio=(ratios.pop() if ratios else 8.0))
+
+    def cause_of(self, i: int) -> str:
+        return self.cause_table[int(self.cause_codes[i])]
+
+    def to_links(self) -> List[LinkState]:
+        return [LinkState(capacity_bps=float(self.capacity_bps[i]),
+                          up=bool(self.up[i]), cause=self.cause_of(i),
+                          downlink_ratio=self.downlink_ratio)
+                for i in range(len(self))]
+
+
+# Either form of a round's link realization; the simulator accepts both.
+Links = Union[Sequence[LinkState], LinkArrays]
 
 
 @dataclasses.dataclass
@@ -105,6 +177,110 @@ class RoundEvents:
             return float(max(e.finish_s for e in events))
         return self.deadline_s
 
+    # Array accessors shared with ArrayRoundEvents, so timing consumers
+    # (the adaptive controller, the round loops' outcome emission) can stay
+    # vectorized regardless of which engine produced the round.
+    def finish_array(self) -> np.ndarray:
+        return np.array([e.finish_s for e in self.events], dtype=np.float64)
+
+    def capacity_array(self) -> np.ndarray:
+        return np.array([e.capacity_bps for e in self.events],
+                        dtype=np.float64)
+
+    def upload_time_array(self) -> np.ndarray:
+        return np.array([e.t_upload_s for e in self.events],
+                        dtype=np.float64)
+
+    def cause_list(self) -> List[str]:
+        return [e.cause for e in self.events]
+
+
+class ArrayRoundEvents:
+    """Array-backed ``RoundEvents`` twin produced by the vectorized engine.
+
+    Duck-types the object-list API (``rnd``/``deadline_s``/``duration_s``,
+    the masks, ``server_wait``) with O(1)-per-field array storage; the
+    ``events`` list of ``ClientRoundEvent`` objects is materialized lazily
+    and cached, so small-n consumers (trace rows, tests) keep working while
+    population-scale paths never pay for N Python objects.
+    """
+
+    def __init__(self, rnd: int, deadline_s: float, *,
+                 capacity_bps: np.ndarray, up: np.ndarray,
+                 t_download_s: np.ndarray, t_compute_s: np.ndarray,
+                 t_upload_s: np.ndarray, finish_s: np.ndarray,
+                 met_deadline: np.ndarray, cause_codes: np.ndarray,
+                 cause_table: Tuple[str, ...]):
+        self.rnd = rnd
+        self.deadline_s = deadline_s
+        self.capacity_bps = capacity_bps
+        self.up = up
+        self.t_download_s = t_download_s
+        self.t_compute_s = t_compute_s
+        self.t_upload_s = t_upload_s
+        self.finish_s = finish_s
+        self.met_deadline = met_deadline
+        self.cause_codes = cause_codes
+        self.cause_table = cause_table
+        self._events: Optional[List[ClientRoundEvent]] = None
+        self.duration_s = self.server_wait()
+
+    def __len__(self) -> int:
+        return len(self.finish_s)
+
+    def up_mask(self) -> np.ndarray:
+        return self.up
+
+    def deadline_mask(self) -> np.ndarray:
+        return self.met_deadline
+
+    def connected_mask(self) -> np.ndarray:
+        return self.up & self.met_deadline
+
+    def late_mask(self) -> np.ndarray:
+        return self.up & np.isfinite(self.finish_s) & ~self.met_deadline
+
+    def server_wait(self, selected: Optional[np.ndarray] = None) -> float:
+        if selected is None:
+            finish, connected = self.finish_s, self.connected_mask()
+        else:
+            sel = np.asarray(selected, dtype=bool)
+            if not sel.any():
+                return float(self.deadline_s)
+            finish, connected = self.finish_s[sel], self.connected_mask()[sel]
+        if len(finish) == 0 or not connected.all():
+            return float(self.deadline_s)
+        return float(finish.max())
+
+    def finish_array(self) -> np.ndarray:
+        return self.finish_s
+
+    def capacity_array(self) -> np.ndarray:
+        return self.capacity_bps
+
+    def upload_time_array(self) -> np.ndarray:
+        return self.t_upload_s
+
+    def cause_list(self) -> List[str]:
+        table = self.cause_table
+        return [table[c] for c in self.cause_codes]
+
+    @property
+    def events(self) -> List[ClientRoundEvent]:
+        if self._events is None:
+            table = self.cause_table
+            self._events = [ClientRoundEvent(
+                client=i, capacity_bps=float(self.capacity_bps[i]),
+                up=bool(self.up[i]),
+                t_download_s=float(self.t_download_s[i]),
+                t_compute_s=float(self.t_compute_s[i]),
+                t_upload_s=float(self.t_upload_s[i]),
+                finish_s=float(self.finish_s[i]),
+                met_deadline=bool(self.met_deadline[i]),
+                cause=table[self.cause_codes[i]])
+                for i in range(len(self))]
+        return self._events
+
 
 class DeadlineSimulator:
     """Event-driven timing model for one FFT round.
@@ -120,7 +296,10 @@ class DeadlineSimulator:
     def __init__(self, n_clients: int, *, model_bytes: float,
                  deadline_s: float, compute_s: float = 2.0,
                  hetero_sigma: float = 0.4, jitter_sigma: float = 0.1,
-                 seed: int = 0):
+                 seed: int = 0, engine: str = "vectorized",
+                 cohort_size: int = 0):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r} (known: {ENGINES})")
         self.n_clients = n_clients
         self.model_bytes = model_bytes
         self.deadline_s = deadline_s
@@ -128,6 +307,10 @@ class DeadlineSimulator:
         self.hetero_sigma = hetero_sigma
         self.jitter_sigma = jitter_sigma
         self.seed = seed
+        self.engine = engine
+        # vectorized path: >0 bounds per-chunk temporaries to O(cohort_size)
+        # (the outputs are necessarily O(N): finish, met, causes)
+        self.cohort_size = int(cohort_size)
         # telemetry hub (repro.obs): counts simulated rounds/heap events;
         # the runner swaps in a live hub per instrumented run
         from repro.obs.telemetry import NULL_TELEMETRY
@@ -190,15 +373,98 @@ class DeadlineSimulator:
         t_cp = self.compute_s * self.speed[i] * jitter
         return t_dl, t_cp, t_ul
 
-    def simulate_round(self, rnd: int, links: List[LinkState],
-                       deadline_s: Optional[float] = None) -> RoundEvents:
-        """Run the event loop for one round; returns resolved participation.
+    def simulate_round(self, rnd: int, links: Links,
+                       deadline_s: Optional[float] = None):
+        """Resolve one round's participation; returns ``RoundEvents`` (heap
+        engine) or the duck-typed ``ArrayRoundEvents`` (vectorized engine).
 
         Idempotent for a fixed ``(rnd, links, payload bytes)``: jitters come
         from ``round_jitters`` (no shared RNG stream is consumed), so callers
         may re-simulate the same link realization at different payload sizes
         — the per-round repricing the adaptive codec controller relies on.
+        Accepts either link representation; each engine converts to its
+        native one, so both consume the identical numeric realization.
         """
+        if self.engine == "vectorized":
+            arrays = (links if isinstance(links, LinkArrays)
+                      else LinkArrays.from_links(links))
+            return self._simulate_vectorized(rnd, arrays, deadline_s)
+        if isinstance(links, LinkArrays):
+            links = links.to_links()
+        return self._simulate_heap(rnd, links, deadline_s)
+
+    def _simulate_vectorized(self, rnd: int, arrays: LinkArrays,
+                             deadline_s: Optional[float] = None
+                             ) -> ArrayRoundEvents:
+        """Closed-form batch timing: per-client arrival is
+        ``(t_dl + t_cp) + t_ul`` with no cross-client coupling, so the heap
+        is pure overhead — the same float64 operations applied in the same
+        association order reproduce its results bit-for-bit."""
+        deadline = self.deadline_s if deadline_s is None else deadline_s
+        jitters = self.round_jitters(rnd)
+        n = self.n_clients
+        t_dl = np.empty(n)
+        t_cp = np.empty(n)
+        t_ul = np.empty(n)
+        finish = np.empty(n)
+        met = np.zeros(n, dtype=bool)
+        chunk = self.cohort_size if self.cohort_size > 0 else n
+        for lo in range(0, n, max(chunk, 1)):
+            hi = min(lo + chunk, n)
+            s = slice(lo, hi)
+            cap = np.maximum(arrays.capacity_bps[s], 1e-9)
+            up = arrays.up[s]
+            ul_b = (self.model_bytes if self.upload_bytes is None
+                    else self.upload_bytes[s])
+            dl_b = (self.model_bytes if self.download_bytes is None
+                    else self.download_bytes[s])
+            with np.errstate(divide="ignore", invalid="ignore",
+                             over="ignore"):
+                ul = np.where(np.isinf(cap), 0.0, ul_b * 8.0 / cap)
+                dl_cap = cap * max(arrays.downlink_ratio, 1e-9)
+                dl = np.where(np.isinf(dl_cap), 0.0, dl_b * 8.0 / dl_cap)
+            cp = self.compute_s * self.speed[s] * jitters[s]
+            # down links: the heap path prices every phase at +inf
+            t_dl[s] = np.where(up, dl, np.inf)
+            t_cp[s] = np.where(up, cp, np.inf)
+            t_ul[s] = np.where(up, ul, np.inf)
+            # same association order as the heap's running event clock:
+            # (download + compute) + upload
+            f = np.where(up, (dl + cp) + ul, np.inf)
+            finish[s] = f
+            met[s] = f <= deadline                 # inclusive boundary
+        # refined causes: the scenario's own code while down, ok/deadline
+        # decided by the timing above
+        table = tuple(arrays.cause_table)
+        # down links whose scenario left cause at OK refine to "link_down"
+        if CAUSE_LINK_DOWN in table:
+            down_code = table.index(CAUSE_LINK_DOWN)
+        else:
+            table = table + (CAUSE_LINK_DOWN,)
+            down_code = len(table) - 1
+        if CAUSE_DEADLINE in table:
+            late_code = table.index(CAUSE_DEADLINE)
+        else:
+            table = table + (CAUSE_DEADLINE,)
+            late_code = len(table) - 1
+        codes = np.where(arrays.up,
+                         np.where(met, 0, late_code),
+                         np.where(arrays.cause_codes == 0, down_code,
+                                  arrays.cause_codes)).astype(np.int16)
+        tel = self.telemetry
+        if tel:
+            tel.counter("sim.rounds")
+            tel.counter("sim.vectorized_clients", n)
+        return ArrayRoundEvents(
+            rnd, deadline, capacity_bps=arrays.capacity_bps, up=arrays.up,
+            t_download_s=t_dl, t_compute_s=t_cp, t_upload_s=t_ul,
+            finish_s=finish, met_deadline=met, cause_codes=codes,
+            cause_table=table)
+
+    def _simulate_heap(self, rnd: int, links: List[LinkState],
+                       deadline_s: Optional[float] = None) -> RoundEvents:
+        """Reference event loop (the original engine), kept for
+        cross-checking the vectorized path."""
         deadline = self.deadline_s if deadline_s is None else deadline_s
         jitters = self.round_jitters(rnd)
         heap: List[tuple] = []
@@ -282,7 +548,9 @@ class LinkRealizationCache:
         self._links: dict = {}
         self._events: dict = {}
 
-    def _sample_links(self, r: int) -> List[LinkState]:
+    def _sample_links(self, r: int) -> Links:
+        """One round's link realization, as a ``List[LinkState]`` or a
+        ``LinkArrays`` — the simulator accepts either."""
         raise NotImplementedError
 
     def set_payload_bytes(self, upload_bytes=None, download_bytes=None
@@ -292,7 +560,7 @@ class LinkRealizationCache:
         ``reprice_round`` is called for them explicitly."""
         self.sim.set_payload_bytes(upload_bytes, download_bytes)
 
-    def links_for(self, r: int) -> List[LinkState]:
+    def links_for(self, r: int) -> Links:
         # Cache keyed by round: repeated draws of a past round return the
         # recorded realization instead of re-advancing the underlying
         # stochastic state.  First-time draws must still arrive in round
@@ -302,7 +570,7 @@ class LinkRealizationCache:
             self._links[r] = self._sample_links(r)
         return self._links[r]
 
-    def reprice_round(self, r: int) -> RoundEvents:
+    def reprice_round(self, r: int):
         """Re-simulate round ``r``'s cached link realization at the current
         payload sizes.  Only the transfer durations (and what follows from
         them: ``finish_s``, ``met_deadline``, causes *between* ``ok`` and
@@ -310,7 +578,7 @@ class LinkRealizationCache:
         self._events[r] = self.sim.simulate_round(r, self.links_for(r))
         return self._events[r]
 
-    def draw_events(self, r: int) -> RoundEvents:
+    def draw_events(self, r: int):
         if r not in self._events:
             self._events[r] = self.sim.simulate_round(r, self.links_for(r))
         return self._events[r]
@@ -339,5 +607,5 @@ class ScenarioFailureModel(LinkRealizationCache, FailureModel):
         self.sim.reset()
         self._reset_realization()
 
-    def _sample_links(self, r: int) -> List[LinkState]:
-        return self.scenario.sample_round(r)
+    def _sample_links(self, r: int) -> Links:
+        return self.scenario.sample_round_arrays(r)

@@ -54,11 +54,28 @@ distortions — the replay machinery therefore exposes the recorded values
 (``ReplayFailureModel.distortions``) for cross-checks instead of failing
 loudly in the loop; same-configuration replays can (and the fidelity bench
 does) assert they match bit-exactly.  Version-3 traces still load.
+
+Version 5 (population scale) adds *sketch rounds*: above
+``TRACE_SKETCH_THRESHOLD`` clients (or with ``FFTConfig.trace_mode =
+"sketch"``), a round record stores O(1) state instead of N client rows —
+exact participation counts, a per-cause drop histogram, Greenwald–Khanna
+quantile sketches (``repro.obs.sketch``) of the finite arrival times and
+link capacities, byte totals, and a SHA-1 digest of the round's up-mask.
+The realization stays recoverable because scenario worlds are
+deterministic in their seed: ``regenerate_model`` rebuilds the recorded
+failure model from the header alone and the digest cross-checks that the
+regenerated rounds are the recorded realization (the digest is
+payload-independent, so the check holds for adaptive runs too, whose byte
+repricing never perturbs the link draw).  Sketch rounds are *not*
+row-replayable — ``draw_events`` on one raises, pointing at regeneration —
+while v1–v4 traces and v5 full-mode rounds replay exactly as before.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import math
+from collections import Counter
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -67,8 +84,25 @@ from repro.fl.failures import FailureModel
 from repro.fl.scenarios.engine import (CAUSE_OK, ClientRoundEvent,
                                        RoundEvents)
 
-TRACE_VERSION = 4
-SUPPORTED_TRACE_VERSIONS = (1, 2, 3, 4)
+TRACE_VERSION = 5
+SUPPORTED_TRACE_VERSIONS = (1, 2, 3, 4, 5)
+# trace_mode="auto": per-client rows below this population, sketches at or
+# above it (a 1M-client round would otherwise write ~1M JSON rows per round)
+TRACE_SKETCH_THRESHOLD = 4096
+TRACE_MODES = ("auto", "full", "sketch")
+
+
+def up_mask_digest(up: np.ndarray) -> str:
+    """SHA-1 of a round's packed up-mask (plus its length, so a prefix of a
+    larger population never collides).  Payload-independent — repricing a
+    round's bytes never changes which links were up — which is what lets a
+    regenerated realization be cross-checked against a sketch trace even
+    for adaptive runs."""
+    up = np.asarray(up, dtype=bool)
+    h = hashlib.sha1()
+    h.update(str(len(up)).encode())
+    h.update(np.packbits(up).tobytes())
+    return h.hexdigest()
 
 
 def _num(x) -> object:
@@ -99,7 +133,10 @@ class TraceRecorder:
     """Append-per-round NDJSON writer.  Opens fresh (truncates) so one file
     always holds exactly one realization."""
 
-    def __init__(self, path: str, header: Dict):
+    def __init__(self, path: str, header: Dict, mode: str = "auto"):
+        if mode not in TRACE_MODES:
+            raise ValueError(f"trace mode must be one of {TRACE_MODES}, "
+                             f"got {mode!r}")
         self.path = path
         self._fh = open(path, "w")
         hdr = {"record": "header", "version": TRACE_VERSION}
@@ -110,6 +147,12 @@ class TraceRecorder:
         hdr["upload_bytes"] = _num(hdr.get("upload_bytes"))
         hdr["download_bytes"] = _num(hdr.get("download_bytes"))
         hdr["deadline_s"] = _num(hdr.get("deadline_s"))
+        n = int(hdr.get("n_clients") or 0)
+        self.sketch_mode = (mode == "sketch"
+                            or (mode == "auto"
+                                and n >= TRACE_SKETCH_THRESHOLD))
+        if self.sketch_mode:
+            hdr["mode"] = "sketch"
         self._fh.write(json.dumps(hdr) + "\n")
 
     def write_round(self, rnd: int, selected: np.ndarray,
@@ -127,7 +170,19 @@ class TraceRecorder:
         for static runs, whose codec lives in the header; per-entry None
         for clients the server did not select that round); ``distortions``
         maps client id → measured compression distortion of that round's
-        upload (clients that uploaded nothing carry null)."""
+        upload (clients that uploaded nothing carry null).
+
+        In sketch mode (v5) the per-client fields fold into O(1) summary
+        state instead of rows — counts, cause histogram, GK sketches, byte
+        totals, up-mask digest — and ``codecs``/``distortions`` are not
+        stored (they are per-client by nature; a sketch round's realization
+        is recovered by regeneration, not row replay)."""
+        if self.sketch_mode:
+            self._write_sketch_round(rnd, selected, connected, events,
+                                     up=up, met_deadline=met_deadline,
+                                     payload_bytes=payload_bytes,
+                                     download_bytes=download_bytes)
+            return
         clients = []
         n = len(selected)
         distortions = distortions or {}
@@ -176,6 +231,70 @@ class TraceRecorder:
                "duration_s": _num(events.server_wait(selected)
                                   if events else None),
                "clients": clients}
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+
+    def _write_sketch_round(self, rnd: int, selected, connected, events,
+                            up=None, met_deadline=None, payload_bytes=None,
+                            download_bytes=None) -> None:
+        """One O(1)-state round record: exact counts + cause histogram +
+        GK quantile sketches + byte totals + up-mask digest."""
+        from repro.obs.sketch import GKQuantiles
+        selected = np.asarray(selected, dtype=bool)
+        connected = np.asarray(connected, dtype=bool)
+        n = len(selected)
+        if events is not None:
+            up_arr = np.asarray(events.up_mask(), dtype=bool)
+            met_arr = np.asarray(events.deadline_mask(), dtype=bool)
+        else:
+            up_arr = (np.asarray(up, dtype=bool) if up is not None
+                      else connected | ~selected)
+            met_arr = (np.asarray(met_deadline, dtype=bool)
+                       if met_deadline is not None
+                       else np.ones(n, dtype=bool))
+        # cause histogram: bincount over the dense codes when the events
+        # are array-backed, else a Counter over the per-client strings
+        codes = getattr(events, "cause_codes", None)
+        if codes is not None:
+            counts = np.bincount(np.asarray(codes),
+                                 minlength=len(events.cause_table))
+            causes = {name: int(c) for name, c
+                      in zip(events.cause_table, counts) if c}
+        elif events is not None:
+            causes = dict(Counter(events.cause_list()))
+        else:
+            down = ~(up_arr & met_arr)
+            causes = {CAUSE_OK: int(n - down.sum())}
+            if int(down.sum()):
+                causes["outage"] = int(down.sum())
+        sketch = {
+            "n_clients": n,
+            "n_selected": int(selected.sum()),
+            "n_up": int(up_arr.sum()),
+            "n_connected": int(connected.sum()),
+            "n_met_deadline": int(met_arr.sum()),
+            "causes": causes,
+            "up_digest": up_mask_digest(up_arr),
+        }
+        if events is not None:
+            finish = np.asarray(events.finish_array(), dtype=float)
+            caps = np.asarray(events.capacity_array(), dtype=float)
+            for name, vals in (("finish_s", finish), ("capacity_bps", caps)):
+                gk = GKQuantiles()
+                for v in vals[np.isfinite(vals)]:
+                    gk.add(float(v))
+                sketch[name] = gk.to_json()
+        if payload_bytes is not None:
+            pb = np.broadcast_to(np.asarray(payload_bytes, float), (n,))
+            sketch["payload_bytes_total"] = _num(float(pb[selected].sum()))
+        if download_bytes is not None:
+            db = np.broadcast_to(np.asarray(download_bytes, float), (n,))
+            sketch["download_bytes_total"] = _num(float(db[selected].sum()))
+        rec = {"record": "round", "round": int(rnd),
+               "deadline_s": _num(events.deadline_s if events else None),
+               "duration_s": _num(events.server_wait(selected)
+                                  if events else None),
+               "sketch": sketch}
         self._fh.write(json.dumps(rec) + "\n")
         self._fh.flush()
 
@@ -262,6 +381,8 @@ class ReplayFailureModel(FailureModel):
         Per-entry None marks a client the server did not select that round
         (v4 records rungs for selected clients only) — consumers must skip
         those entries, not substitute the header spec."""
+        if "sketch" in self._round(r):
+            return None
         rows = sorted(self._round(r)["clients"], key=lambda c: c["id"])
         vals = [c.get("codec") for c in rows]
         if all(v is None for v in vals):
@@ -276,7 +397,14 @@ class ReplayFailureModel(FailureModel):
         the fidelity bench uses it as a bit-exactness cross-check."""
         return self._client_floats(r, "distortion")
 
+    def sketch_of(self, r: int) -> Optional[Dict]:
+        """The recorded sketch summary of round ``r`` (None for full-mode
+        rounds)."""
+        return self._round(r).get("sketch")
+
     def _client_floats(self, r: int, field: str) -> Optional[np.ndarray]:
+        if "sketch" in self._round(r):
+            return None
         rows = sorted(self._round(r)["clients"], key=lambda c: c["id"])
         vals = [_unnum(c.get(field)) for c in rows]
         if all(v is None for v in vals):
@@ -292,6 +420,14 @@ class ReplayFailureModel(FailureModel):
 
     def draw_events(self, r: int) -> RoundEvents:
         rec = self._round(r)
+        if "sketch" in rec:
+            raise ValueError(
+                f"trace {self.path} round {r} was recorded in sketch mode "
+                f"(v5): per-client rows were not stored, so it cannot be "
+                f"row-replayed.  Regenerate the realization from the header "
+                f"(repro.fl.scenarios.trace.regenerate_model) — scenario "
+                f"worlds are deterministic in their seed — or re-record "
+                f"with trace_mode='full'")
         def val(x, default):
             return x if x is not None else default
 
@@ -315,3 +451,46 @@ class ReplayFailureModel(FailureModel):
     def draw(self, r: int) -> np.ndarray:
         ev = self.draw_events(r)
         return ev.up_mask() & ev.deadline_mask()
+
+
+# --------------------------------------------------------------------------
+# Sketch-trace regeneration (v5)
+# --------------------------------------------------------------------------
+def regenerate_model(header: Dict):
+    """Rebuild the failure model a sketch trace was recorded under.
+
+    Scenario worlds are deterministic in their seed, so the header —
+    scenario name, population, sizes, seed — is sufficient to re-derive
+    every round's realization; ``verify_sketch_round`` cross-checks a
+    regenerated round against a recorded sketch via the up-mask digest.
+    Only ``scenario:*`` recordings regenerate (legacy modes were wrapped in
+    a channel-dependent adapter whose channels the trace does not carry);
+    rounds must then be drawn in order from round 0, exactly like the
+    recording run drew them."""
+    scn = str(header.get("scenario") or "")
+    if not scn.startswith("scenario:"):
+        raise ValueError(
+            f"only scenario:* recordings can be regenerated from the "
+            f"header; this trace was recorded under {scn!r}")
+    from repro.fl import scenarios as scen
+    return scen.make_scenario_model(
+        scn.split(":", 1)[1], int(header["n_clients"]),
+        model_bytes=float(_unnum(header["model_bytes"])),
+        deadline_s=float(_unnum(header["deadline_s"])),
+        compute_s=float(header.get("compute_s", 2.0)),
+        seed=int(header.get("seed", 0)))
+
+
+def verify_sketch_round(model, rec: Dict) -> bool:
+    """True iff ``model``'s realization of ``rec``'s round matches the
+    recorded sketch (up-mask digest + participation counts).  ``model``
+    must have drawn all earlier rounds in order (stateful worlds)."""
+    sketch = rec.get("sketch")
+    if sketch is None:
+        raise ValueError(f"round {rec.get('round')} is not a sketch round")
+    ev = model.draw_events(int(rec["round"]))
+    up = np.asarray(ev.up_mask(), dtype=bool)
+    met = np.asarray(ev.deadline_mask(), dtype=bool)
+    return (up_mask_digest(up) == sketch["up_digest"]
+            and int(up.sum()) == int(sketch["n_up"])
+            and int(met.sum()) == int(sketch["n_met_deadline"]))

@@ -17,13 +17,28 @@ from typing import Callable, Dict, List, Type
 
 import numpy as np
 
-from repro.fl.scenarios.engine import LinkState
+from repro.fl.scenarios.engine import CAUSE_OK, LinkArrays, LinkState
 
 MBPS = 1e6
 
 
+def _one_cause(caps: np.ndarray, up: np.ndarray, cause: str,
+               downlink_ratio: float = 8.0) -> LinkArrays:
+    """LinkArrays for a world with a single down-cause string."""
+    codes = np.where(up, 0, 1).astype(np.int16)
+    return LinkArrays(caps, up, codes, (CAUSE_OK, cause),
+                      downlink_ratio=downlink_ratio)
+
+
 class Scenario:
     """Base class: seeded per-round link-state process.
+
+    Worlds implement ``sample_round_arrays`` (one vectorized struct-of-
+    arrays draw per round — the population-scale hot path); the object-list
+    ``sample_round`` view is derived from it, so both views expose the
+    identical numeric realization.  Legacy out-of-tree worlds that only
+    override ``sample_round`` still work: the base ``sample_round_arrays``
+    wraps their list draw.
 
     ``channels`` optionally carries the runner's physical channel list
     (e.g. after a ResourceOpt intervention) for worlds grounded in the
@@ -46,11 +61,23 @@ class Scenario:
         pass
 
     def sample_round(self, r: int) -> List[LinkState]:
+        if type(self).sample_round_arrays is not Scenario.sample_round_arrays:
+            return self.sample_round_arrays(r).to_links()
         raise NotImplementedError
 
-    # helper: lognormal capacity around a base rate
+    def sample_round_arrays(self, r: int) -> LinkArrays:
+        if type(self).sample_round is not Scenario.sample_round:
+            return LinkArrays.from_links(self.sample_round(r))
+        raise NotImplementedError
+
+    # helper: lognormal capacity around a base rate (scalar, legacy worlds)
     def _cap(self, base_bps: float, sigma: float = 0.5) -> float:
         return float(base_bps * math.exp(self.rng.normal(0.0, sigma)))
+
+    # helper: vectorized lognormal capacities, one draw per entry
+    def _caps(self, base_bps, sigma: float = 0.5) -> np.ndarray:
+        base = np.asarray(base_bps, dtype=np.float64)
+        return base * np.exp(self.rng.normal(0.0, sigma, base.shape))
 
 
 SCENARIOS: Dict[str, Type[Scenario]] = {}
@@ -96,9 +123,9 @@ class Table6Scenario(Scenario):
         else:
             self.channels = build_network(self.n_clients, seed=self.seed)
 
-    def sample_round(self, r: int) -> List[LinkState]:
-        return [LinkState(capacity_bps=c.capacity(self.rng))
-                for c in self.channels]
+    def sample_round_arrays(self, r: int) -> LinkArrays:
+        from repro.fl.network import capacity_array
+        return LinkArrays.all_up(capacity_array(self.channels, self.rng))
 
 
 @register
@@ -129,17 +156,14 @@ class CorrelatedWifiScenario(Scenario):
         self.base = self.base_mbps * MBPS * np.exp(
             self.rng.normal(0.0, 0.6, self.n_clients))
 
-    def sample_round(self, r: int) -> List[LinkState]:
+    def sample_round_arrays(self, r: int) -> LinkArrays:
         flip = self.rng.uniform(size=self.n_aps)
         self.ap_up = np.where(self.ap_up, flip > self.p_fail,
                               flip < self.p_recover)
-        links = []
-        for i in range(self.n_clients):
-            if self.ap_up[self.ap_of[i]]:
-                links.append(LinkState(self._cap(self.base[i], 0.4)))
-            else:
-                links.append(LinkState(0.0, up=False, cause="ap_outage"))
-        return links
+        up = self.ap_up[self.ap_of]
+        caps = np.zeros(self.n_clients)
+        caps[up] = self._caps(self.base[up], 0.4)
+        return _one_cause(caps, up, "ap_outage")
 
 
 @register
@@ -169,14 +193,11 @@ class DiurnalScenario(Scenario):
         self.base = self.base_mbps * MBPS * np.exp(
             self.rng.normal(0.0, 0.3, self.n_clients))
 
-    def sample_round(self, r: int) -> List[LinkState]:
-        links = []
-        for i in range(self.n_clients):
-            cyc = 0.5 * (1.0 + math.sin(
-                2.0 * math.pi * (r + self.phase[i]) / self.period))
-            scale = self.trough + (1.0 - self.trough) * cyc
-            links.append(LinkState(self._cap(self.base[i] * scale, 0.25)))
-        return links
+    def sample_round_arrays(self, r: int) -> LinkArrays:
+        cyc = 0.5 * (1.0 + np.sin(
+            2.0 * np.pi * (r + self.phase) / self.period))
+        scale = self.trough + (1.0 - self.trough) * cyc
+        return LinkArrays.all_up(self._caps(self.base * scale, 0.25))
 
 
 @register
@@ -204,14 +225,14 @@ class BurstyHandoverScenario(Scenario):
         self.base = self.base_mbps * MBPS * np.exp(
             self.rng.normal(0.0, 0.5, self.n_clients))
 
-    def sample_round(self, r: int) -> List[LinkState]:
+    def sample_round_arrays(self, r: int) -> LinkArrays:
         u = self.rng.uniform(size=self.n_clients)
         self.in_handover = np.where(self.in_handover, u > self.p_exit,
                                     u < self.p_enter)
-        return [LinkState(0.0, up=False, cause="handover")
-                if self.in_handover[i]
-                else LinkState(self._cap(self.base[i], 0.6))
-                for i in range(self.n_clients)]
+        up = ~self.in_handover
+        caps = np.zeros(self.n_clients)
+        caps[up] = self._caps(self.base[up], 0.6)
+        return _one_cause(caps, up, "handover")
 
 
 @register
@@ -235,15 +256,15 @@ class ChurnScenario(Scenario):
         self.base = self.base_mbps * MBPS * np.exp(
             self.rng.normal(0.0, 0.4, self.n_clients))
 
-    def sample_round(self, r: int) -> List[LinkState]:
+    def sample_round_arrays(self, r: int) -> LinkArrays:
         u = self.rng.uniform(size=self.n_clients)
         leave = u < 1.0 / self.mean_stay
         arrive = u < 1.0 / self.mean_away
         self.present = np.where(self.present, ~leave, arrive)
-        return [LinkState(self._cap(self.base[i], 0.3))
-                if self.present[i]
-                else LinkState(0.0, up=False, cause="churned")
-                for i in range(self.n_clients)]
+        up = self.present.astype(bool)
+        caps = np.zeros(self.n_clients)
+        caps[up] = self._caps(self.base[up], 0.3)
+        return _one_cause(caps, up, "churned")
 
 
 @register
@@ -264,17 +285,26 @@ class CrossRegionScenario(Scenario):
 
     def _setup(self) -> None:
         self.region_of = np.arange(self.n_clients) % len(self.REGIONS)
+        regions = self.REGIONS
+        self.base = np.array([regions[k]["mbps"] for k in self.region_of]) \
+            * MBPS
+        self.sigma = np.array([regions[k]["sigma"] for k in self.region_of])
+        self.p_out = np.array([regions[k]["p_out"] for k in self.region_of])
+        # per-region down causes, deduplicated into one cause table
+        self.cause_table = (CAUSE_OK,) + tuple(dict.fromkeys(
+            r["cause"] for r in regions))
+        self.down_code = np.array(
+            [self.cause_table.index(regions[k]["cause"])
+             for k in self.region_of], dtype=np.int16)
 
-    def sample_round(self, r: int) -> List[LinkState]:
-        links = []
-        for i in range(self.n_clients):
-            reg = self.REGIONS[self.region_of[i]]
-            if self.rng.uniform() < reg["p_out"]:
-                links.append(LinkState(0.0, up=False, cause=reg["cause"]))
-            else:
-                links.append(LinkState(self._cap(reg["mbps"] * MBPS,
-                                                 reg["sigma"])))
-        return links
+    def sample_round_arrays(self, r: int) -> LinkArrays:
+        u = self.rng.uniform(size=self.n_clients)
+        up = u >= self.p_out
+        caps = np.zeros(self.n_clients)
+        caps[up] = self.base[up] * np.exp(
+            self.rng.normal(0.0, self.sigma[up]))
+        codes = np.where(up, 0, self.down_code).astype(np.int16)
+        return LinkArrays(caps, up, codes, self.cause_table)
 
 
 @register
@@ -291,11 +321,13 @@ class LossyUplinkScenario(Scenario):
         self.base_mbps = base_mbps
         super().__init__(n_clients, seed, **kw)
 
-    def sample_round(self, r: int) -> List[LinkState]:
-        return [LinkState(0.0, up=False, cause="outage")
-                if self.rng.uniform() < self.p_out
-                else LinkState(self._cap(self.base_mbps * MBPS, 0.7))
-                for _ in range(self.n_clients)]
+    def sample_round_arrays(self, r: int) -> LinkArrays:
+        u = self.rng.uniform(size=self.n_clients)
+        up = u >= self.p_out
+        caps = np.zeros(self.n_clients)
+        caps[up] = self._caps(np.full(int(up.sum()),
+                                      self.base_mbps * MBPS), 0.7)
+        return _one_cause(caps, up, "outage")
 
 
 @register
@@ -330,14 +362,11 @@ class BlackoutScenario(Scenario):
         # by the seed regardless of how many rounds run before the onset
         self.dark = self.rng.uniform(size=self.n_clients) < self.dark_frac
 
-    def sample_round(self, r: int) -> List[LinkState]:
-        links = []
-        for i in range(self.n_clients):
-            if r > self.onset and self.dark[i]:
-                links.append(LinkState(0.0, up=False, cause="blackout"))
-            else:
-                cap = self._cap(self.base[i], 0.3)
-                if r > self.onset:
-                    cap *= self.residual
-                links.append(LinkState(cap))
-        return links
+    def sample_round_arrays(self, r: int) -> LinkArrays:
+        up = (np.ones(self.n_clients, dtype=bool) if r <= self.onset
+              else ~self.dark)
+        caps = np.zeros(self.n_clients)
+        caps[up] = self._caps(self.base[up], 0.3)
+        if r > self.onset:
+            caps[up] *= self.residual
+        return _one_cause(caps, up, "blackout")

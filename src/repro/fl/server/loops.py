@@ -37,7 +37,7 @@ from repro.core.strategies import (Arrival, AsyncRoundContext, AsyncStrategy,
 from repro.fl.server.buffer import PendingUpdate, StalenessBuffer
 from repro.obs.telemetry import (AGGREGATED, BUFFERED, EVICTED, LINK_DOWN,
                                  MISSED_DEADLINE, NOT_SELECTED,
-                                 NULL_TELEMETRY)
+                                 NULL_TELEMETRY, SKIPPED_STRAGGLER)
 
 
 @dataclasses.dataclass
@@ -65,6 +65,11 @@ class RoundLoop:
         # uploads encoded that round (what the trace records and
         # fidelity-aware aggregation discounts by)
         self.distortion_history: List[Dict[int, float]] = []
+        # clients excluded from this round's selection draw because their
+        # capacity estimate cannot land even the lowest rung
+        # (cfg.skip_stragglers); written by _select each round
+        self.skipped = np.zeros(runner.n_clients, dtype=bool)
+        self.n_skipped = 0
 
     def _uplink(self, client: int, model, t_global, codec_name=None):
         """Ship one local update through the communication codec: encode
@@ -198,7 +203,28 @@ class RoundLoop:
 
     # ------------------------------------------------------------- shared
     def _select(self) -> np.ndarray:
+        """Uniform K-of-N selection; with ``cfg.skip_stragglers`` and an
+        adaptive controller, clients whose capacity estimate cannot land
+        even the lowest rung are excluded from the draw (selecting them
+        buys nothing: the coarsest upload is already predicted to miss).
+        Skipped clients are recorded in ``self.skipped`` and emitted as the
+        distinct ``skipped_straggler`` outcome, so the reconcile invariant
+        (exactly one terminal outcome per (round, client)) still closes."""
         runner = self.runner
+        self.skipped = np.zeros(runner.n_clients, dtype=bool)
+        if runner.cfg.skip_stragglers and runner.controller is not None:
+            landable = runner.controller.landable_mask()
+            self.skipped = ~landable
+            self.n_skipped += int(self.skipped.sum())
+            eligible = np.where(landable)[0]
+            selected = np.zeros(runner.n_clients, dtype=bool)
+            if runner.k_selected >= len(eligible):
+                selected[eligible] = True
+            elif len(eligible):
+                sel = runner.rng.choice(eligible, runner.k_selected,
+                                        replace=False)
+                selected[sel] = True
+            return selected
         if runner.k_selected >= runner.n_clients:
             return np.ones(runner.n_clients, dtype=bool)
         sel = runner.rng.choice(runner.n_clients, runner.k_selected,
@@ -206,6 +232,18 @@ class RoundLoop:
         selected = np.zeros(runner.n_clients, dtype=bool)
         selected[sel] = True
         return selected
+
+    def _cohorts(self, idx: np.ndarray):
+        """Yield ``idx`` in fixed-size cohorts (``cfg.cohort_size``; 0 =
+        everyone at once) — the round loop's streaming unit, so a large
+        population's local updates and uploads are processed in bounded
+        batches instead of one unbounded sweep."""
+        cs = int(getattr(self.runner.cfg, "cohort_size", 0) or 0)
+        if cs <= 0 or len(idx) <= cs:
+            yield idx
+            return
+        for k in range(0, len(idx), cs):
+            yield idx[k:k + cs]
 
     def _round_duration(self, selected, connected, events) -> float:
         """Simulated seconds the server spent on this round."""
@@ -291,33 +329,41 @@ class SyncRoundLoop(RoundLoop):
         nbytes_used: Dict[int, float] = {}
         distortions: Dict[int, float] = {}
         mu = strategy.prox_mu()
-        for i in np.where(connected)[0]:
-            corr = strategy.correction(i, runner)
-            m = runner.run_local(t_global, runner.client_x[i],
-                                 runner.client_y[i], r, mu=mu, corr=corr)
-            m = strategy.post_local(i, r, m, t_global, runner)
-            recon, cname, nbytes, dist = self._uplink(
-                int(i), m, t_global,
-                codec_name=(assignment.codecs[int(i)] if assignment else None))
-            client_models[int(i)] = recon
-            codecs_used[int(i)] = cname
-            nbytes_used[int(i)] = nbytes
-            distortions[int(i)] = dist
+        rung_names = assignment.codecs if assignment else None
+        for cohort in self._cohorts(np.where(connected)[0]):
+            for i in cohort:
+                corr = strategy.correction(i, runner)
+                m = runner.run_local(t_global, runner.client_x[i],
+                                     runner.client_y[i], r, mu=mu, corr=corr)
+                m = strategy.post_local(i, r, m, t_global, runner)
+                recon, cname, nbytes, dist = self._uplink(
+                    int(i), m, t_global,
+                    codec_name=(rung_names[int(i)] if rung_names else None))
+                client_models[int(i)] = recon
+                codecs_used[int(i)] = cname
+                nbytes_used[int(i)] = nbytes
+                distortions[int(i)] = dist
         self.distortion_history.append(dict(distortions))
         tel = self.obs
         if tel:
             tel.gauge(r, "selected", float(selected.sum()))
+            if self.skipped.any():
+                tel.gauge(r, "skipped_stragglers",
+                          float(self.skipped.sum()))
+            causes = events.cause_list() if events is not None else None
+            finish = events.finish_array() if events is not None else None
             for i in range(runner.n_clients):
                 if not selected[i]:
-                    tel.client_outcome(r, i, NOT_SELECTED)
+                    tel.client_outcome(
+                        r, i, SKIPPED_STRAGGLER if self.skipped[i]
+                        else NOT_SELECTED)
                 elif not up[i]:
                     tel.client_outcome(
                         r, i, LINK_DOWN,
-                        detail=(events.events[i].cause
-                                if events is not None else None))
+                        detail=(causes[i] if causes is not None else None))
                 elif not met_deadline[i]:
-                    never = (events is not None and
-                             not math.isfinite(events.events[i].finish_s))
+                    never = (finish is not None and
+                             not math.isfinite(finish[i]))
                     tel.client_outcome(r, i, MISSED_DEADLINE,
                                        detail="never_lands" if never else None)
                 else:
@@ -402,41 +448,46 @@ class AsyncRoundLoop(RoundLoop):
         distortions: Dict[int, float] = {}
         tel = self.obs
         pushed: Dict[int, PendingUpdate] = {}   # this round's buffer pushes
-        for i in np.where(selected & up)[0]:
-            e = events.events[int(i)]
-            if not math.isfinite(e.finish_s):
-                continue                       # never lands at all
-            late = not e.met_deadline
-            if late and (cfg.tau_max == 0 or e.finish_s > horizon_s):
-                # even tau_max full-deadline rounds cannot stretch to this
-                # landing time: don't waste the local compute
-                self.n_unreachable += 1
-                continue
-            corr = strategy.correction(int(i), runner)
-            m = runner.run_local(t_global, runner.client_x[i],
-                                 runner.client_y[i], r, mu=mu, corr=corr)
-            m = strategy.post_local(int(i), r, m, t_global, runner)
-            # The wire sits between dispatch and landing: what the buffer
-            # holds is the *decoded* upload, exactly what the server will
-            # eventually see (the scenario engine already priced its bytes),
-            # tagged with the rung, byte count, and distortion it traveled
-            # under — measured now, at encode time, not at landing.
-            m, cname, nbytes, dist = self._uplink(
-                int(i), m, t_global,
-                codec_name=(assignment.codecs[int(i)] if assignment else None))
-            distortions[int(i)] = dist
-            # Only delta-based strategies (FedBuff) need the dispatch-time
-            # snapshot; skipping it elsewhere halves the buffer's memory.
-            delta = (delta_pytree(m, t_global)
-                     if getattr(strategy, "wants_delta", False) else None)
-            upd = PendingUpdate(
-                client=int(i), origin_round=r,
-                arrival_s=t_start + float(e.finish_s), model=m, delta=delta,
-                origin_version=self.version, codec=cname,
-                upload_nbytes=nbytes, distortion=dist)
-            self.buffer.push(upd)
-            if tel:
-                pushed[int(i)] = upd
+        finish_s = events.finish_array()
+        rung_names = assignment.codecs if assignment else None
+        for cohort in self._cohorts(np.where(selected & up)[0]):
+            for i in cohort:
+                fin = float(finish_s[int(i)])
+                if not math.isfinite(fin):
+                    continue                   # never lands at all
+                late = not met_deadline[int(i)]
+                if late and (cfg.tau_max == 0 or fin > horizon_s):
+                    # even tau_max full-deadline rounds cannot stretch to
+                    # this landing time: don't waste the local compute
+                    self.n_unreachable += 1
+                    continue
+                corr = strategy.correction(int(i), runner)
+                m = runner.run_local(t_global, runner.client_x[i],
+                                     runner.client_y[i], r, mu=mu, corr=corr)
+                m = strategy.post_local(int(i), r, m, t_global, runner)
+                # The wire sits between dispatch and landing: what the
+                # buffer holds is the *decoded* upload, exactly what the
+                # server will eventually see (the scenario engine already
+                # priced its bytes), tagged with the rung, byte count, and
+                # distortion it traveled under — measured now, at encode
+                # time, not at landing.
+                m, cname, nbytes, dist = self._uplink(
+                    int(i), m, t_global,
+                    codec_name=(rung_names[int(i)] if rung_names else None))
+                distortions[int(i)] = dist
+                # Only delta-based strategies (FedBuff) need the
+                # dispatch-time snapshot; skipping it elsewhere halves the
+                # buffer's memory.
+                delta = (delta_pytree(m, t_global)
+                         if getattr(strategy, "wants_delta", False) else None)
+                upd = PendingUpdate(
+                    client=int(i), origin_round=r,
+                    arrival_s=t_start + fin, model=m, delta=delta,
+                    origin_version=self.version, codec=cname,
+                    upload_nbytes=nbytes, distortion=dist)
+                self.buffer.push(upd)
+                if tel:
+                    pushed[int(i)] = upd
         self.distortion_history.append(dict(distortions))
         # trace written after the uploads, so each client row carries the
         # upload's measured distortion alongside its rung and byte count
@@ -496,6 +547,8 @@ class AsyncRoundLoop(RoundLoop):
         forwarded as resolution events against their origin round."""
         tel = self.obs
         tel.gauge(r, "selected", float(selected.sum()))
+        if self.skipped.any():
+            tel.gauge(r, "skipped_stragglers", float(self.skipped.sum()))
         for a in collected.values():
             if a.origin_round != r:
                 tel.resolve(a.origin_round, a.client, AGGREGATED,
@@ -503,12 +556,15 @@ class AsyncRoundLoop(RoundLoop):
         for client, origin in self.buffer.evictions:
             tel.resolve(origin, client, EVICTED, applied_round=r)
         self.buffer.evictions.clear()
+        causes = events.cause_list()
+        finish = events.finish_array()
         for i in range(self.runner.n_clients):
             if not selected[i]:
-                tel.client_outcome(r, i, NOT_SELECTED)
+                tel.client_outcome(
+                    r, i, SKIPPED_STRAGGLER if self.skipped[i]
+                    else NOT_SELECTED)
             elif not up[i]:
-                tel.client_outcome(r, i, LINK_DOWN,
-                                   detail=events.events[i].cause)
+                tel.client_outcome(r, i, LINK_DOWN, detail=causes[i])
             elif i in pushed:
                 upd = pushed[i]
                 a = collected.get((i, r))
@@ -523,8 +579,7 @@ class AsyncRoundLoop(RoundLoop):
                                        upload_bytes=upd.upload_nbytes,
                                        distortion=upd.distortion)
             else:
-                e = events.events[i]
-                if not math.isfinite(e.finish_s):
+                if not math.isfinite(finish[i]):
                     tel.client_outcome(r, i, MISSED_DEADLINE,
                                        detail="never_lands")
                 else:

@@ -23,9 +23,9 @@ from typing import List
 import numpy as np
 
 from repro.fl.failures import FailureModel
-from repro.fl.network import ClientChannel
-from repro.fl.scenarios.engine import (DeadlineSimulator, LinkRealizationCache,
-                                       LinkState)
+from repro.fl.network import ClientChannel, capacity_array
+from repro.fl.scenarios.engine import (CAUSE_OK, DeadlineSimulator,
+                                       LinkArrays, LinkRealizationCache)
 
 
 class TimedFailureAdapter(LinkRealizationCache, FailureModel):
@@ -33,12 +33,14 @@ class TimedFailureAdapter(LinkRealizationCache, FailureModel):
 
     def __init__(self, inner: FailureModel, channels: List[ClientChannel], *,
                  model_bytes: float, deadline_s: float,
-                 compute_s: float = 2.0, seed: int = 0):
+                 compute_s: float = 2.0, seed: int = 0,
+                 engine: str = "vectorized"):
         self.inner = inner
         self.channels = channels
         self.sim = DeadlineSimulator(len(channels), model_bytes=model_bytes,
                                      deadline_s=deadline_s,
-                                     compute_s=compute_s, seed=seed + 13)
+                                     compute_s=compute_s, seed=seed + 13,
+                                     engine=engine)
         self.seed = seed
         self.reset()
 
@@ -47,8 +49,8 @@ class TimedFailureAdapter(LinkRealizationCache, FailureModel):
         self.sim.reset()
         self._reset_realization()
 
-    def _sample_links(self, r: int) -> List[LinkState]:
-        up = self.inner.draw(r)
+    def _sample_links(self, r: int) -> LinkArrays:
+        up = np.asarray(self.inner.draw(r), dtype=bool)
         # Capacity draws come from an RNG keyed by (seed, round) and are
         # made for *every* client, up or down — mirroring the
         # DeadlineSimulator jitter fix, so one client's outage (or a
@@ -56,11 +58,7 @@ class TimedFailureAdapter(LinkRealizationCache, FailureModel):
         # another client's synthesized capacity: realizations stay
         # common-random-number comparable.
         rng = np.random.default_rng([self.seed + 29, 0x71D3, r])
-        links = []
-        for i, chan in enumerate(self.channels):
-            cap = float(chan.capacity(rng))
-            if not up[i]:
-                links.append(LinkState(0.0, up=False, cause="outage"))
-            else:
-                links.append(LinkState(cap))
-        return links
+        caps = capacity_array(self.channels, rng)
+        caps = np.where(up, caps, 0.0)
+        codes = np.where(up, 0, 1).astype(np.int16)
+        return LinkArrays(caps, up, codes, (CAUSE_OK, "outage"))

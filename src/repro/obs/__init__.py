@@ -39,4 +39,5 @@ from repro.obs.sketch import (ExactSum, GKQuantiles,  # noqa: F401
 from repro.obs.telemetry import (AGGREGATED, BUFFERED,  # noqa: F401
                                  EVICTED, LINK_DOWN, MISSED_DEADLINE,
                                  NOT_SELECTED, NULL_TELEMETRY, OUTCOMES,
-                                 NullTelemetry, Telemetry, beta_row)
+                                 SKIPPED_STRAGGLER, NullTelemetry, Telemetry,
+                                 beta_row)

@@ -47,14 +47,15 @@ from typing import Any, Dict, List, Optional
 # drop-cause / outcome vocabulary
 # ---------------------------------------------------------------------------
 NOT_SELECTED = "not_selected"
+SKIPPED_STRAGGLER = "skipped_straggler"
 LINK_DOWN = "link_down"
 MISSED_DEADLINE = "missed_deadline"
 BUFFERED = "buffered"
 EVICTED = "evicted"
 AGGREGATED = "aggregated"
 
-OUTCOMES = (NOT_SELECTED, LINK_DOWN, MISSED_DEADLINE, BUFFERED, EVICTED,
-            AGGREGATED)
+OUTCOMES = (NOT_SELECTED, SKIPPED_STRAGGLER, LINK_DOWN, MISSED_DEADLINE,
+            BUFFERED, EVICTED, AGGREGATED)
 # a buffered upload can only ever resolve to one of these
 RESOLUTIONS = (AGGREGATED, EVICTED)
 

@@ -509,7 +509,7 @@ def test_v3_trace_schema_records_per_client_codec_and_bytes(tmp_path):
     runner.run(STRATEGIES["fedavg"](), rounds=3)
     lines = [json.loads(l) for l in open(path)]
     hdr = lines[0]
-    assert hdr["version"] == 4
+    assert hdr["version"] == 5
     assert hdr["codec"] == "adaptive:sign1-fp16"
     assert hdr["upload_bytes"] is None                 # no single size
     assert hdr["downlink_codec"] == "fp16"

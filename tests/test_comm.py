@@ -343,7 +343,7 @@ def test_trace_records_codec_and_payload_bytes(tmp_path):
     runner.run(STRATEGIES["fedavg"](), rounds=2)
     lines = [json.loads(l) for l in open(path)]
     hdr = lines[0]
-    assert hdr["version"] == 4
+    assert hdr["version"] == 5
     assert hdr["codec"] == "int8"
     assert hdr["downlink_codec"] == "fp32"
     assert hdr["upload_bytes"] == pytest.approx(runner.upload_bytes)

@@ -254,17 +254,25 @@ def test_fidelity_discount_downweights_distorted_upload():
 
 def test_config_fidelity_discount_b_reaches_strategy():
     """``FFTConfig.fidelity_discount_b`` changes training under a lossy
-    codec and is bit-exactly inert under a lossless one."""
-    hists = {}
+    codec and is bit-exactly inert under a lossless one.  Compared on the
+    trained parameters, not the accuracy history — the toy test set is so
+    small that a small re-weighting can leave every accuracy bucket
+    unchanged."""
+    params = {}
     for codec in ("sign1", "fp32"):
         for b in (0.0, 4.0):
             cfg = FFTConfig(codec=codec, fidelity_discount_b=b,
                             failure_mode="scenario:lossy_uplink", **BASE)
             runner = make_toy_runner(cfg, **TOY)
-            hists[codec, b] = runner.run(FedAuto(use_module1=False),
-                                         rounds=3)
-    assert hists["fp32", 0.0] == hists["fp32", 4.0]    # lossless: inert
-    assert hists["sign1", 0.0] != hists["sign1", 4.0]  # lossy: discounts
+            runner.run(FedAuto(use_module1=False), rounds=3)
+            params[codec, b] = jax.tree.leaves(runner.global_params)
+
+    def same(a, b):
+        return all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(a, b))
+
+    assert same(params["fp32", 0.0], params["fp32", 4.0])      # lossless: inert
+    assert not same(params["sign1", 0.0], params["sign1", 4.0])  # lossy
 
 
 # ---------------------------------------------------------------------------
@@ -281,7 +289,7 @@ def test_trace_v4_records_and_replays_distortions(tmp_path, mode):
                                  else "fedauto_async"](), rounds=4)
     live_dist = runner.loop.distortion_history
     lines = [json.loads(l) for l in open(path)]
-    assert lines[0]["version"] == 4
+    assert lines[0]["version"] == 5
     recorded_any = False
     for rec in lines[1:]:
         d = {c["id"]: c["distortion"] for c in rec["clients"]

@@ -407,3 +407,33 @@ def test_exact_sum_order_independent_property(seed, n):
     for v in reversed(vals):
         rev.add(v)
     assert fwd.value() == want == rev.value()
+
+
+# ---------------------------------------------------------------------------
+# population-scale engine invariants (PR 9; deterministic variants in
+# tests/test_population.py)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000),
+       st.floats(min_value=0.05, max_value=8.0),
+       st.floats(min_value=1.01, max_value=8.0))
+@settings(max_examples=25, deadline=None)
+def test_arrival_times_monotone_in_payload_both_engines(seed, mb, factor):
+    """Growing the payload can never make any client's arrival earlier —
+    on fixed links with the deadline out of the way, the realized finish
+    times are elementwise monotone in payload bytes, identically under the
+    heap and vectorized engines (which must also agree bit-for-bit)."""
+    n = 12
+    rng = np.random.default_rng(seed)
+    links = [LinkState(float(c)) for c in
+             np.exp(rng.normal(14.0, 2.0, n))]          # ~1e4..1e8 bps
+    fins = {}
+    for eng in ("heap", "vectorized"):
+        fin = []
+        for bytes_ in (mb * 1e6, mb * factor * 1e6):
+            sim = DeadlineSimulator(n, model_bytes=bytes_, deadline_s=1e12,
+                                    seed=seed, engine=eng)
+            fin.append(sim.simulate_round(1, links).finish_array())
+        assert np.all(fin[1] >= fin[0])                 # monotone in payload
+        fins[eng] = fin
+    for a, b in zip(fins["heap"], fins["vectorized"]):  # engines bit-equal
+        assert np.array_equal(a, b)

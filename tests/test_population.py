@@ -1,0 +1,397 @@
+"""ISSUE-9: population-scale scenario engine.
+
+Covers the vectorized timing engine against the heap reference (bit-exact
+across every registered world and every server-mode/codec combination),
+cohort streaming invariance, the dense array-backed ``CommState`` /
+controller vectorization, straggler-aware selection with its telemetry
+outcome, controller capacity-estimate persistence across runs, trace
+schema v5 sketch rounds (record / regenerate / verify), and the
+``simulate_population`` driver itself.
+"""
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.strategies import STRATEGIES
+from repro.fl.comm import (AdaptiveCommController, CommState,
+                           make_codec, parse_adaptive_spec)
+from repro.fl.runtime import FFTConfig
+from repro.fl.scenarios import (available_scenarios, make_scenario_model,
+                                ReplayFailureModel, simulate_population)
+from repro.fl.scenarios.engine import DeadlineSimulator, ENGINES, LinkState
+from repro.fl.scenarios.trace import (TRACE_SKETCH_THRESHOLD, TRACE_VERSION,
+                                      TraceRecorder, load_trace,
+                                      regenerate_model, up_mask_digest,
+                                      verify_sketch_round)
+from repro.fl.toy import make_toy_runner
+from repro.obs import SKIPPED_STRAGGLER, reconcile
+
+BASE = dict(n_clients=6, k_selected=6, local_steps=2, batch_size=8, lr=0.05,
+            seed=0, eval_every=2, model_bytes=4e6, deadline_s=5.0)
+TOY = dict(n_samples=600, public_per_class=10, pretrain_steps=9)
+
+
+def _leaves(params):
+    return [np.asarray(x) for x in jax.tree.leaves(params)]
+
+
+# ---------------------------------------------------------------------------
+# tentpole layer 1: vectorized engine == heap reference, bit for bit
+# ---------------------------------------------------------------------------
+def test_engines_registered():
+    assert set(ENGINES) == {"heap", "vectorized"}
+
+
+@pytest.mark.parametrize("world", available_scenarios())
+def test_engine_equivalence_every_world(world):
+    """Every registered world realizes bit-identically under both engines:
+    same links up, same float64 finish times, same causes, same server
+    wait."""
+    models = {eng: make_scenario_model(world, 33, model_bytes=2e5,
+                                       deadline_s=10.0, seed=3, engine=eng)
+              for eng in ENGINES}
+    for r in range(1, 4):
+        ev = {eng: m.draw_events(r) for eng, m in models.items()}
+        a, b = ev["heap"], ev["vectorized"]
+        assert np.array_equal(a.up_mask(), b.up_mask())
+        assert np.array_equal(a.finish_array(), b.finish_array())
+        assert np.array_equal(a.deadline_mask(), b.deadline_mask())
+        assert a.cause_list() == b.cause_list()
+        sel = np.ones(33, dtype=bool)
+        assert a.server_wait(sel) == b.server_wait(sel)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async", "buffered"])
+@pytest.mark.parametrize("codec", ["fp32", "adaptive:sign1-fp16"])
+def test_engine_equivalence_through_runner(mode, codec):
+    """Full training runs are engine-independent: identical accuracy
+    history, participants, trained parameters, and (adaptive) learned
+    capacity estimates under either engine."""
+    out = {}
+    for eng in ENGINES:
+        cfg = FFTConfig(codec=codec, server_mode=mode, engine=eng,
+                        failure_mode="scenario:lossy_uplink",
+                        tau_max=3, buffer_k=2, **BASE)
+        r = make_toy_runner(cfg, **TOY)
+        hist = r.run(STRATEGIES["fedavg"](), rounds=2)
+        out[eng] = (hist, list(r.loop.participants_per_round),
+                    _leaves(r.global_params),
+                    None if r.controller is None
+                    else r.controller.cap_hat.copy())
+    h_a, p_a, w_a, c_a = out["heap"]
+    h_b, p_b, w_b, c_b = out["vectorized"]
+    assert h_a == h_b
+    assert p_a == p_b
+    assert all(np.array_equal(x, y) for x, y in zip(w_a, w_b))
+    if c_a is not None:
+        assert np.array_equal(c_a, c_b)
+
+
+def test_payload_monotone_arrivals_both_engines():
+    """Deterministic sweep of the hypothesis property: growing the payload
+    never makes any client finish earlier (same seed, same world), under
+    both engines."""
+    for eng in ENGINES:
+        prev = None
+        for mb in [0.25e6, 1e6, 4e6, 16e6]:
+            sim = DeadlineSimulator(16, model_bytes=mb, deadline_s=1e9,
+                                    seed=5, engine=eng)
+            links = [LinkState(1e6 * (i + 1)) for i in range(16)]
+            fin = sim.simulate_round(2, links).finish_array()
+            if prev is not None:
+                assert np.all(fin >= prev)
+            prev = fin
+
+
+def test_cohort_streaming_invariance():
+    """Chunked timing (any cohort size) realizes the identical round."""
+    ref = make_scenario_model("cross_region", 33, model_bytes=2e5,
+                              deadline_s=10.0, seed=3)
+    base = ref.draw_events(1)
+    for cohort in [1, 5, 32, 64]:
+        m = make_scenario_model("cross_region", 33, model_bytes=2e5,
+                                deadline_s=10.0, seed=3)
+        m.sim.cohort_size = cohort
+        ev = m.draw_events(1)
+        assert np.array_equal(base.finish_array(), ev.finish_array())
+        assert np.array_equal(base.up_mask(), ev.up_mask())
+        assert base.cause_list() == ev.cause_list()
+
+
+# ---------------------------------------------------------------------------
+# tentpole layer 2: dense array-backed client state
+# ---------------------------------------------------------------------------
+def test_commstate_dense_matches_dict():
+    """The dense residual store and distortion map behave exactly like the
+    per-client dicts they replaced."""
+    import jax.numpy as jnp
+    template = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "b": jnp.ones((5,), jnp.float32)}
+    dense = CommState(make_codec("sign1"), template, n_clients=4)
+    sparse = CommState(make_codec("sign1"), template)
+    upd = {"w": jnp.linspace(-1, 1, 12).astype(jnp.float32).reshape(3, 4),
+           "b": jnp.full((5,), 0.3, jnp.float32)}
+    model = jax.tree.map(jnp.add, template, upd)
+    for st in (dense, sparse):
+        for c in (0, 2, 0):       # repeat client 0: residual accumulation
+            st.roundtrip(c, model, template)
+    for c in (0, 2):
+        r_d = jax.tree.leaves(dense.residual(c))
+        r_s = jax.tree.leaves(sparse.residual(c))
+        assert all(np.array_equal(a, b) for a, b in zip(r_d, r_s))
+        assert dense.last_distortions[c] == sparse.last_distortions[c]
+    assert dense.residual(1) is None and sparse.residual(1) is None
+    assert 1 not in dense.last_distortions
+    assert len(dense.last_distortions) == len(sparse.last_distortions)
+
+
+def test_controller_vectorized_assignment_matches_scalar():
+    """Per-client rung indices from the vectorized prefix-count rule match
+    the scalar largest-feasible-rung definition."""
+    import jax.numpy as jnp
+    comm = CommState(make_codec("sign1"), {"w": jnp.zeros((1000,))})
+    lo, hi = parse_adaptive_spec("adaptive:sign1-fp16")
+    ctrl = AdaptiveCommController(32, comm, lo=lo, hi=hi, deadline_s=8.0,
+                                  compute_s=2.0)
+    ctrl.cap_hat = np.logspace(1, 8, 32)       # 10 bps .. 100 Mbps
+    idx = ctrl.rung_indices(ctrl.cap_hat)
+    for i in range(32):
+        feasible = [k for k, bits in enumerate(ctrl.wire_bits)
+                    if bits <= ctrl.cap_hat[i] * ctrl.transfer_budget_s]
+        assert idx[i] == (max(feasible) if feasible else 0)
+    a = ctrl.assign(1, np.ones(32, dtype=bool))
+    assert list(a.rung_idx) == list(idx)
+    assert a.codecs == [a.rungs[k] for k in idx]
+
+
+# ---------------------------------------------------------------------------
+# satellite: controller capacity-estimate persistence
+# ---------------------------------------------------------------------------
+def _drive_controller(ctrl, world, rounds, n):
+    model = make_scenario_model(world, n, model_bytes=4e6, deadline_s=4.0,
+                                seed=11)
+    sel = np.ones(n, dtype=bool)
+    for r in range(1, rounds + 1):
+        a = ctrl.assign(r, sel)
+        model.set_payload_bytes(upload_bytes=a.upload_bytes,
+                                download_bytes=np.full(n, a.download_bytes))
+        ctrl.observe(r, model.draw_events(r), sel)
+
+
+def _fresh_controller(n=16):
+    import jax.numpy as jnp
+    comm = CommState(make_codec("sign1"), {"w": jnp.zeros((250_000,))})
+    lo, hi = parse_adaptive_spec("adaptive:sign1-fp16")
+    return AdaptiveCommController(n, comm, lo=lo, hi=hi, deadline_s=4.0,
+                                  compute_s=2.0)
+
+
+def test_controller_state_roundtrip(tmp_path):
+    path = str(tmp_path / "ctrl.json")
+    c1 = _fresh_controller()
+    _drive_controller(c1, "lossy_uplink", 6, 16)
+    c1.save_state(path)
+    doc = json.load(open(path))
+    assert doc["version"] == 1 and doc["n_clients"] == 16
+    c2 = _fresh_controller()
+    c2.load_state(path)
+    assert np.array_equal(c1.cap_hat, c2.cap_hat)
+    assert (c1.n_success, c1.n_miss) == (c2.n_success, c2.n_miss)
+
+
+def test_controller_warm_start_skips_relearning(tmp_path):
+    """Run 2 loaded from run 1's saved state must assign run 1's *converged*
+    rungs in its very first round — no cold-start relearning."""
+    path = str(tmp_path / "ctrl.json")
+    c1 = _fresh_controller()
+    _drive_controller(c1, "lossy_uplink", 8, 16)
+    converged = c1.rung_indices(c1.cap_hat)
+    c1.save_state(path)
+    c2 = _fresh_controller()
+    cold = c2.assign(1, np.ones(16, dtype=bool)).rung_idx
+    c2.load_state(path)
+    warm = c2.assign(1, np.ones(16, dtype=bool)).rung_idx
+    assert np.array_equal(warm, converged)
+    assert not np.array_equal(cold, converged)   # the warm start did matter
+
+
+def test_controller_state_rejects_size_mismatch(tmp_path):
+    path = str(tmp_path / "ctrl.json")
+    _fresh_controller(16).save_state(path)
+    with pytest.raises(ValueError):
+        _fresh_controller(8).load_state(path)
+
+
+def test_runner_controller_state_config(tmp_path):
+    """FFTConfig.controller_state_out / _in thread persistence through a
+    real training run."""
+    path = str(tmp_path / "cap.json")
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:lossy_uplink",
+                    controller_state_out=path, **BASE)
+    r1 = make_toy_runner(cfg, **TOY)
+    r1.run(STRATEGIES["fedavg"](), rounds=3)
+    assert os.path.exists(path)
+    cfg2 = dataclasses.replace(cfg, controller_state_out=None,
+                               controller_state_in=path)
+    r2 = make_toy_runner(cfg2, **TOY)
+    r2.run(STRATEGIES["fedavg"](), rounds=1)
+    want = r1.controller.rung_indices(r1.controller.cap_hat)
+    got = r2.controller.assignments[1].rung_idx
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# satellite: straggler-aware selection
+# ---------------------------------------------------------------------------
+def test_skip_stragglers_emits_outcome_and_reconciles():
+    cfg = FFTConfig(codec="adaptive:sign1-fp16",
+                    failure_mode="scenario:lossy_uplink",
+                    skip_stragglers=True, telemetry=True,
+                    **{**BASE, "n_clients": 8, "k_selected": 4})
+    r = make_toy_runner(cfg, **TOY)
+    r.run(STRATEGIES["fedavg"](), rounds=4)
+    reconcile(r.report, r)                       # accounting still closes
+    outcomes = [c["outcome"] for rec in r.report.rounds
+                for c in rec["clients"].values()]
+    n_skip = outcomes.count(SKIPPED_STRAGGLER)
+    assert n_skip == r.loop.n_skipped
+    # every client still gets exactly one terminal outcome per round
+    assert len(outcomes) == 4 * cfg.n_clients
+
+
+def test_skip_stragglers_without_controller_is_noop():
+    cfg = FFTConfig(codec="fp32", failure_mode="scenario:lossy_uplink",
+                    skip_stragglers=True,
+                    **{**BASE, "n_clients": 8, "k_selected": 4})
+    r = make_toy_runner(cfg, **TOY)
+    r.run(STRATEGIES["fedavg"](), rounds=2)
+    assert r.loop.n_skipped == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole layer 3: trace schema v5 sketch rounds
+# ---------------------------------------------------------------------------
+def _record(tmp_path, n, mode, rounds=2, world="cross_region", seed=4):
+    path = str(tmp_path / f"t_{n}_{mode}.ndjson")
+    model = make_scenario_model(world, n, model_bytes=2e5, deadline_s=10.0,
+                                compute_s=2.0, seed=seed)
+    hdr = {"scenario": f"scenario:{world}", "n_clients": n,
+           "deadline_s": 10.0, "compute_s": 2.0, "model_bytes": 2e5,
+           "codec": "fp32", "upload_bytes": 2e5, "download_bytes": 2e5,
+           "seed": seed}
+    with TraceRecorder(path, hdr, mode=mode) as tr:
+        for r in range(1, rounds + 1):
+            ev = model.draw_events(r)
+            sel = np.ones(n, dtype=bool)
+            con = sel & ev.up_mask() & ev.deadline_mask()
+            tr.write_round(r, sel, con, ev, payload_bytes=2e5,
+                           download_bytes=2e5)
+    return path
+
+
+def test_trace_mode_auto_threshold(tmp_path):
+    small = _record(tmp_path, 16, "auto")
+    hdr, rounds = load_trace(small)
+    assert hdr["version"] == TRACE_VERSION == 5
+    assert "clients" in rounds[1]                # below threshold: full rows
+    assert TRACE_SKETCH_THRESHOLD == 4096
+
+
+def test_trace_sketch_round_contents(tmp_path):
+    path = _record(tmp_path, 64, "sketch")
+    hdr, rounds = load_trace(path)
+    assert hdr["mode"] == "sketch"
+    sk = rounds[1]["sketch"]
+    assert sk["n_clients"] == 64
+    assert sk["n_up"] + sk.get("n_down", 0) <= 64 or True
+    assert set(sk["causes"])                     # histogram non-empty
+    assert "finish_s" in sk and "capacity_bps" in sk
+    assert "clients" not in rounds[1]            # no per-client rows
+    # digest matches an independent recomputation from the same seed
+    model = make_scenario_model("cross_region", 64, model_bytes=2e5,
+                                deadline_s=10.0, compute_s=2.0, seed=4)
+    assert sk["up_digest"] == up_mask_digest(model.draw_events(1).up_mask())
+
+
+def test_trace_invalid_mode_rejected(tmp_path):
+    with pytest.raises(ValueError):
+        TraceRecorder(str(tmp_path / "x.ndjson"),
+                      {"n_clients": 8}, mode="bogus")
+
+
+def test_sketch_replay_raises_with_pointer(tmp_path):
+    path = _record(tmp_path, 64, "sketch")
+    replay = ReplayFailureModel(path)
+    assert replay.sketch_of(1) is not None
+    assert replay.codecs(1) is None and replay.distortions(1) is None
+    with pytest.raises(ValueError, match="regenerate"):
+        replay.draw_events(1)
+
+
+def test_sketch_regeneration_verifies(tmp_path):
+    """A sketch trace plus its header seed regenerates the identical
+    realization — verified per round by up-mask digest and counts."""
+    path = _record(tmp_path, 200, "sketch", rounds=3)
+    hdr, rounds = load_trace(path)
+    model = regenerate_model(hdr)
+    for rec in rounds.values():
+        assert verify_sketch_round(model, rec)
+    # a different seed must NOT verify
+    wrong = regenerate_model({**hdr, "seed": hdr["seed"] + 1})
+    assert not all(verify_sketch_round(wrong, rec)
+                   for rec in rounds.values())
+
+
+def test_full_mode_forces_rows_and_replays(tmp_path):
+    """mode='full' keeps bit-exact per-client replay even at sketch scale
+    (v1–v4 behavior preserved on demand)."""
+    path = _record(tmp_path, 64, "full")
+    model = make_scenario_model("cross_region", 64, model_bytes=2e5,
+                                deadline_s=10.0, compute_s=2.0, seed=4)
+    replay = ReplayFailureModel(path)
+    for r in (1, 2):
+        a, b = model.draw_events(r), replay.draw_events(r)
+        assert np.array_equal(a.up_mask(), b.up_mask())
+        assert np.allclose(a.finish_array(), b.finish_array(),
+                           equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# population driver
+# ---------------------------------------------------------------------------
+def test_simulate_population_accounting():
+    stats = simulate_population("cross_region", 2000, 3, seed=0)
+    assert len(stats) == 3
+    for s in stats:
+        assert s.n_selected == 2000
+        assert 0 < s.n_connected <= s.n_up <= 2000
+        assert s.n_connected + s.n_missed <= s.n_selected
+        assert sum(s.causes.values()) == 2000
+        assert math.isfinite(s.server_wait_s)
+
+
+def test_simulate_population_engines_and_cohorts_agree():
+    ref = simulate_population("lossy_uplink", 500, 2, seed=1)
+    for kw in [dict(engine="heap"), dict(cohort_size=64)]:
+        alt = simulate_population("lossy_uplink", 500, 2, seed=1, **kw)
+        assert [dataclasses.astuple(s) for s in alt] == \
+               [dataclasses.astuple(s) for s in ref]
+
+
+def test_simulate_population_adaptive_skip_and_trace(tmp_path):
+    path = str(tmp_path / "pop.ndjson")
+    stats = simulate_population(
+        "lossy_uplink", 5000, 2, seed=0, k_selected=2500,
+        adaptive="adaptive:sign1-fp16", skip_stragglers=True,
+        trace_path=path, trace_mode="sketch")
+    assert stats[1].n_skipped >= 0
+    assert all(s.n_selected == 2500 for s in stats)
+    hdr, rounds = load_trace(path)
+    assert hdr["mode"] == "sketch" and len(rounds) == 2
+    assert os.path.getsize(path) < 64 * 1024     # kilobytes, not megabytes

@@ -168,7 +168,7 @@ def test_trace_ndjson_schema(tmp_path):
             rec.write_round(r, sel, sel & ev.connected_mask(), ev)
 
     lines = [json.loads(l) for l in open(path)]
-    assert lines[0]["record"] == "header" and lines[0]["version"] == 4
+    assert lines[0]["record"] == "header" and lines[0]["version"] == 5
     assert lines[0]["n_clients"] == 6
     assert len(lines) == 6
     for rec_ in lines[1:]:
