@@ -1,0 +1,104 @@
+"""Streaming fused aggregation vs the materializing server path (ISSUE 10).
+
+The materializing server decodes every packed upload to a full fp32 vector
+and then β-reduces K decoded pytrees; the streaming server feeds packed
+``(payload, β)`` pairs through the batched decode-and-accumulate kernels
+into one fp32 accumulator.  This bench measures the server-side cost per
+aggregate — decode included on both arms, since streaming fuses it — at
+K ∈ {64, 256, 1024} arrivals, plus the O(1)-vs-O(K) peak decoded memory
+and the napkin roofline target for the fused pass (memory-bound: K int8
+payload reads + one fp32 accumulator write).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.comm import make_codec
+from repro.fl.comm.stream import StreamAccumulator
+from repro.launch.roofline import roofline_terms
+
+
+def _bench(fn, repeat=3):
+    fn()                                     # compile / warm caches
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat
+
+
+def run(quick: bool = True):
+    from benchmarks.common import BenchResult
+    rows = []
+    P = 1 << 16 if quick else 1 << 20
+    template = {"w": jnp.zeros((P,), jnp.float32)}
+    codec = make_codec("int8")
+    rng = np.random.default_rng(0)
+    k_max = 1024
+    payloads = [codec.encode(
+        {"w": jnp.asarray(rng.normal(size=P), jnp.float32)})
+        for _ in range(k_max)]
+
+    for K in (64, 256, 1024):
+        betas = np.full(K, 1.0 / K, np.float32)
+
+        def materializing(K=K, betas=betas):
+            # the old hot path: per-payload decode to fp32, then β-reduce
+            out = jnp.zeros((P,), jnp.float32)
+            for p, b in zip(payloads[:K], betas):
+                out = out + jnp.float32(b) * codec.decode(p)["w"]
+            return out
+
+        def streaming(K=K, betas=betas):
+            acc = StreamAccumulator(template, batch_k=64)
+            for p, b in zip(payloads[:K], betas):
+                acc.add(p, b)
+            return acc.total()["w"]
+
+        t_mat = _bench(materializing)
+        t_str = _bench(streaming)
+        # parity guard: a fast-but-wrong aggregate must fail the bench
+        err = float(jnp.max(jnp.abs(materializing() - streaming())))
+        if err > 1e-4:
+            raise AssertionError(
+                f"K={K}: streaming aggregate diverges from the "
+                f"materializing path (maxerr {err:.3e})")
+        rows.append(BenchResult(
+            name=f"stream/materializing_K{K}", us_per_call=t_mat * 1e6,
+            derived=f"{K / t_mat:.0f}", value=K / t_mat, kind="timing"))
+        rows.append(BenchResult(
+            name=f"stream/streaming_K{K}", us_per_call=t_str * 1e6,
+            derived=f"{K / t_str:.0f}", value=K / t_str, kind="timing"))
+        rows.append(BenchResult(
+            name=f"stream/speedup_K{K}", us_per_call=t_str * 1e6,
+            derived=f"{t_mat / t_str:.2f}", value=t_mat / t_str,
+            kind="timing"))
+
+    # peak decoded memory: O(1) streaming accumulator vs O(K) materialized
+    acc = StreamAccumulator(template, batch_k=64)
+    for p, b in zip(payloads, np.full(k_max, 1.0 / k_max)):
+        acc.add(p, b)
+    acc.total()
+    rows.append(BenchResult(
+        name=f"stream/peak_decoded_MB_K{k_max}",
+        us_per_call=0.0, derived=f"{acc.peak_decoded_bytes / 1e6:.1f}",
+        value=round(acc.peak_decoded_bytes / 1e6, 1), kind="count"))
+    rows.append(BenchResult(
+        name=f"stream/materialized_MB_K{k_max}",
+        us_per_call=0.0, derived=f"{k_max * 4 * P / 1e6:.1f}",
+        value=round(k_max * 4 * P / 1e6, 1), kind="count"))
+
+    # roofline target for the fused pass: read K int8 payloads (P bytes
+    # each + fp32 scales, negligible), write one fp32 accumulator; one
+    # multiply-add per element
+    terms = roofline_terms(flops=2.0 * k_max * P,
+                           bytes_accessed=k_max * P + 4.0 * P,
+                           coll_bytes=0)
+    target_s = max(terms["compute_s"], terms["memory_s"])
+    rows.append(BenchResult(
+        name=f"stream/roofline_target_K{k_max}",
+        us_per_call=target_s * 1e6, derived=terms["dominant"],
+        kind="info"))
+    return rows

@@ -18,12 +18,13 @@ def get_benches():
                             bench_comm, bench_convergence, bench_fidelity,
                             bench_kernels, bench_population,
                             bench_resourceopt, bench_scenarios,
-                            bench_table1, bench_table2,
+                            bench_stream, bench_table1, bench_table2,
                             bench_table3, bench_table4, bench_table5,
                             roofline)
     return {
         "kernels": bench_kernels,
         "aggregation": bench_aggregation,
+        "stream": bench_stream,
         "convergence": bench_convergence,
         "table1": bench_table1,
         "table2": bench_table2,

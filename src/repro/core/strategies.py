@@ -54,6 +54,12 @@ class RoundContext:
     distortions: Optional[Dict[int, float]] = None   # ‖carry−dec‖/‖carry‖
     telemetry: Any = None                 # run telemetry hub (repro.obs);
     #                                       None/falsy = not recording
+    # streaming server path: the round's uploads as wire PackedUpdates
+    # (client id -> repro.fl.comm.stream.PackedUpdate).  Set — and
+    # client_models left empty — when the loop runs a streaming-capable
+    # strategy; strategies feed them through a StreamAccumulator so K
+    # arrivals never materialize K fp32 model pytrees.
+    packed: Optional[Dict[int, Any]] = None
 
 
 def _record_betas(ctx, rows) -> None:
@@ -85,8 +91,60 @@ def _accumulate(ctx, models, betas):
     return out
 
 
+def _stream_accumulate(ctx, dense, packed):
+    """Streaming counterpart of ``_accumulate``: the β-weighted model sum
+    ``Σ w_t·tree_t + Σ β_j·(origin_global_j + decode(payload_j))`` computed
+    through ``repro.fl.comm.stream.weighted_model_sum`` — K packed payloads
+    batch through the decode-and-accumulate kernels and never materialize K
+    model pytrees.  ``dense``/``packed`` are ``(weight, tree)`` /
+    ``(weight, PackedUpdate)`` pairs; leaves come back cast to the global
+    dtype, exactly like ``aggregate_pytrees``.  (Lazy import: ``repro.fl``
+    imports this module at package load.)"""
+    from repro.fl.comm.stream import weighted_model_sum
+    tel = getattr(ctx, "telemetry", None)
+    with _phase(ctx, "phase.accumulate"):
+        out = weighted_model_sum(packed, dense, template=ctx.global_params,
+                                 telemetry=tel or NULL_TELEMETRY, rnd=ctx.rnd)
+        out = jax.tree.map(lambda g, v: v.astype(g.dtype),
+                           ctx.global_params, out)
+        if tel:
+            jax.block_until_ready(out)
+    return out
+
+
+def _stream_delta_sum(ctx, dense, packed):
+    """Like ``_stream_accumulate`` but over *deltas*: ``Σ w_t·tree_t +
+    Σ β_j·decode(payload_j)`` with fp32 leaves and no origin-global terms —
+    a payload's decode IS its origin-relative delta (what FedBuff holds)."""
+    from repro.fl.comm.stream import StreamAccumulator
+    tel = getattr(ctx, "telemetry", None)
+    with _phase(ctx, "phase.accumulate"):
+        acc = StreamAccumulator(ctx.global_params,
+                                telemetry=tel or NULL_TELEMETRY)
+        for w, pu in packed:
+            acc.add(pu.payload, w)
+        for w, t in dense:
+            acc.add_tree(t, w)
+        out = acc.total()
+        if tel:
+            tel.gauge(ctx.rnd, "uplink_fused_payloads", acc.n_fused)
+            tel.gauge(ctx.rnd, "uplink_fallback_payloads", acc.n_fallback)
+            tel.gauge(ctx.rnd, "uplink_peak_decoded_bytes",
+                      acc.peak_decoded_bytes)
+            jax.block_until_ready(out)
+    return out
+
+
 class Strategy:
     name = "base"
+    # Streaming-capable strategies consume ctx.packed (wire payloads through
+    # a StreamAccumulator) instead of ctx.client_models.  Strategies that
+    # genuinely need per-client models/deltas — Scaffold's control variates,
+    # FedLAW's proxy optimization over the stacked cohort, TF-Aggregation's
+    # literal per-model weights, FedEx-LoRA's adapter matrix products — keep
+    # streaming=False, and the loops materialize for them (the documented
+    # fallback, counted in the uplink_decode attribution gauges).
+    streaming = False
 
     def init_state(self, runner) -> None:
         pass
@@ -115,24 +173,26 @@ class FedAvg(Strategy):
     """Footnote-2 heuristic weights under failures; Remark-1 weights when
     the network is ideal."""
     name = "fedavg"
+    streaming = True
 
     def aggregate(self, ctx: RoundContext):
         with _phase(ctx, "phase.weight_solve"):
             beta = heuristic_weights(
                 ctx.p, self._mask(ctx), server_idx=0,
                 full_participation=ctx.full_participation)
-        models = [ctx.server_model] + [ctx.client_models[i]
-                                       for i in range(len(ctx.connected))
-                                       if ctx.connected[i]]
-        weights = [beta[0]] + [beta[i + 1] for i in range(len(ctx.connected))
-                               if ctx.connected[i]]
+        ids = [i for i in range(len(ctx.connected)) if ctx.connected[i]]
         if getattr(ctx, "telemetry", None):
             codecs = ctx.codecs or {}
             dists = ctx.distortions or {}
             _record_betas(ctx, [beta_row(beta[0], role="server")] + [
                 beta_row(beta[i + 1], client=i, rung=codecs.get(i),
-                         distortion=dists.get(i))
-                for i in range(len(ctx.connected)) if ctx.connected[i]])
+                         distortion=dists.get(i)) for i in ids])
+        if getattr(ctx, "packed", None) is not None:
+            return _stream_accumulate(
+                ctx, dense=[(beta[0], ctx.server_model)],
+                packed=[(beta[i + 1], ctx.packed[i]) for i in ids])
+        models = [ctx.server_model] + [ctx.client_models[i] for i in ids]
+        weights = [beta[0]] + [beta[i + 1] for i in ids]
         return _accumulate(ctx, models, np.array(weights))
 
 
@@ -311,6 +371,8 @@ class TFAggregation(Strategy):
 class FedAWE(Strategy):
     """Adaptive weighting via missed-round-scaled local extrapolation (Eq. 51)."""
     name = "fedawe"
+    streaming = True              # aggregates via FedAvg; extrapolation is
+    #                               client-side (post_local), before encode
 
     def __init__(self, gamma_g: float = 0.001):
         self.gamma_g = gamma_g
@@ -384,6 +446,7 @@ class FedAuto(Strategy):
     sign1-coarse reconstruction no longer weighs like a lossless fp32 one;
     at b = 0 (the default) this is bit-exact with the undiscounted QP."""
     name = "fedauto"
+    streaming = True
 
     def __init__(self, use_module1: bool = True, use_module2: bool = True,
                  fidelity_discount: Optional[float] = None):
@@ -412,9 +475,11 @@ class FedAuto(Strategy):
             distortion.append(0.0)
         ids = [i for i in range(N) if ctx.connected[i]]
         dmap = ctx.distortions or {}
+        packed_map = getattr(ctx, "packed", None)
         for i in ids:
             rows.append(dist(ctx.client_hists[i].astype(float)))
-            models.append(ctx.client_models[i])
+            if packed_map is None:
+                models.append(ctx.client_models[i])
             distortion.append(float(dmap.get(i, 0.0)))
         alpha_rows = np.stack(rows)
         alpha_g = dist(ctx.global_hist.astype(float))
@@ -440,6 +505,12 @@ class FedAuto(Strategy):
                                     rung=codecs.get(i),
                                     distortion=float(dmap.get(i, 0.0))))
             _record_betas(ctx, out)
+        if packed_map is not None:
+            n_dense = len(models)            # server (+ compensatory)
+            return _stream_accumulate(
+                ctx, dense=list(zip(beta[:n_dense], models)),
+                packed=[(beta[n_dense + j], packed_map[i])
+                        for j, i in enumerate(ids)])
         return _accumulate(ctx, models, beta)
 
 
@@ -458,6 +529,10 @@ class Arrival:
     codec: Optional[str] = None           # rung this upload traveled under
     upload_nbytes: Optional[float] = None  # bytes this upload cost on-wire
     distortion: float = 0.0               # ‖carry−decoded‖/‖carry‖ at encode
+    packed: Any = None                    # streaming mode: the wire
+    #                                       PackedUpdate (model/delta None —
+    #                                       decode(payload) IS the
+    #                                       origin-relative delta)
 
 
 @dataclasses.dataclass
@@ -503,12 +578,24 @@ class AsyncStrategy(Strategy):
         codecs = ctx.codecs or {}
         nbytes = ctx.upload_bytes or {}
         dists = ctx.distortions or {}
-        arrivals = [Arrival(client=i, origin_round=ctx.rnd, staleness=0,
-                            arrival_s=float(ctx.rnd), model=m,
-                            delta=delta_pytree(m, ctx.global_params),
-                            codec=codecs.get(i), upload_nbytes=nbytes.get(i),
-                            distortion=float(dists.get(i, 0.0)))
-                    for i, m in sorted(ctx.client_models.items())]
+        packed_map = getattr(ctx, "packed", None)
+        if packed_map is not None:
+            # streaming bridge: arrivals carry the wire payloads; no model
+            # or dispatch-time delta is ever materialized
+            arrivals = [Arrival(client=i, origin_round=ctx.rnd, staleness=0,
+                                arrival_s=float(ctx.rnd), model=None,
+                                packed=pu, codec=codecs.get(i),
+                                upload_nbytes=nbytes.get(i),
+                                distortion=float(dists.get(i, 0.0)))
+                        for i, pu in sorted(packed_map.items())]
+        else:
+            arrivals = [Arrival(client=i, origin_round=ctx.rnd, staleness=0,
+                                arrival_s=float(ctx.rnd), model=m,
+                                delta=delta_pytree(m, ctx.global_params),
+                                codec=codecs.get(i),
+                                upload_nbytes=nbytes.get(i),
+                                distortion=float(dists.get(i, 0.0)))
+                        for i, m in sorted(ctx.client_models.items())]
         actx = AsyncRoundContext(
             rnd=ctx.rnd, now_s=float(ctx.rnd),
             global_params=ctx.global_params, server_model=ctx.server_model,
@@ -531,6 +618,7 @@ class FedAsync(AsyncStrategy):
     global model in landing order with rate γ0·(1+s)^{-a}; the server's own
     update is a staleness-0 arrival applied last each round."""
     name = "fedasync"
+    streaming = True
 
     def __init__(self, gamma0: float = 0.6, discount_a: float = 0.5,
                  gamma_server: float = 0.3):
@@ -546,20 +634,35 @@ class FedAsync(AsyncStrategy):
             global_params, model)
 
     def aggregate_async(self, ctx: AsyncRoundContext):
-        w = ctx.global_params
-        rows = [] if getattr(ctx, "telemetry", None) else None
-        for arr in ctx.arrivals:
-            gamma = self.gamma0 * _staleness_discount(arr.staleness,
-                                                      self.discount_a)
-            w = self._mix(w, arr.model, gamma)
-            if rows is not None:
-                rows.append(beta_row(gamma, client=arr.client,
-                                     origin_round=arr.origin_round,
-                                     staleness=arr.staleness, rung=arr.codec,
-                                     distortion=arr.distortion))
-        if rows is not None:
+        gammas = [self.gamma0 * _staleness_discount(a.staleness,
+                                                    self.discount_a)
+                  for a in ctx.arrivals]
+        if getattr(ctx, "telemetry", None):
+            rows = [beta_row(g, client=a.client, origin_round=a.origin_round,
+                             staleness=a.staleness, rung=a.codec,
+                             distortion=a.distortion)
+                    for g, a in zip(gammas, ctx.arrivals)]
             rows.append(beta_row(self.gamma_server, role="server"))
             _record_betas(ctx, rows)
+        if ctx.arrivals and all(a.packed is not None for a in ctx.arrivals):
+            # Streaming: the sequential mixing is linear in the models, so
+            # unroll it —  w_out = c0·w̄ + Σ_j c_j·model_j + γ_s·w_s with
+            # c_j = (1−γ_s)·γ_j·∏_{k>j}(1−γ_k) — and evaluate the Σ over
+            # model_j = origin_global_j + decode(payload_j) in one
+            # accumulator pass instead of |arrivals| pytree mixes.
+            coefs = [0.0] * len(gammas)
+            suffix = 1.0 - self.gamma_server
+            for j in range(len(gammas) - 1, -1, -1):
+                coefs[j] = gammas[j] * suffix
+                suffix *= 1.0 - gammas[j]
+            return _stream_accumulate(
+                ctx, dense=[(suffix, ctx.global_params),
+                            (self.gamma_server, ctx.server_model)],
+                packed=[(c, a.packed)
+                        for c, a in zip(coefs, ctx.arrivals)])
+        w = ctx.global_params
+        for gamma, arr in zip(gammas, ctx.arrivals):
+            w = self._mix(w, arr.model, gamma)
         return self._mix(w, ctx.server_model, self.gamma_server)
 
 
@@ -570,6 +673,9 @@ class FedBuff(AsyncStrategy):
     round so training never stalls on an empty buffer."""
     name = "fedbuff"
     wants_delta = True
+    streaming = True              # a held payload's decode IS the
+    #                               origin-relative delta: streaming mode
+    #                               needs no dispatch-time snapshot at all
 
     def __init__(self, buffer_k: int = 4, eta: float = 1.0,
                  discount_a: float = 0.5):
@@ -578,38 +684,46 @@ class FedBuff(AsyncStrategy):
         self.discount_a = discount_a
 
     def init_state(self, runner) -> None:
-        self._held: list = []
+        self._held: list = []     # (delta|None, disc, meta, packed|None)
 
     def aggregate_async(self, ctx: AsyncRoundContext):
         for arr in ctx.arrivals:
-            # dispatch-time snapshot (w_i − w̄^{origin}); fall back to the
-            # current global only for fresh arrivals (origin == now)
-            delta = (arr.delta if arr.delta is not None
+            # dispatch-time snapshot (w_i − w̄^{origin}); in streaming mode
+            # the packed payload replaces it — decode(payload) is exactly
+            # that delta, so nothing is materialized at dispatch either
+            delta = (None if arr.packed is not None
+                     else arr.delta if arr.delta is not None
                      else delta_pytree(arr.model, ctx.global_params))
             self._held.append((
                 delta, _staleness_discount(arr.staleness, self.discount_a),
                 dict(client=arr.client, origin_round=arr.origin_round,
                      staleness=arr.staleness, rung=arr.codec,
-                     distortion=arr.distortion)))
+                     distortion=arr.distortion), arr.packed))
         server_delta = delta_pytree(ctx.server_model, ctx.global_params)
-        deltas = [server_delta]
-        discs = [1.0]
         flush = len(self._held) >= self.buffer_k
+        denom = 1 + (len(self._held) if flush else 0)
+        dense = [(1.0 / denom, server_delta)]
+        packed = []
         if flush:
-            for d, disc, _meta in self._held:
-                deltas.append(d)
-                discs.append(disc)
+            for d, disc, _meta, pu in self._held:
+                if pu is not None:
+                    packed.append((disc / denom, pu))
+                else:
+                    dense.append((disc / denom, d))
         if getattr(ctx, "telemetry", None):
-            # each delta's applied step weight: η · disc / |deltas|
-            denom = len(deltas)
+            # each delta's applied step weight: η · disc / denom
             rows = [beta_row(self.eta / denom, role="server")]
             if flush:
                 rows.extend(beta_row(self.eta * disc / denom, **meta)
-                            for _d, disc, meta in self._held)
+                            for _d, disc, meta, _pu in self._held)
             _record_betas(ctx, rows)
         if flush:
             self._held = []
-        step = _accumulate(ctx, deltas, np.asarray(discs) / len(deltas))
+        if packed:
+            step = _stream_delta_sum(ctx, dense, packed)
+        else:
+            step = _accumulate(ctx, [t for _w, t in dense],
+                               np.asarray([w for w, _t in dense]))
         return jax.tree.map(
             lambda g, d: (g.astype(jnp.float32) +
                           self.eta * d.astype(jnp.float32)).astype(g.dtype),
@@ -625,6 +739,7 @@ class FedAutoAsync(AsyncStrategy):
     and ``fidelity_discount`` at 0 (or every upload lossless) this is
     exactly FedAuto."""
     name = "fedauto_async"
+    streaming = True
 
     def __init__(self, use_module1: bool = True, discount_a: float = 0.5,
                  fidelity_discount: Optional[float] = None):
@@ -658,10 +773,14 @@ class FedAutoAsync(AsyncStrategy):
             distortion.append(0.0)
         # client-index order (not landing order): the QP is a batch solve, and
         # this makes the fresh-cohort case bit-identical to synchronous FedAuto
-        for arr in sorted(ctx.arrivals, key=lambda a: (a.client,
-                                                       a.origin_round)):
+        sorted_arrs = sorted(ctx.arrivals, key=lambda a: (a.client,
+                                                          a.origin_round))
+        streaming = bool(sorted_arrs) and all(a.packed is not None
+                                              for a in sorted_arrs)
+        for arr in sorted_arrs:
             rows.append(dist(ctx.client_hists[arr.client].astype(float)))
-            models.append(arr.model)
+            if not streaming:
+                models.append(arr.model)
             staleness.append(arr.staleness)
             distortion.append(float(arr.distortion))
         alpha_rows = np.stack(rows)
@@ -679,13 +798,18 @@ class FedAutoAsync(AsyncStrategy):
             if comp_model is not None:
                 out.append(beta_row(beta[1], role="comp"))
                 k = 2
-            for j, arr in enumerate(sorted(
-                    ctx.arrivals, key=lambda a: (a.client, a.origin_round))):
+            for j, arr in enumerate(sorted_arrs):
                 out.append(beta_row(beta[k + j], client=arr.client,
                                     origin_round=arr.origin_round,
                                     staleness=arr.staleness, rung=arr.codec,
                                     distortion=arr.distortion))
             _record_betas(ctx, out)
+        if streaming:
+            n_dense = len(models)            # server (+ compensatory)
+            return _stream_accumulate(
+                ctx, dense=list(zip(beta[:n_dense], models)),
+                packed=[(beta[n_dense + j], arr.packed)
+                        for j, arr in enumerate(sorted_arrs)])
         return _accumulate(ctx, models, beta)
 
 

@@ -14,7 +14,12 @@ Three layers:
   ``FFTConfig.codec = "adaptive:<lo>-<hi>"``: estimates each client's
   effective capacity online from observed arrivals/misses (no oracle) and
   assigns the richest rung of the ladder predicted to land in time.
-* the fused dequantize-and-β-accumulate Pallas kernel lives with the other
+* ``stream`` — the streaming server side: ``StreamAccumulator`` consumes
+  packed ``(payload, β)`` pairs incrementally through the batched
+  decode-and-accumulate kernels, so K arrivals never materialize K fp32
+  delta pytrees (see ``CommState.encode_upload`` / ``decode_upload`` for
+  the client/server halves of the old ``roundtrip``).
+* the batched decode-and-accumulate Pallas kernels live with the other
   kernels (``repro.kernels.dequant_agg``; dispatch via ``kernels.ops``).
 """
 from repro.fl.comm.adaptive import (RUNG_LADDER, AdaptiveCommController,
@@ -24,11 +29,16 @@ from repro.fl.comm.codecs import (CODECS, Codec, EncodedLeaf, Payload,
                                   available_codecs, make_codec)
 from repro.fl.comm.fused import aggregate_quantized, is_quantized
 from repro.fl.comm.state import CommState, fp32_nbytes
+from repro.fl.comm.stream import (PackedUpdate, StreamAccumulator,
+                                  payload_family, weighted_model_sum,
+                                  weighted_tree_sum)
 
 __all__ = [
     "CODECS", "Codec", "EncodedLeaf", "Payload", "available_codecs",
     "make_codec", "CommState", "fp32_nbytes",
     "aggregate_quantized", "is_quantized",
+    "PackedUpdate", "StreamAccumulator", "payload_family",
+    "weighted_model_sum", "weighted_tree_sum",
     "RUNG_LADDER", "AdaptiveCommController", "RoundAssignment",
     "is_adaptive_spec", "ladder_between", "parse_adaptive_spec",
 ]

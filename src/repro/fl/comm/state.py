@@ -256,6 +256,94 @@ class CommState:
     def residual(self, client: int):
         return self._residuals.get(client)
 
+    def _encode(self, client: int, model, global_params,
+                codec: Optional[Codec]):
+        """Client-side half of one upload: delta, EF carry, encode, residual
+        update, byte charging.  Returns ``(payload, decoded, distortion)``.
+        The transient ``decoded`` pytree exists because error feedback needs
+        the client to know exactly what the server will reconstruct (and the
+        distortion measurement rides on it); callers that stream drop it
+        immediately, ``roundtrip`` reuses it so the materializing path never
+        decodes twice."""
+        codec = self.codec if codec is None else codec
+        delta = jax.tree.map(
+            lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32),
+            model, global_params)
+        resid = self._residuals.get(client)
+        distortion = 0.0
+        if codec.lossless and resid is None:
+            payload = codec.encode(delta)
+            decoded = codec.decode(payload)
+        else:
+            carry = (delta if resid is None else
+                     jax.tree.map(jnp.add, delta, resid))
+            payload = codec.encode(carry)
+            decoded = codec.decode(payload)
+            if codec.lossless:
+                # wire carried the full corrected delta: residual flushed
+                self._residuals.pop(client)
+            else:
+                new_resid = jax.tree.map(jnp.subtract, carry, decoded)
+                self._residuals.set(client, new_resid)
+                carry_norm = _l2(carry)
+                if carry_norm > 0.0:
+                    distortion = _l2(new_resid) / carry_norm
+        # accumulate *simulated* wire bytes (override-scaled), the same
+        # unit the deadline simulator, traces, and total_downlink_bytes
+        # use
+        nbytes = self.nbytes_for(codec)
+        self.total_uplink_bytes += nbytes
+        self.n_encoded += 1
+        self.last_distortions[client] = distortion
+        tel = self.telemetry
+        if tel:
+            tel.counter("comm.uploads")
+            tel.counter("comm.upload_bytes", nbytes)
+        return payload, decoded, distortion
+
+    def encode_upload(self, client: int, model, global_params, *,
+                      codec: Optional[Codec] = None) -> Tuple[Payload, float]:
+        """Client-side encode of one upload, for the streaming server path.
+
+        Returns ``(payload, distortion)`` — the server receives the *packed*
+        payload plus wire metadata and feeds it to a
+        ``repro.fl.comm.stream.StreamAccumulator`` without ever
+        materializing the fp32 delta.  Error-feedback residual mutation,
+        distortion bookkeeping, and byte accounting are identical to
+        ``roundtrip`` (they are the same code); only the server-side
+        reconstruction is omitted."""
+        tel = self.telemetry
+        with tel.timer("phase.uplink"):
+            payload, decoded, distortion = self._encode(
+                client, model, global_params, codec)
+            if tel:
+                # device time is honest only once the encode finished
+                jax.block_until_ready([el.data for el in payload.leaves])
+        return payload, distortion
+
+    def decode_upload(self, payload: Payload, global_params,
+                      codec: Optional[Codec] = None):
+        """Server-side decode of one packed upload back to a full model
+        pytree — the *materializing* path, for strategies that genuinely
+        need per-client models/deltas (Scaffold's control variates, FedLAW's
+        proxy optimization, FedExLoRA's adapter products).  Counts itself as
+        a fallback in the ``uplink_decode`` attribution so the profiler
+        shows when the fused path was not taken."""
+        tel = self.telemetry
+        with tel.timer("phase.uplink_decode"):
+            codec = (self.codec if codec is None else
+                     self.codec_named(codec) if isinstance(codec, str)
+                     else codec)
+            decoded = codec.decode(payload)
+            recon = jax.tree.map(
+                lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
+                global_params, decoded)
+            if tel:
+                jax.block_until_ready(recon)
+                tel.counter("uplink.fallback_payloads")
+                tel.counter("uplink.decoded_bytes", self.fp32_nbytes)
+        return recon
+
     def roundtrip(self, client: int, model, global_params, *,
                   codec: Optional[Codec] = None) -> Tuple[Any, Payload, float]:
         """Client-encode then server-decode one upload.
@@ -270,47 +358,22 @@ class CommState:
         overrides the run's static codec for this one upload (the adaptive
         controller's per-client rung); the residual carries across rung
         changes unchanged — EF is codec-agnostic.
+
+        This is the composition ``encode_upload`` + reconstruction with the
+        encode-side transient decode reused (one decode total) — the
+        materializing server path.  Streaming strategies take
+        ``encode_upload`` alone and never build ``recon``.
         """
         tel = self.telemetry
         with tel.timer("phase.uplink"):
-            codec = self.codec if codec is None else codec
-            delta = jax.tree.map(
-                lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32),
-                model, global_params)
-            resid = self._residuals.get(client)
-            distortion = 0.0
-            if codec.lossless and resid is None:
-                payload = codec.encode(delta)
-                decoded = codec.decode(payload)
-            else:
-                carry = (delta if resid is None else
-                         jax.tree.map(jnp.add, delta, resid))
-                payload = codec.encode(carry)
-                decoded = codec.decode(payload)
-                if codec.lossless:
-                    # wire carried the full corrected delta: residual flushed
-                    self._residuals.pop(client)
-                else:
-                    new_resid = jax.tree.map(jnp.subtract, carry, decoded)
-                    self._residuals.set(client, new_resid)
-                    carry_norm = _l2(carry)
-                    if carry_norm > 0.0:
-                        distortion = _l2(new_resid) / carry_norm
+            payload, decoded, distortion = self._encode(
+                client, model, global_params, codec)
             recon = jax.tree.map(
                 lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype),
                 global_params, decoded)
-            # accumulate *simulated* wire bytes (override-scaled), the same
-            # unit the deadline simulator, traces, and total_downlink_bytes
-            # use
-            nbytes = self.nbytes_for(codec)
-            self.total_uplink_bytes += nbytes
-            self.n_encoded += 1
-            self.last_distortions[client] = distortion
             if tel:
                 # device time is honest only once the reconstruction exists
                 jax.block_until_ready(recon)
-                tel.counter("comm.uploads")
-                tel.counter("comm.upload_bytes", nbytes)
         return recon, payload, distortion
 
     # ----------------------------------------------------------- downlink

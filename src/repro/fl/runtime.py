@@ -78,6 +78,13 @@ class FFTConfig:
     server_mode: str = "sync"             # sync | async | buffered
     tau_max: int = 5                      # max staleness (rounds) accepted async
     buffer_k: int = 4                     # buffered mode: arrivals per agg step
+    streaming_agg: str = "auto"           # "auto": streaming-capable strategies
+    #                                       aggregate packed uploads through the
+    #                                       StreamAccumulator (K arrivals never
+    #                                       materialize K fp32 models); "off":
+    #                                       force the materializing path
+    #                                       (per-client decoded models) — the
+    #                                       benchmark's control arm
     # --- communication codec (repro.fl.comm) ----------------------------------
     codec: str = "fp32"                   # fp32 | fp16 | int8 | qsgd:<bits> |
     #                                       topk:<frac> | sign1 | lora_only |
@@ -237,6 +244,9 @@ class FFTRunner:
             compute_s=cfg.compute_s, engine=cfg.engine)
         if cfg.server_mode not in ("sync", "async", "buffered"):
             raise ValueError(f"unknown server_mode {cfg.server_mode!r}")
+        if cfg.streaming_agg not in ("auto", "off"):
+            raise ValueError(f"unknown streaming_agg {cfg.streaming_agg!r} "
+                             "(known: auto, off)")
         if ((cfg.server_mode != "sync" or self.adaptive_spec)
                 and not hasattr(self.failures, "draw_events")):
             # Legacy boolean failure models have no time dimension; the async

@@ -35,6 +35,11 @@ class PendingUpdate:
     codec: Optional[str] = None  # rung the upload traveled under
     upload_nbytes: Optional[float] = None  # bytes it cost on the wire
     distortion: float = 0.0      # compression distortion measured at encode
+    packed: Any = None           # streaming mode: the wire PackedUpdate held
+    #                              instead of the decoded model/delta pytrees
+    #                              (model/delta stay None; payloads are
+    #                              wire-sized, and stale origin globals are
+    #                              shared references — ≤ tau_max+1 distinct)
 
     def staleness(self, current_round: int) -> int:
         """Round lag — bounds buffer lifetime (eviction horizon)."""

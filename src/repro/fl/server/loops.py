@@ -70,6 +70,15 @@ class RoundLoop:
         # (cfg.skip_stragglers); written by _select each round
         self.skipped = np.zeros(runner.n_clients, dtype=bool)
         self.n_skipped = 0
+        # Streaming aggregation: a streaming-capable strategy receives the
+        # round's uploads as wire PackedUpdates through a StreamAccumulator
+        # (fl/comm/stream.py) instead of a dict of decoded model pytrees —
+        # K arrivals never materialize K fp32 models.  Strategies that need
+        # per-client models keep the materializing path, as does
+        # ``cfg.streaming_agg = "off"`` (the benchmark's control arm).
+        self.streaming = (bool(getattr(strategy, "streaming", False)) and
+                          getattr(runner.cfg, "streaming_agg", "auto")
+                          != "off")
 
     def _uplink(self, client: int, model, t_global, codec_name=None):
         """Ship one local update through the communication codec: encode
@@ -83,6 +92,40 @@ class RoundLoop:
         recon, _payload, distortion = comm.roundtrip(client, model, t_global,
                                                      codec=codec)
         return recon, codec.name, comm.nbytes_for(codec), float(distortion)
+
+    def _uplink_packed(self, client: int, model, t_global, r: int,
+                       codec_name=None):
+        """Streaming sibling of ``_uplink``: encode client-side only and
+        hand back the wire ``PackedUpdate`` — the server never reconstructs
+        a model pytree for this upload (the StreamAccumulator decodes it
+        in-kernel at aggregation).  Error feedback, distortion measurement,
+        and byte accounting are identical to ``_uplink``."""
+        from repro.fl.comm.stream import PackedUpdate
+        comm = self.runner.comm
+        codec = comm.codec_named(codec_name) if codec_name else comm.codec
+        payload, distortion = comm.encode_upload(client, model, t_global,
+                                                 codec=codec)
+        nbytes = comm.nbytes_for(codec)
+        return PackedUpdate(client=client, payload=payload,
+                            origin_global=t_global, codec=codec.name,
+                            nbytes=nbytes, distortion=float(distortion),
+                            origin_round=r)
+
+    def _materialize_gauges(self, r: int, n_decoded: int) -> None:
+        """The materializing path's side of the ``uplink_decode``
+        attribution: ``n_decoded`` fp32 model pytrees were held at once for
+        this round's aggregate (the streaming path's gauges come from the
+        StreamAccumulator and report an O(1) peak instead)."""
+        tel = self.obs
+        if not tel:
+            return
+        fp32 = self.runner.comm.fp32_nbytes
+        if n_decoded:
+            tel.counter("uplink.fallback_payloads", n_decoded)
+            tel.counter("uplink.decoded_bytes", n_decoded * fp32)
+        tel.gauge(r, "uplink_fused_payloads", 0)
+        tel.gauge(r, "uplink_fallback_payloads", n_decoded)
+        tel.gauge(r, "uplink_peak_decoded_bytes", n_decoded * fp32)
 
     def _begin_round(self, r: int, selected: np.ndarray):
         """Round preamble shared by every server mode: the adaptive
@@ -325,6 +368,7 @@ class SyncRoundLoop(RoundLoop):
         self._observe(r, events, selected)
 
         client_models: Dict[int, Any] = {}
+        packed: Dict[int, Any] = {}             # streaming: wire PackedUpdates
         codecs_used: Dict[int, str] = {}
         nbytes_used: Dict[int, float] = {}
         distortions: Dict[int, float] = {}
@@ -336,13 +380,21 @@ class SyncRoundLoop(RoundLoop):
                 m = runner.run_local(t_global, runner.client_x[i],
                                      runner.client_y[i], r, mu=mu, corr=corr)
                 m = strategy.post_local(i, r, m, t_global, runner)
-                recon, cname, nbytes, dist = self._uplink(
-                    int(i), m, t_global,
-                    codec_name=(rung_names[int(i)] if rung_names else None))
-                client_models[int(i)] = recon
+                cname_over = rung_names[int(i)] if rung_names else None
+                if self.streaming:
+                    pu = self._uplink_packed(int(i), m, t_global, r,
+                                             codec_name=cname_over)
+                    packed[int(i)] = pu
+                    cname, nbytes, dist = pu.codec, pu.nbytes, pu.distortion
+                else:
+                    recon, cname, nbytes, dist = self._uplink(
+                        int(i), m, t_global, codec_name=cname_over)
+                    client_models[int(i)] = recon
                 codecs_used[int(i)] = cname
                 nbytes_used[int(i)] = nbytes
                 distortions[int(i)] = dist
+        if not self.streaming:
+            self._materialize_gauges(r, len(client_models))
         self.distortion_history.append(dict(distortions))
         tel = self.obs
         if tel:
@@ -391,7 +443,8 @@ class SyncRoundLoop(RoundLoop):
             codec=(None if assignment else runner.comm.codec.name),
             upload_nbytes=(None if assignment else runner.comm.upload_bytes),
             codecs=codecs_used, upload_bytes=nbytes_used,
-            distortions=distortions, telemetry=self.obs)
+            distortions=distortions,
+            packed=(packed if self.streaming else None), telemetry=self.obs)
         with tel.timer("phase.aggregate"):
             new_global = strategy.aggregate(ctx)
             if tel:
@@ -466,25 +519,41 @@ class AsyncRoundLoop(RoundLoop):
                                      runner.client_y[i], r, mu=mu, corr=corr)
                 m = strategy.post_local(int(i), r, m, t_global, runner)
                 # The wire sits between dispatch and landing: what the
-                # buffer holds is the *decoded* upload, exactly what the
-                # server will eventually see (the scenario engine already
-                # priced its bytes), tagged with the rung, byte count, and
-                # distortion it traveled under — measured now, at encode
-                # time, not at landing.
-                m, cname, nbytes, dist = self._uplink(
-                    int(i), m, t_global,
-                    codec_name=(rung_names[int(i)] if rung_names else None))
-                distortions[int(i)] = dist
-                # Only delta-based strategies (FedBuff) need the
-                # dispatch-time snapshot; skipping it elsewhere halves the
-                # buffer's memory.
-                delta = (delta_pytree(m, t_global)
-                         if getattr(strategy, "wants_delta", False) else None)
-                upd = PendingUpdate(
-                    client=int(i), origin_round=r,
-                    arrival_s=t_start + fin, model=m, delta=delta,
-                    origin_version=self.version, codec=cname,
-                    upload_nbytes=nbytes, distortion=dist)
+                # buffer holds is the upload exactly as the server will
+                # eventually see it (the scenario engine already priced its
+                # bytes), tagged with the rung, byte count, and distortion
+                # it traveled under — measured now, at encode time, not at
+                # landing.  Streaming mode parks the wire-sized packed
+                # payload; materializing mode parks the decoded model.
+                cname_over = rung_names[int(i)] if rung_names else None
+                if self.streaming:
+                    pu = self._uplink_packed(int(i), m, t_global, r,
+                                             codec_name=cname_over)
+                    dist = pu.distortion
+                    distortions[int(i)] = dist
+                    # decode(payload) IS the origin-relative delta, so
+                    # delta-based strategies (FedBuff) need no dispatch-time
+                    # snapshot either
+                    upd = PendingUpdate(
+                        client=int(i), origin_round=r,
+                        arrival_s=t_start + fin, model=None, delta=None,
+                        origin_version=self.version, codec=pu.codec,
+                        upload_nbytes=pu.nbytes, distortion=dist, packed=pu)
+                else:
+                    m, cname, nbytes, dist = self._uplink(
+                        int(i), m, t_global, codec_name=cname_over)
+                    distortions[int(i)] = dist
+                    # Only delta-based strategies (FedBuff) need the
+                    # dispatch-time snapshot; skipping it elsewhere halves
+                    # the buffer's memory.
+                    delta = (delta_pytree(m, t_global)
+                             if getattr(strategy, "wants_delta", False)
+                             else None)
+                    upd = PendingUpdate(
+                        client=int(i), origin_round=r,
+                        arrival_s=t_start + fin, model=m, delta=delta,
+                        origin_version=self.version, codec=cname,
+                        upload_nbytes=nbytes, distortion=dist)
                 self.buffer.push(upd)
                 if tel:
                     pushed[int(i)] = upd
@@ -516,10 +585,12 @@ class AsyncRoundLoop(RoundLoop):
                             arrival_s=p.arrival_s,
                             model=p.model, delta=p.delta, codec=p.codec,
                             upload_nbytes=p.upload_nbytes,
-                            distortion=p.distortion)
+                            distortion=p.distortion, packed=p.packed)
                     for p in self.buffer.collect(now, r)]
         self.staleness_applied.extend(a.staleness for a in arrivals)
         self.participants_per_round.append(len(arrivals))
+        if not self.streaming:
+            self._materialize_gauges(r, len(arrivals))
         if tel:
             self._emit_async_outcomes(
                 r, selected, up, events, pushed,
@@ -585,18 +656,39 @@ class AsyncRoundLoop(RoundLoop):
                 else:
                     tel.client_outcome(r, i, EVICTED, detail="unreachable")
 
+    @staticmethod
+    def _freshest(arrivals) -> Dict[int, Arrival]:
+        """Freshest landed update per client (highest origin round)."""
+        freshest: Dict[int, Arrival] = {}
+        for a in arrivals:
+            cur = freshest.get(a.client)
+            if cur is None or a.origin_round > cur.origin_round:
+                freshest[a.client] = a
+        return freshest
+
+    @staticmethod
+    def _wire_metadata(freshest: Dict[int, Arrival]):
+        """The per-client wire-metadata dicts a round context carries,
+        keyed off the freshest arrival per client.  Async strategies read
+        per-arrival metadata from the ``Arrival`` rows themselves; these
+        dicts are the one-value-per-client summary both context flavors
+        expose."""
+        codecs = {c: a.codec for c, a in freshest.items()
+                  if a.codec is not None}
+        upload_bytes = {c: a.upload_nbytes for c, a in freshest.items()
+                        if a.upload_nbytes is not None}
+        distortions = {c: float(a.distortion) for c, a in freshest.items()}
+        return codecs, upload_bytes, distortions
+
     def _aggregate(self, r, now, t_global, server_model, selected, arrivals):
         runner, strategy = self.runner, self.strategy
-        # actual wire metadata of the aggregated cohort (latest arrival per
-        # client — arrivals are in landing-time order); a decodable scalar
-        # codec/size only exists for static runs
+        # a decodable scalar codec/size only exists for static runs
         adaptive = runner.controller is not None
         static_codec = None if adaptive else runner.comm.codec.name
         static_nbytes = None if adaptive else runner.comm.upload_bytes
-        codecs = {a.client: a.codec for a in arrivals if a.codec is not None}
-        upload_bytes = {a.client: a.upload_nbytes for a in arrivals
-                        if a.upload_nbytes is not None}
-        distortions = {a.client: float(a.distortion) for a in arrivals}
+        # one freshest-arrival scan feeds both context flavors
+        freshest = self._freshest(arrivals)
+        codecs, upload_bytes, distortions = self._wire_metadata(freshest)
         if isinstance(strategy, AsyncStrategy):
             ctx = AsyncRoundContext(
                 rnd=r, now_s=now, global_params=t_global,
@@ -611,29 +703,25 @@ class AsyncRoundLoop(RoundLoop):
         # Synchronous strategy under the async server: present the freshest
         # landed update per client as this round's cohort (staleness is
         # invisible to it — the documented degradation).
-        freshest: Dict[int, Arrival] = {}
-        for a in arrivals:
-            cur = freshest.get(a.client)
-            if cur is None or a.origin_round > cur.origin_round:
-                freshest[a.client] = cur = a
         connected = np.zeros(runner.n_clients, dtype=bool)
         for c in freshest:
             connected[c] = True
+        streaming = self.streaming and all(a.packed is not None
+                                           for a in freshest.values())
         ctx = RoundContext(
             rnd=r, global_params=t_global, server_model=server_model,
-            client_models={c: a.model for c, a in freshest.items()},
+            client_models=({} if streaming else
+                           {c: a.model for c, a in freshest.items()}),
             selected=selected, connected=connected, p=runner.p,
             client_hists=runner.client_hists, server_hist=runner.server_hist,
             global_hist=runner.global_hist,
             full_participation=runner.k_selected >= runner.n_clients,
             eps_estimates=runner.eps_estimates, runner=runner,
             codec=static_codec, upload_nbytes=static_nbytes,
-            codecs={c: a.codec for c, a in freshest.items()
-                    if a.codec is not None},
-            upload_bytes={c: a.upload_nbytes for c, a in freshest.items()
-                          if a.upload_nbytes is not None},
-            distortions={c: float(a.distortion)
-                         for c, a in freshest.items()},
+            codecs=codecs, upload_bytes=upload_bytes,
+            distortions=distortions,
+            packed=({c: a.packed for c, a in freshest.items()}
+                    if streaming else None),
             telemetry=self.obs)
         return strategy.aggregate(ctx)
 

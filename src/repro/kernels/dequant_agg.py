@@ -1,23 +1,37 @@
-"""Pallas TPU kernel: fused dequantize-and-β-accumulate for quantized
-uploads (``repro.fl.comm`` int8/qsgd/sign payloads):
+"""Pallas TPU kernels: batched decode-and-accumulate over packed uploads.
 
-    out[p] = Σ_m β_m · s_m · q[m, p]          q int8, s per-participant scale
+The kernel family behind the streaming aggregation server — every rung of
+the comm ladder has a batched form that takes K packed payloads plus β
+weights and produces ONE fp32 accumulator pass, so K arrivals never
+materialize K fp32 delta pytrees:
 
-This is ``fedagg`` (Eq. 7) with the server-side dequantization fused in:
-instead of materializing M float32 participant vectors (4 bytes/param) and
-then reducing them, the quantized payloads stream HBM→VMEM *once at 1
-byte/param* and are dequantized in-tile — 4× less HBM traffic than
-decode-then-fedagg on a purely memory-bound op, exactly the regime the
-aggregation server lives in when every client ships int8.
+    dequant_fedagg  int8-family rungs (``sign1``/``qsgd:<bits>``/``int8``):
+                    out[p] = Σ_m β_m · s_m · q[m, p]
+    float_fedagg    fp16/fp32 rungs: out[p] = Σ_m β_m · x[m, p], fp32 out
+    topk_fedagg     sparse top-k rungs — β-weighted scatter-add; dynamic
+                    index scatter is XLA's territory on TPU, so it lives in
+                    ``kernels.ref`` and every dispatch mode shares it
+
+Each fuses ``fedagg`` (Eq. 7) with server-side payload decode: instead of
+materializing M float32 participant vectors (4 bytes/param) and then
+reducing them, the packed payloads stream HBM→VMEM *once at wire width*
+(1 byte/param for int8, 2 for fp16) and decode in-tile — up to 4× less HBM
+traffic on a purely memory-bound op, exactly the regime the aggregation
+server lives in at 10k+ arrivals/round.  Mixed-rung cohorts batch per rung
+family and add the per-family partial sums into one shared accumulator
+(``repro.fl.comm.stream.StreamAccumulator``).
 
 β and the per-participant dequant scales collapse into one coefficient
 c_m = β_m·s_m before the kernel, so the inner loop is a single scaled
 reduction over the participant axis.
 
 Tiling: the flat parameter axis P is tiled into (32, BP) VMEM blocks —
-int8's minimum sublane tile is 32 (vs 8 for fp32) — with the participant
-axis M whole inside the block: an (M, 32, BP) int8 tile is M·BP·32 bytes
-(≤ 1.5 MB VMEM for M=22, BP=2048), the (32, BP) fp32 accumulator 256 kB.
+int8's minimum sublane tile is 32 (vs 16 for fp16 and 8 for fp32; 32 is a
+common multiple, shared by both kernels) — with the participant axis M
+whole inside the block: an (M, 32, BP) int8 tile is M·BP·32 bytes (≤ 1.5 MB
+VMEM for M=22, BP=2048), the (32, BP) fp32 accumulator 256 kB.  The 1-D
+grid over P-tiles lets the Pallas pipeline double-buffer the payload
+stream: tile i+1's HBM→VMEM copy overlaps tile i's decode+reduce.
 """
 from __future__ import annotations
 
@@ -28,30 +42,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANE = 128
-SUBLANE_I8 = 32     # int8 minimum sublane tile (fp32's is 8)
+SUBLANE_I8 = 32     # int8 minimum sublane tile (fp16's 16, fp32's 8 divide it)
 
 
 def _kernel(coef_ref, q_ref, o_ref):
-    # coef: (M, 1) fp32 = β·scale; q: (M, SUBLANE_I8, BP) int8;
-    # o: (SUBLANE_I8, BP) fp32 — dequantize in-tile, reduce over M.
+    # coef: (M, 1) fp32 = β·scale (β alone for float payloads);
+    # q: (M, SUBLANE_I8, BP) int8/fp16/fp32; o: (SUBLANE_I8, BP) fp32 —
+    # decode in-tile, reduce over M.
     q = q_ref[...].astype(jnp.float32)
     c = coef_ref[...]                              # (M, 1)
     o_ref[...] = jnp.sum(q * c[:, :, None], axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def dequant_fedagg(q: jax.Array, scales: jax.Array, betas: jax.Array, *,
-                   block: int = 2048, interpret: bool = False) -> jax.Array:
-    """q: (M, P) int8; scales, betas: (M,) -> (P,) fp32 = Σ_m β_m s_m q[m]."""
-    M, P = q.shape
-    coef = (betas.astype(jnp.float32) *
-            scales.astype(jnp.float32)).reshape(M, 1)
+def _coef_reduce(x: jax.Array, coef: jax.Array, *, block: int,
+                 interpret: bool) -> jax.Array:
+    """Shared host-side wrapper: pad/tile the (M, P) payload matrix and run
+    the coefficient-weighted in-tile decode+reduce, (P,) fp32 out."""
+    M, P = x.shape
     rows = SUBLANE_I8 * block
     P_pad = ((P + rows - 1) // rows) * rows
     if P_pad != P:
-        q = jnp.pad(q, ((0, 0), (0, P_pad - P)))
-    q3 = q.reshape(M, P_pad // block, block)
-    n_rows = q3.shape[1]
+        x = jnp.pad(x, ((0, 0), (0, P_pad - P)))
+    x3 = x.reshape(M, P_pad // block, block)
+    n_rows = x3.shape[1]
     grid = (n_rows // SUBLANE_I8,)
     out = pl.pallas_call(
         _kernel,
@@ -63,5 +76,23 @@ def dequant_fedagg(q: jax.Array, scales: jax.Array, betas: jax.Array, *,
         out_specs=pl.BlockSpec((SUBLANE_I8, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_rows, block), jnp.float32),
         interpret=interpret,
-    )(coef, q3)
+    )(coef, x3)
     return out.reshape(P_pad)[:P]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequant_fedagg(q: jax.Array, scales: jax.Array, betas: jax.Array, *,
+                   block: int = 2048, interpret: bool = False) -> jax.Array:
+    """q: (M, P) int8; scales, betas: (M,) -> (P,) fp32 = Σ_m β_m s_m q[m]."""
+    M = q.shape[0]
+    coef = (betas.astype(jnp.float32) *
+            scales.astype(jnp.float32)).reshape(M, 1)
+    return _coef_reduce(q, coef, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def float_fedagg(x: jax.Array, betas: jax.Array, *,
+                 block: int = 2048, interpret: bool = False) -> jax.Array:
+    """x: (M, P) fp16/fp32; betas: (M,) -> (P,) fp32 = Σ_m β_m x[m]."""
+    coef = betas.astype(jnp.float32).reshape(x.shape[0], 1)
+    return _coef_reduce(x, coef, block=block, interpret=interpret)

@@ -51,6 +51,21 @@ def dequant_fedagg(q, scales, betas):
     return k(q, scales, betas, interpret=_interpret())
 
 
+def float_fedagg(stacked, betas):
+    if _MODE == "off":
+        return _ref.float_fedagg(stacked, betas)
+    from repro.kernels.dequant_agg import float_fedagg as k
+    return k(stacked, betas, interpret=_interpret())
+
+
+def topk_fedagg(idx, vals, betas, n):
+    # Scatter-accumulate over dynamic indices is XLA's territory on TPU (no
+    # contiguous-tile reuse for a Pallas kernel to exploit), so every
+    # dispatch mode shares the sequential-fold reference — which is also
+    # what keeps the streaming path bit-identical to per-payload decode.
+    return _ref.topk_fedagg(idx, vals, betas, n)
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None, scale=None):
     if _MODE == "off":

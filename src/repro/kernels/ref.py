@@ -37,6 +37,42 @@ def dequant_fedagg(q: jax.Array, scales: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# float_fedagg: fedagg over packed fp16/fp32 payloads, fp32 accumulator out
+# ---------------------------------------------------------------------------
+def float_fedagg(stacked: jax.Array, betas: jax.Array) -> jax.Array:
+    """stacked: (M, P) fp16/fp32 payload vectors; betas: (M,).
+    Returns (P,) fp32 = Σ_m β_m · stacked[m].  Unlike :func:`fedagg` the
+    accumulator stays fp32 (it feeds a shared cross-rung accumulator, not a
+    finished model), which also makes it bit-compatible with the per-payload
+    decode-to-fp32 + β-weighted-sum reference."""
+    return jnp.einsum("mp,m->p", stacked.astype(jnp.float32),
+                      betas.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# topk_fedagg: β-weighted scatter-accumulate of sparse top-k payloads
+# ---------------------------------------------------------------------------
+def topk_fedagg(idx: jax.Array, vals: jax.Array, betas: jax.Array,
+                n: int) -> jax.Array:
+    """idx: (M, k) int32 (indices unique within a row), vals: (M, k) fp32,
+    betas: (M,).  Returns (n,) fp32 = Σ_m β_m · scatter(idx[m], vals[m]).
+
+    Accumulates as a sequential left-fold over the participant axis so the
+    result is bit-identical to decoding each sparse payload to dense fp32
+    and running-summing β·decode(p_m) in payload order (adding β_m·0 at
+    untouched positions is exact)."""
+    out = jnp.zeros((int(n),), jnp.float32)
+
+    def step(acc, x):
+        i, v, b = x
+        return acc.at[i].add(b.astype(jnp.float32) *
+                             v.astype(jnp.float32)), None
+
+    out, _ = jax.lax.scan(step, out, (idx, vals, betas))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # flash attention (causal / sliding-window, GQA)
 # ---------------------------------------------------------------------------
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -3,11 +3,23 @@ ring-buffer KV cache (SWA archs) / SSM state (recurrent archs).
 
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b \
         --smoke-scale=true --batch 4 --prompt-len 64 --decode-steps 32
+
+``--mode broadcast`` instead exercises the FL downlink side: the
+``PagedBroadcastCache`` below encodes the global model ONCE per
+(round, downlink rung) into fixed-size pages and serves every client on
+that rung from the cache — the paged-KV serving idiom applied to the
+federated broadcast, where re-encoding per client would dominate a
+large cohort's round time.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode broadcast \
+        --clients 256 --rungs int8,qsgd:4,sign1 --rounds 3
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,10 +27,142 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import transformer as T
+from repro.obs.telemetry import NULL_TELEMETRY
+
+
+# --------------------------------------------------------------------------
+# Paged broadcast cache (FL downlink serving)
+# --------------------------------------------------------------------------
+
+#: default page size — small enough that a sign1 broadcast still spans
+#: several pages, large enough that page bookkeeping is negligible
+PAGE_BYTES = 1 << 16
+
+
+def _pack_pages(payload, page_bytes: int) -> List[np.ndarray]:
+    """Flatten a codec payload's wire arrays into fixed-size uint8 pages
+    (the last page may be short).  Pages are immutable and shared by
+    reference across every client served from them."""
+    blob = b"".join(np.asarray(v).tobytes()
+                    for el in payload.leaves for v in el.data.values())
+    if not blob:
+        return [np.zeros(0, np.uint8)]
+    return [np.frombuffer(blob[o:o + page_bytes], np.uint8)
+            for o in range(0, len(blob), page_bytes)]
+
+
+class PagedBroadcastCache:
+    """Encode-once, serve-many downlink cache keyed ``(round, rung)``.
+
+    The first client of a round on a given rung pays the encode
+    (``encode_fn``); its payload is split into fixed-size pages and every
+    later client on that rung is served the same page list by reference —
+    no copy, no re-encode.  Old rounds are evicted wholesale (all pages of
+    a key at once) once they fall ``keep_rounds`` behind the newest round
+    seen, so resident pages stay O(#rungs · keep_rounds), independent of
+    cohort size.
+    """
+
+    def __init__(self, *, page_bytes: int = PAGE_BYTES, keep_rounds: int = 2,
+                 telemetry=NULL_TELEMETRY):
+        if page_bytes <= 0:
+            raise ValueError(f"page_bytes must be > 0, got {page_bytes}")
+        if keep_rounds < 1:
+            raise ValueError(f"keep_rounds must be >= 1, got {keep_rounds}")
+        self.page_bytes = int(page_bytes)
+        self.keep_rounds = int(keep_rounds)
+        self.telemetry = telemetry
+        # (round, rung) -> (payload, pages); insertion-ordered
+        self._entries: Dict[Tuple[int, str], Tuple[Any, List[np.ndarray]]] \
+            = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_served = 0.0
+        self.peak_pages = 0
+
+    @property
+    def n_pages(self) -> int:
+        return sum(len(pages) for _, pages in self._entries.values())
+
+    def serve(self, rnd: int, rung: str, encode_fn) -> List[np.ndarray]:
+        """Pages of the ``(rnd, rung)`` broadcast; encodes on first use."""
+        key = (int(rnd), str(rung))
+        ent = self._entries.get(key)
+        if ent is None:
+            self.misses += 1
+            payload = encode_fn()
+            ent = (payload, _pack_pages(payload, self.page_bytes))
+            self._entries[key] = ent
+            self._evict(int(rnd))
+            self.peak_pages = max(self.peak_pages, self.n_pages)
+            if self.telemetry:
+                self.telemetry.counter("broadcast.cache_miss")
+        else:
+            self.hits += 1
+            if self.telemetry:
+                self.telemetry.counter("broadcast.cache_hit")
+        self.bytes_served += float(sum(p.nbytes for p in ent[1]))
+        return ent[1]
+
+    def payload_for(self, rnd: int, rung: str):
+        """The cached codec payload backing a served key (what a client
+        decodes), or None when the key was never encoded or was evicted."""
+        ent = self._entries.get((int(rnd), str(rung)))
+        return ent[0] if ent is not None else None
+
+    def _evict(self, current_rnd: int) -> None:
+        horizon = current_rnd - self.keep_rounds
+        for key in [k for k in self._entries if k[0] <= horizon]:
+            del self._entries[key]
+            self.evictions += 1
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "resident_pages": self.n_pages,
+                "peak_pages": self.peak_pages,
+                "bytes_served": self.bytes_served}
+
+
+def broadcast_main(args) -> None:
+    """Demo/benchmark of the paged broadcast cache: a mixed-rung cohort is
+    served the global model each round; encodes happen once per (round,
+    rung), everyone else hits pages."""
+    from repro.fl.comm import make_codec
+    cfg = get_smoke_config(args.arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tree = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    rungs = [r.strip() for r in args.rungs.split(",") if r.strip()]
+    codecs = {r: make_codec(r) for r in rungs}
+    rng = np.random.default_rng(0)
+    client_rung = [rungs[i] for i in rng.integers(0, len(rungs),
+                                                  args.clients)]
+    cache = PagedBroadcastCache(page_bytes=args.page_bytes)
+    for rnd in range(1, args.rounds + 1):
+        t0 = time.time()
+        m0 = cache.misses
+        for c in range(args.clients):
+            rung = client_rung[c]
+            cache.serve(rnd, rung, lambda rung=rung:
+                        codecs[rung].encode(tree))
+        dt = time.time() - t0
+        print(f"round {rnd}: served {args.clients} clients, "
+              f"{cache.misses - m0} encodes, "
+              f"{cache.n_pages} resident pages, {dt:.3f}s")
+    s = cache.stats
+    total = s["hits"] + s["misses"]
+    print(f"cache: {s['hits']:.0f}/{total:.0f} hits "
+          f"({100 * s['hits'] / max(total, 1):.1f}%), "
+          f"{s['misses']:.0f} encodes, {s['evictions']:.0f} evictions, "
+          f"peak {s['peak_pages']:.0f} pages, "
+          f"{s['bytes_served'] / 1e6:.1f} MB served")
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="decode",
+                    choices=("decode", "broadcast"))
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -26,7 +170,15 @@ def main():
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--smoke-scale", default="true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--rungs", default="int8,qsgd:4,sign1")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--page-bytes", type=int, default=PAGE_BYTES)
     args = ap.parse_args()
+
+    if args.mode == "broadcast":
+        broadcast_main(args)
+        return
 
     smoke = args.smoke_scale.lower() in ("1", "true", "yes")
     cfg = get_smoke_config(args.arch) if smoke else get_config(args.arch)

@@ -1,0 +1,420 @@
+"""Streaming fused aggregation (ISSUE 10).
+
+Covers: batched decode-and-accumulate kernel parity with the per-payload
+decode + β-weighted-sum reference (bit-exact under ``ref`` dispatch, tight
+tolerance under Pallas interpret) across the full rung ladder, mixed-rung
+cohorts, K=1 and empty cohorts; ``StreamAccumulator`` semantics (batch
+flushing, O(1) peak decoded memory, fallback attribution);
+``CommState.encode_upload``/``decode_upload`` vs ``roundtrip``; streaming
+vs materializing round loops producing matching global params across a
+world × server-mode sweep; and the paged broadcast cache.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.strategies import (STRATEGIES, FedAsync, FedAvg, FedBuff,
+                                   Scaffold)
+from repro.fl.comm import CommState, make_codec
+from repro.fl.comm.codecs import EncodedLeaf, Payload
+from repro.fl.comm.stream import (FUSED_FAMILIES, PackedUpdate,
+                                  StreamAccumulator, payload_family,
+                                  weighted_model_sum, weighted_tree_sum)
+from repro.fl.runtime import FFTConfig
+from repro.fl.toy import make_toy_runner
+from repro.kernels import ops as kops
+from repro.launch.serve import PagedBroadcastCache
+
+LADDER = ["sign1", "qsgd:2", "qsgd:4", "qsgd:8", "int8", "fp16", "fp32",
+          "topk:0.25"]
+
+
+def _tree(seed=0, shapes=((33, 5), (17,), (4, 9))):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+def _payloads(spec, k, seed=0):
+    codec = make_codec(spec)
+    return codec, [codec.encode(_tree(seed + 10 * m)) for m in range(k)]
+
+
+def _betas(k, seed=0):
+    rng = np.random.default_rng(seed + 99)
+    w = rng.uniform(0.1, 1.0, k)
+    return (w / w.sum()).astype(np.float32)
+
+
+def _fold_reference(codec, payloads, betas, template):
+    """Per-payload decode + sequential β-weighted sum — the unfused oracle
+    the streaming accumulator must match."""
+    out = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), template)
+    for p, b in zip(payloads, betas):
+        d = codec.decode(p)
+        out = jax.tree.map(lambda o, x, b=b: o + jnp.float32(b) * x, out, d)
+    return out
+
+
+def _stack_reference(codec, payloads, betas, template):
+    """Per-payload decode, stack, einsum — bit-identical to the batched
+    ``ref`` kernels for the quant/float families."""
+    decoded = [codec.decode(p) for p in payloads]
+    b = jnp.asarray(betas, jnp.float32)
+    return jax.tree.map(
+        lambda *ls: jnp.einsum(
+            "mp,m->p", jnp.stack([l.reshape(-1) for l in ls]), b
+        ).reshape(ls[0].shape), *decoded)
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture
+def ref_mode():
+    kops.set_mode("off")
+    yield
+    kops.set_mode("off")
+
+
+# ---------------------------------------------------------------------------
+# payload_family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", LADDER)
+def test_every_ladder_rung_has_a_fused_family(spec):
+    codec, (p,) = _payloads(spec, 1)
+    fam = payload_family(p)
+    assert fam is not None
+    assert fam in FUSED_FAMILIES or fam.startswith("topk:")
+
+
+def test_foreign_payload_layout_has_no_family():
+    codec, (p,) = _payloads("fp32", 1)
+    el0 = p.leaves[0]
+    weird = dataclasses.replace(el0, data={**el0.data, "extra": 0})
+    p2 = Payload(codec=p.codec, leaves=[weird] + p.leaves[1:],
+                 treedef=p.treedef, nbytes=p.nbytes)
+    assert payload_family(p2) is None
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: batched == per-payload decode + β-weighted sum
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", LADDER)
+@pytest.mark.parametrize("k", [1, 5])
+def test_batched_ref_kernel_bitexact(ref_mode, spec, k):
+    """The batched ``ref`` kernels are bit-identical to the unfused oracle
+    on every rung: einsum over stacked per-payload decodes (quant/float
+    families) or the sequential scatter fold (topk)."""
+    from repro.kernels import ref
+    codec, payloads = _payloads(spec, k)
+    betas = jnp.asarray(_betas(k))
+    template = _tree()
+    leaves = jax.tree.leaves(template)
+    want = (_fold_reference(codec, payloads, betas, template)
+            if spec.startswith("topk")
+            else _stack_reference(codec, payloads, betas, template))
+    for li, (leaf, w) in enumerate(zip(leaves, jax.tree.leaves(want))):
+        els = [p.leaves[li] for p in payloads]
+        keys = set(els[0].data)
+        if keys == {"q", "scale"}:
+            got = ref.dequant_fedagg(
+                jnp.stack([e.data["q"].reshape(-1) for e in els]),
+                jnp.stack([jnp.asarray(e.data["scale"], jnp.float32)
+                           for e in els]), betas)
+        elif keys == {"v"}:
+            got = ref.float_fedagg(
+                jnp.stack([e.data["v"].reshape(-1) for e in els]), betas)
+        else:
+            got = ref.topk_fedagg(
+                jnp.stack([e.data["idx"] for e in els]),
+                jnp.stack([e.data["val"] for e in els]), betas,
+                int(np.prod(leaf.shape)))
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(w).reshape(-1))
+
+
+@pytest.mark.parametrize("spec", LADDER)
+@pytest.mark.parametrize("k", [1, 5])
+def test_stream_accumulator_matches_decode_reference(ref_mode, spec, k):
+    """The accumulator (jitted flush) against the eager unfused oracle —
+    tight tolerance; XLA fusion may reassociate the reduction."""
+    codec, payloads = _payloads(spec, k)
+    betas = _betas(k)
+    acc = StreamAccumulator(_tree(), batch_k=64)
+    for p, b in zip(payloads, betas):
+        acc.add(p, b)
+    got = acc.total()
+    want = _fold_reference(codec, payloads, betas, _tree())
+    assert _maxdiff(got, want) < 1e-6
+    assert acc.n_fused == k and acc.n_fallback == 0
+
+
+@pytest.mark.parametrize("spec", ["int8", "qsgd:4", "fp16"])
+def test_stream_interpret_matches_reference(spec):
+    """Pallas kernels (interpret mode on CPU) against the same oracle."""
+    kops.set_mode("interpret")
+    try:
+        codec, payloads = _payloads(spec, 6)
+        betas = _betas(6)
+        acc = StreamAccumulator(_tree(), batch_k=64)
+        for p, b in zip(payloads, betas):
+            acc.add(p, b)
+        got = acc.total()
+    finally:
+        kops.set_mode("off")
+    want = _fold_reference(codec, payloads, betas, _tree())
+    assert _maxdiff(got, want) < 1e-5
+
+
+def test_mixed_rung_cohort(ref_mode):
+    """One payload per rung, all feeding the same accumulator."""
+    template = _tree()
+    payloads = [(make_codec(s), make_codec(s).encode(_tree(7 * i + 1)))
+                for i, s in enumerate(LADDER)]
+    betas = _betas(len(payloads))
+    acc = StreamAccumulator(template, batch_k=64)
+    for (codec, p), b in zip(payloads, betas):
+        acc.add(p, b)
+    got = acc.total()
+    want = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), template)
+    for (codec, p), b in zip(payloads, betas):
+        d = codec.decode(p)
+        want = jax.tree.map(lambda o, x, b=b: o + jnp.float32(b) * x, want, d)
+    assert _maxdiff(got, want) < 1e-5
+    assert acc.n_fused == len(payloads)
+
+
+def test_empty_cohort_is_exact_zeros(ref_mode):
+    acc = StreamAccumulator(_tree())
+    out = acc.total()
+    for l in jax.tree.leaves(out):
+        np.testing.assert_array_equal(np.asarray(l), 0.0)
+    assert acc.stats["added"] == 0
+
+
+def test_fallback_payload_still_accumulates(ref_mode):
+    """A payload with no batched kernel decodes alone into the accumulator
+    and is counted in the fallback attribution."""
+    codec, payloads = _payloads("fp32", 3)
+    betas = _betas(3)
+    # disguise one payload's layout so the family probe fails; the fp32
+    # decode ignores the extra key, so the value path is unchanged
+    el0 = payloads[1].leaves[0]
+    payloads[1] = Payload(
+        codec=payloads[1].codec,
+        leaves=[dataclasses.replace(el0, data={**el0.data, "x": 0})]
+               + payloads[1].leaves[1:],
+        treedef=payloads[1].treedef, nbytes=payloads[1].nbytes)
+    acc = StreamAccumulator(_tree(), batch_k=64)
+    for p, b in zip(payloads, betas):
+        acc.add(p, b)
+    got = acc.total()
+    want = _fold_reference(codec, payloads, betas, _tree())
+    assert _maxdiff(got, want) < 1e-6
+    assert acc.n_fallback == 1 and acc.n_fused == 2
+
+
+# ---------------------------------------------------------------------------
+# O(1) peak decoded memory
+# ---------------------------------------------------------------------------
+def test_peak_decoded_bytes_independent_of_k(ref_mode):
+    template = _tree()
+    acc_bytes = sum(4 * int(np.prod(l.shape))
+                    for l in jax.tree.leaves(template))
+
+    def peak(k):
+        codec, payloads = _payloads("int8", k)
+        acc = StreamAccumulator(template, batch_k=8)
+        for p, b in zip(payloads, _betas(k)):
+            acc.add(p, b)
+        acc.total()
+        return acc.peak_decoded_bytes, acc.n_flushes
+
+    p8, f8 = peak(8)
+    p64, f64 = peak(64)
+    assert p8 == p64                       # O(1) in K
+    assert p64 <= 2 * acc_bytes            # accumulator + one partial leaf
+    assert f64 >= 8                        # batches actually flushed
+
+
+# ---------------------------------------------------------------------------
+# weighted sums
+# ---------------------------------------------------------------------------
+def test_weighted_tree_sum(ref_mode):
+    trees = [_tree(i) for i in range(3)]
+    w = [0.2, 0.5, 0.3]
+    got = weighted_tree_sum(trees, w)
+    want = jax.tree.map(
+        lambda a, b, c: 0.2 * a + 0.5 * b + 0.3 * c, *trees)
+    assert _maxdiff(got, want) < 1e-6
+
+
+def test_weighted_model_sum_groups_origins(ref_mode):
+    """Σ β(origin + decode) with two distinct shared origin pytrees must
+    match the materialized per-model sum."""
+    template = _tree()
+    origin_a, origin_b = _tree(100), _tree(200)
+    codec = make_codec("int8")
+    packed = []
+    for m in range(6):
+        origin = origin_a if m < 4 else origin_b
+        p = codec.encode(_tree(m + 1))
+        packed.append(PackedUpdate(client=m, payload=p, origin_global=origin,
+                                   codec="int8", nbytes=p.nbytes,
+                                   distortion=0.0))
+    betas = _betas(6)
+    extra = _tree(300)
+    got = weighted_model_sum(list(zip(betas, packed)),
+                             dense_terms=[(0.25, extra)], template=template)
+    want = jax.tree.map(lambda l: 0.25 * l.astype(jnp.float32), extra)
+    for b, pu in zip(betas, packed):
+        model = jax.tree.map(
+            lambda g, d: g.astype(jnp.float32) + d,
+            pu.origin_global, codec.decode(pu.payload))
+        want = jax.tree.map(lambda o, x, b=b: o + jnp.float32(b) * x,
+                            want, model)
+    assert _maxdiff(got, want) < 1e-5
+
+
+def test_weighted_model_sum_empty_cohort(ref_mode):
+    template = _tree()
+    anchor = _tree(5)
+    got = weighted_model_sum([], dense_terms=[(1.0, anchor)],
+                             template=template)
+    assert _maxdiff(got, anchor) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# CommState encode/decode split
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", ["int8", "qsgd:4", "fp16", "sign1"])
+def test_encode_decode_split_matches_roundtrip(spec):
+    """encode_upload + decode_upload reproduces roundtrip bit-exactly,
+    including the error-feedback residual evolution across two uploads."""
+    template = _tree()
+    comm_a = CommState(make_codec(spec), template, n_clients=2)
+    comm_b = CommState(make_codec(spec), template, n_clients=2)
+    g = _tree(1)
+    for step in range(2):
+        m = _tree(50 + step)
+        recon_a, _p, dist_a = comm_a.roundtrip(0, m, g)
+        payload, dist_b = comm_b.encode_upload(0, m, g)
+        recon_b = comm_b.decode_upload(payload, g)
+        assert dist_a == dist_b
+        assert _maxdiff(recon_a, recon_b) == 0.0
+    assert comm_a.total_uplink_bytes == comm_b.total_uplink_bytes
+
+
+# ---------------------------------------------------------------------------
+# streaming vs materializing round loops (world × server-mode sweep)
+# ---------------------------------------------------------------------------
+def _paired_run(server_mode, strategy_fn, codec, rounds=2):
+    def run(streaming):
+        cfg = FFTConfig(n_clients=8, k_selected=8, local_steps=2,
+                        batch_size=16, lr=0.05, failure_mode="mixed",
+                        seed=3, eval_every=100, model_bytes=0.2e6,
+                        tx_delay_s=0.8, server_mode=server_mode,
+                        codec=codec, streaming_agg=streaming,
+                        telemetry=True)
+        r = make_toy_runner(cfg, n_samples=600, pretrain_steps=5)
+        r.run(strategy_fn(), rounds=rounds)
+        return r
+    return run("auto"), run("off")
+
+
+@pytest.mark.parametrize("server_mode,strategy_fn,codec", [
+    ("sync", FedAvg, "int8"),
+    ("async", FedAsync, "qsgd:4"),
+    ("buffered", FedBuff, "sign1"),
+])
+def test_streaming_matches_materializing_global_params(server_mode,
+                                                       strategy_fn, codec):
+    r_stream, r_mat = _paired_run(server_mode, strategy_fn, codec)
+    assert _maxdiff(r_stream.global_params, r_mat.global_params) < 1e-3
+
+    # uplink_decode attribution: the streaming run fused its payloads, the
+    # materializing control arm reported its decoded-model count
+    def gauges(r):
+        return [rec["gauges"] for rec in r.report.rounds]
+    assert any(g.get("uplink_fused_payloads", 0) > 0 for g in gauges(r_stream))
+    assert all(g.get("uplink_fallback_payloads", 0) == 0
+               for g in gauges(r_stream) if "uplink_fallback_payloads" in g)
+    mat = [g for g in gauges(r_mat) if "uplink_fallback_payloads" in g]
+    assert mat and any(g["uplink_fallback_payloads"] > 0 for g in mat)
+    # O(1) vs O(K): the streaming peak never exceeds the materializing one
+    peaks_s = [g["uplink_peak_decoded_bytes"] for g in gauges(r_stream)
+               if "uplink_peak_decoded_bytes" in g]
+    peaks_m = [g["uplink_peak_decoded_bytes"] for g in mat
+               if g["uplink_fallback_payloads"] > 1]
+    if peaks_s and peaks_m:
+        assert max(peaks_s) <= max(peaks_m)
+
+
+def test_materializing_strategy_ignores_streaming_flag():
+    """A strategy without streaming support (Scaffold) runs the documented
+    materializing fallback even under streaming_agg='auto'."""
+    cfg = FFTConfig(n_clients=8, k_selected=8, local_steps=2, batch_size=16,
+                    lr=0.05, failure_mode="none", seed=3, eval_every=100,
+                    model_bytes=0.2e6, streaming_agg="auto", telemetry=True)
+    r = make_toy_runner(cfg, n_samples=600, pretrain_steps=5)
+    hist = r.run(Scaffold(), rounds=2)
+    assert 0.0 <= hist[-1] <= 1.0
+    gauges = [rec["gauges"] for rec in r.report.rounds]
+    assert any(g.get("uplink_fallback_payloads", 0) > 0 for g in gauges)
+
+
+def test_streaming_agg_knob_validated():
+    with pytest.raises(ValueError, match="streaming_agg"):
+        cfg = FFTConfig(n_clients=4, k_selected=4, streaming_agg="sideways")
+        make_toy_runner(cfg, n_samples=200, pretrain_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# paged broadcast cache
+# ---------------------------------------------------------------------------
+def test_paged_cache_encodes_once_per_round_and_rung():
+    codec = make_codec("int8")
+    tree = _tree()
+    calls = []
+
+    def enc():
+        calls.append(1)
+        return codec.encode(tree)
+
+    cache = PagedBroadcastCache(page_bytes=64, keep_rounds=2)
+    for _client in range(5):
+        pages = cache.serve(1, "int8", enc)
+    assert len(calls) == 1
+    assert cache.hits == 4 and cache.misses == 1
+    # pages reassemble to the exact wire bytes of the payload
+    payload = cache.payload_for(1, "int8")
+    blob = b"".join(np.asarray(v).tobytes()
+                    for el in payload.leaves for v in el.data.values())
+    assert b"".join(p.tobytes() for p in pages) == blob
+    assert all(p.nbytes <= 64 for p in pages)
+
+
+def test_paged_cache_evicts_old_rounds():
+    codec = make_codec("sign1")
+    tree = _tree()
+    cache = PagedBroadcastCache(page_bytes=256, keep_rounds=2)
+    for rnd in range(1, 5):
+        cache.serve(rnd, "sign1", lambda: codec.encode(tree))
+    assert cache.evictions == 2
+    assert cache.payload_for(1, "sign1") is None
+    assert cache.payload_for(4, "sign1") is not None
+    assert cache.peak_pages >= cache.n_pages
+
+
+def test_paged_cache_rejects_bad_config():
+    with pytest.raises(ValueError):
+        PagedBroadcastCache(page_bytes=0)
+    with pytest.raises(ValueError):
+        PagedBroadcastCache(keep_rounds=0)
